@@ -1,0 +1,12 @@
+"""One benchmark per paper table/figure + the roofline report.
+
+  fig6a_star_comm   Fig 6(a): star-network total communication volume
+  fig6b_star_time   Fig 6(b): star-network task finishing time (PCCS)
+  fig7_mesh_comm    Fig 7: mesh overall communication volume (5/7/9)
+  fig8_mesh_time    Fig 8: mesh task finishing time
+  fig9_lp_iters     Fig 9: simplex iterations, PMFT-LBP vs heuristic
+  roofline_report   §Roofline: three-term table from dry-run artifacts
+
+``python -m benchmarks.run`` executes all of them and prints
+``name,value,derived`` CSV rows plus the paper-claim comparisons.
+"""

@@ -1,0 +1,36 @@
+"""§Roofline report: three-term table for every (arch x shape) cell from
+the dry-run artifacts (both meshes)."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.roofline import fmt_table, load_rows
+
+
+def report(out) -> List[tuple]:
+    rows_csv = []
+    for mesh in ("16x16", "2x16x16"):
+        rows = load_rows(mesh)
+        if not rows:
+            out(f"\n§Roofline [{mesh}]: no artifacts — run "
+                f"`python -m repro.launch.dryrun --all"
+                f"{' --multi-pod' if mesh != '16x16' else ''}` first")
+            continue
+        out(f"\n§Roofline — {mesh} mesh ({len(rows)} cells)")
+        out(fmt_table(rows))
+        worst = min(rows, key=lambda r: r["roofline_fraction"])
+        best = max(rows, key=lambda r: r["roofline_fraction"])
+        coll = max(rows, key=lambda r: r["collective_s"] /
+                   max(r["compute_s"], 1e-12))
+        rows_csv.append((f"roofline.{mesh}.cells", len(rows), "dry-run cells"))
+        rows_csv.append((f"roofline.{mesh}.worst_fraction",
+                         worst["roofline_fraction"],
+                         f"{worst['arch']}/{worst['shape']}"))
+        rows_csv.append((f"roofline.{mesh}.best_fraction",
+                         best["roofline_fraction"],
+                         f"{best['arch']}/{best['shape']}"))
+        rows_csv.append((f"roofline.{mesh}.most_collective_bound",
+                         coll["collective_s"] / max(coll["compute_s"], 1e-12),
+                         f"{coll['arch']}/{coll['shape']}"))
+    return rows_csv

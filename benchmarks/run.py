@@ -1,0 +1,66 @@
+"""Benchmark driver: one section per paper figure + the roofline report.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints human-readable sections followed by ``name,value,note`` CSV rows
+(the machine-readable summary used by EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    rows = []
+
+    def out(msg=""):
+        print(msg, flush=True)
+
+    t0 = time.time()
+    from . import star
+    rows += [("bench", "fig6", "star 16-child")] and star.report(out)
+    out(f"[star benchmarks {time.time()-t0:.1f}s]")
+
+    t0 = time.time()
+    from . import mesh
+    rows += mesh.report(out)
+    out(f"[mesh benchmarks {time.time()-t0:.1f}s]")
+
+    # scheduler-plane wall time (the runtime re-solves these on rebalance)
+    import numpy as _np
+    from repro.core.network import random_mesh, random_star
+    from repro.core.star import solve as star_solve
+    from repro.core.integer_adjust import solve_integer
+    from repro.core.heuristic import mft_lbp_heuristic
+    net = random_star(16, seed=0)
+    m5 = random_mesh(5, 5, seed=0)
+    for name, fn, reps in [
+        ("star_pccs_solve", lambda: star_solve(net, 1000, "PCCS"), 200),
+        ("star_integer_adjust", lambda: solve_integer(net, 1000, "PCCS"), 50),
+        ("mesh_heuristic_5x5", lambda: mft_lbp_heuristic(m5, 1000), 5),
+    ]:
+        t = time.time()
+        for _ in range(reps):
+            fn()
+        us = (time.time() - t) / reps * 1e6
+        rows.append((f"sched.{name}_us", us, "solver wall time per call"))
+
+    if not args.skip_roofline:
+        from . import roofline_report
+        rows += roofline_report.report(out)
+
+    out("\n=== name,value,note CSV ===")
+    out("name,value,note")
+    for name, val, note in rows:
+        out(f"{name},{val:.4f},{note}")
+
+
+if __name__ == "__main__":
+    main()

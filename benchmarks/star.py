@@ -1,0 +1,83 @@
+"""Fig 6(a)/(b): 16-child star network — communication volume + finish time.
+
+Paper setup (§6.1): 16 children, w*Tcp ~ U(0.0005, 0.0008),
+z*Tcm ~ U(0.0002, 0.0005), PCCS mode, N = 100..1000, averages over
+independent networks.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.integer_adjust import solve_integer
+from repro.core.network import random_star
+from repro.core.rect_partition import (even_col, lbp_volume, nrrp, peri_sum,
+                                       rect_lower_bound_volume, recursive,
+                                       speed_proportional_areas,
+                                       star_finish_time)
+
+NS = [100, 250, 500, 750, 1000]
+TRIALS = 10
+P = 16
+
+
+def run() -> Dict[str, List[float]]:
+    vol: Dict[str, List[float]] = {k: [] for k in
+                                   ["LBP", "rect-LB", "NRRP", "Recursive",
+                                    "PERI-SUM", "Even-Col"]}
+    tf: Dict[str, List[float]] = {k: [] for k in
+                                  ["LBP", "NRRP", "Recursive", "PERI-SUM",
+                                   "Even-Col"]}
+    for N in NS:
+        acc_v = {k: 0.0 for k in vol}
+        acc_t = {k: 0.0 for k in tf}
+        for trial in range(TRIALS):
+            net = random_star(P, seed=1000 * trial + N)
+            f = speed_proportional_areas(net)
+            parts = {"NRRP": nrrp(f), "Recursive": recursive(f),
+                     "PERI-SUM": peri_sum(f), "Even-Col": even_col(P)}
+            acc_v["LBP"] += lbp_volume(N)
+            acc_v["rect-LB"] += rect_lower_bound_volume(f, N)
+            for k, part in parts.items():
+                acc_v[k] += part.comm_volume(N)
+                acc_t[k] += star_finish_time(part, net, N)
+            _, t = solve_integer(net, N, "PCCS")
+            acc_t["LBP"] += t
+        for k in vol:
+            vol[k].append(acc_v[k] / TRIALS)
+        for k in tf:
+            tf[k].append(acc_t[k] / TRIALS)
+    return {"N": NS, "volume": vol, "time": tf}
+
+
+def report(out) -> List[str]:
+    res = run()
+    rows = []
+    i_last = len(NS) - 1
+    v = res["volume"]
+    t = res["time"]
+    out(f"\nFig 6(a) — star comm volume (entries, avg of {TRIALS} nets), N={NS}")
+    for k in v:
+        out(f"  {k:10s} " + " ".join(f"{x/1e6:9.3f}M" for x in v[k]))
+    red_lb = 1 - v["LBP"][i_last] / v["rect-LB"][i_last]
+    rows.append(("fig6a.lbp_reduction_vs_rect_lb_pct", red_lb * 100,
+                 "paper claims 75%"))
+    for name in ("NRRP", "Recursive", "PERI-SUM", "Even-Col"):
+        red = 1 - v["LBP"][i_last] / v[name][i_last]
+        rows.append((f"fig6a.lbp_reduction_vs_{name.lower()}_pct", red * 100,
+                     "paper: 78/79.7/85.1/- %"))
+    out(f"\nFig 6(b) — star finish time (s), PCCS, N={NS}")
+    for k in t:
+        out(f"  {k:10s} " + " ".join(f"{x:9.2f}" for x in t[k]))
+    balanced = np.mean([t[k][i_last] for k in
+                        ("LBP", "NRRP", "Recursive", "PERI-SUM")])
+    rows.append(("fig6b.balanced_vs_evencol_pct",
+                 (1 - balanced / t["Even-Col"][i_last]) * 100,
+                 "paper claims ~40% smaller"))
+    rows.append(("fig6b.lbp_vs_best_rect_pct",
+                 (t["LBP"][i_last] / min(t[k][i_last] for k in
+                  ("NRRP", "Recursive", "PERI-SUM")) - 1) * 100,
+                 "paper: similar curves"))
+    return rows

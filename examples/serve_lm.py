@@ -1,0 +1,58 @@
+"""Batched serving example: prefill a batch of prompts, decode greedily.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch recurrentgemma_9b]
+
+Exercises the KV-cache / RG-LRU-state / mLSTM-state serving paths and
+verifies the decoded continuation against the full-forward logits.
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_reduced
+from repro.models import transformer as T
+from repro.serve.step import greedy_generate, make_decode_step
+from repro.sharding.rules import Rules
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="llama3_2_3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    rules = Rules.null()
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size)
+
+    t0 = time.time()
+    out = greedy_generate(params, cfg, rules, prompt, max_new=args.max_new)
+    dt = time.time() - t0
+    print(f"{cfg.name}: batch={args.batch} prompt={args.prompt_len} "
+          f"new={args.max_new} -> {args.batch*args.max_new/dt:.1f} tok/s")
+    for b in range(min(2, args.batch)):
+        print(f"  row {b}: {list(map(int, out[b]))}")
+
+    # consistency: greedy first token == argmax of full-forward logits
+    full = jnp.concatenate([prompt, out[:, :0]], axis=1)
+    hid, _ = T.forward_hidden(params, cfg, rules, full, remat=False)
+    from repro.models.layers import rms_norm
+    hN = rms_norm(hid, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", hN[:, -1].astype(jnp.float32),
+                        params["embed"].astype(jnp.float32))
+    ok = bool(jnp.all(jnp.argmax(logits, -1) == out[:, 0]))
+    print(f"decode == full-forward argmax: {ok}")
+    assert ok
+
+
+if __name__ == "__main__":
+    main()

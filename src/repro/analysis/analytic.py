@@ -1,0 +1,111 @@
+"""Analytic FLOP/byte models per (arch x shape) cell — the napkin math.
+
+Two uses:
+  * MODEL_FLOPS for §Roofline (6*N*D train / 2*N*D serve, N = active
+    params), plus an attention-aware "expected" FLOP count that the
+    HLO-parsed number is checked against (the parser cannot see dynamic
+    trip counts inside the causal flash loops, so for attention-heavy
+    cells the analytic number is the trustworthy one);
+  * ideal HBM bytes (weights once + activations once) for the memory term
+    sanity check.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from ..configs import get_config
+from ..configs.shapes import SHAPES
+from ..models.config import ModelConfig
+
+
+def attention_flops_fwd(cfg: ModelConfig, S: int, B: int) -> float:
+    """Score + PV flops for one full forward over B x S tokens (causal ->
+    half the S^2 rectangle; windowed -> S*window band)."""
+    if cfg.family == "ssm":
+        # chunkwise mLSTM: per chunk c: scores c^2*hd + out c^2*hd + state 2*c*hd^2
+        c = cfg.mlstm_chunk
+        H, hd = cfg.n_heads, cfg.hd
+        n_m = cfg.n_layers * cfg.mlstm_per_group // (cfg.mlstm_per_group + 1)
+        per_tok = H * (2 * c * hd + 4 * hd * hd)
+        return 2.0 * B * S * per_tok * n_m
+    Hp, hd = cfg.h_padded, cfg.hd
+    if cfg.block_pattern:
+        n_attn = (cfg.n_layers // len(cfg.block_pattern)) * sum(
+            1 for b in cfg.block_pattern if b == "A")
+    else:
+        n_attn = cfg.n_layers
+    eff = min(S, cfg.window) if cfg.window else S
+    # causal: average context length ~ eff/2 (full window band for local)
+    ctx = eff if cfg.window else eff / 2.0
+    return 4.0 * B * S * ctx * Hp * hd * n_attn
+
+
+def cell_flops(arch: str, shape: str) -> Dict[str, float]:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    B, S = cell.global_batch, cell.seq_len
+    N = cfg.n_active_params()
+
+    if cell.kind == "train":
+        D = B * S
+        model = 6.0 * N * D
+        # remat adds one forward recompute: 8*N*D; attention counted
+        # separately (fwd + recompute + bwd~2x = 4x fwd)
+        expected = 8.0 * N * D + 4.0 * attention_flops_fwd(cfg, S, B)
+    elif cell.kind == "prefill":
+        D = B * S
+        model = 2.0 * N * D
+        expected = 2.0 * N * D + attention_flops_fwd(cfg, S, B)
+    else:  # decode: one token per row, context S
+        D = B * 1
+        model = 2.0 * N * D
+        eff = min(S, cfg.window) if cfg.window else S
+        if cfg.family == "ssm":
+            H, hd = cfg.n_heads, cfg.hd
+            n_m = cfg.n_layers * cfg.mlstm_per_group // (cfg.mlstm_per_group + 1)
+            attn = 2.0 * B * H * (2 * hd * hd) * n_m
+        elif cfg.block_pattern:
+            n_attn = (cfg.n_layers // len(cfg.block_pattern)) * sum(
+                1 for b in cfg.block_pattern if b == "A")
+            attn = 4.0 * B * eff * cfg.h_padded * cfg.hd * n_attn
+        else:
+            attn = 4.0 * B * eff * cfg.h_padded * cfg.hd * cfg.n_layers
+        expected = 2.0 * N * D + attn
+    return {"model_flops": model, "expected_flops": expected,
+            "tokens": float(D)}
+
+
+def cell_ideal_bytes(arch: str, shape: str) -> float:
+    """Ideal HBM traffic per device: weights read once per (micro)batch
+    pass + KV cache read once (serve).  bf16."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    B, S = cell.global_batch, cell.seq_len
+    N = cfg.n_active_params()
+    n_dev = 256.0
+    if cell.kind == "train":
+        from ..train.step import default_grad_accum
+        ga = default_grad_accum(cfg)
+        # params + grads + opt read/write, sharded; weights re-gathered per
+        # microbatch and for fwd/bwd/remat (x3)
+        w = cfg.n_params() * 2.0 / n_dev * ga * 3.0
+        opt = cfg.n_params() * (4 + 4 + 4 + 4) * 2.0 / n_dev
+        act = B * S * cfg.d_model * 2.0 * cfg.n_layers * 4 / n_dev
+        return w + opt + act
+    if cell.kind == "prefill":
+        w = cfg.n_params() * 2.0 / n_dev
+        act = B * S * cfg.d_model * 2.0 * cfg.n_layers * 2 / n_dev
+        return w + act
+    # decode: weights once + cache once
+    w = N * 2.0 / n_dev
+    eff = min(S, cfg.window) if cfg.window else S
+    if cfg.family in ("hybrid",):
+        n_attn = (cfg.n_layers // len(cfg.block_pattern)) * sum(
+            1 for b in cfg.block_pattern if b == "A")
+    elif cfg.family == "ssm":
+        n_attn = 0
+    else:
+        n_attn = cfg.n_layers
+    cache = 2.0 * B * eff * cfg.kv_param * cfg.hd * 2.0 * n_attn / n_dev
+    return w + cache

@@ -1,0 +1,225 @@
+"""Parse collective ops (+ loop trip counts) out of compiled HLO text.
+
+``cost_analysis()`` has no collective view, so §Roofline's collective term
+comes from here: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute in the post-SPMD module, with
+
+  * result-shape bytes (per-partition, since the module is SPMD),
+  * the collective group size (replica_groups, both explicit {{...}} and
+    iota [G,N]<= forms),
+  * a WHILE-LOOP MULTIPLIER: scan-over-layers puts one collective in the
+    loop body but executes it n_layers (x grad_accum) times — each while's
+    trip count is recovered from the loop-condition constant and pushed
+    down the call graph.
+
+Per-op link traffic uses the ring model (bytes actually crossing ICI per
+device):  AG: (g-1)/g * out;  AR: 2 (g-1)/g * out;  RS: (g-1) * out
+(out is the scattered shape);  A2A: (g-1)/g * out;  permute: out.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one shape like 'f32[8,128]{1,0}' (scalar: 'f32[]')."""
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    b = _DTYPE_BYTES.get(dt, 4)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * b
+
+
+def _result_bytes(result: str, op: str) -> int:
+    """Result bytes; for tuple results (async -start ops) take the last
+    element (first elements alias the operands)."""
+    result = result.strip()
+    if result.startswith("("):
+        parts = _split_tuple(result)
+        if not parts:
+            return 0
+        if op.endswith("-start"):
+            return _shape_bytes(parts[-1])
+        return sum(_shape_bytes(p) for p in parts)
+    return _shape_bytes(result)
+
+
+def _split_tuple(s: str) -> List[str]:
+    s = s.strip()
+    assert s.startswith("(")
+    depth = 0
+    parts, cur = [], []
+    for ch in s[1:]:
+        if ch == "(":
+            depth += 1
+        if ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return [p.strip() for p in parts if p.strip()]
+
+
+_GROUPS_EXPLICIT = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPLICIT.search(line)
+    if m:
+        first = m.group(1)
+        return len([x for x in first.split(",") if x.strip() != ""])
+    return default
+
+
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)|body=%?([\w\.\-]+).*?condition=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:to_apply|body|condition|calls)=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _parse_computations(hlo: str) -> Dict[str, List[str]]:
+    """Split HLO text into computations.
+
+    A computation header is any line ending with '{' that contains '->'
+    (e.g. '%body.1 (arg: (s32[], ...)) -> (s32[], ...) {' or
+    'ENTRY %main.42 (...) -> ... {'); the body runs until a lone '}'.
+    """
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{") and "->" in stripped:
+                name = stripped
+                if name.startswith("ENTRY"):
+                    name = name[len("ENTRY"):].strip()
+                name = name.split("(")[0].strip().lstrip("%").strip()
+                if name:
+                    cur = name
+                    comps[cur] = []
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        comps[cur].append(stripped)
+    return comps
+
+
+def collective_summary(hlo: str, n_devices_default: int = 1) -> Dict:
+    comps = _parse_computations(hlo)
+
+    # trip count per while-body: max s32 constant in its condition computation
+    body_trips: Dict[str, int] = {}
+    calls: Dict[str, List[str]] = defaultdict(list)
+    for name, lines in comps.items():
+        for ln in lines:
+            if " while(" in ln and "condition=" in ln and "body=" in ln:
+                m = _WHILE_RE.search(ln)
+                if m:
+                    g = m.groups()
+                    cond, body = (g[0], g[1]) if g[0] else (g[3], g[2])
+                    trip = 1
+                    for cl in comps.get(cond, []):
+                        for c in _CONST_RE.findall(cl):
+                            trip = max(trip, int(c))
+                    body_trips[body] = trip
+                    calls[name].append(body)
+                    calls[name].append(cond)
+            else:
+                for target in _CALL_RE.findall(ln):
+                    if target in comps:
+                        calls[name].append(target)
+
+    # propagate multipliers from the entry
+    entry = None
+    for cand in comps:
+        if cand.endswith(".0") or "main" in cand or entry is None:
+            pass
+    # entry computation = the one never called
+    called = {t for ts in calls.values() for t in ts}
+    roots = [c for c in comps if c not in called]
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, m: float):
+        if m <= mult.get(name, 0):
+            return
+        mult[name] = m
+        for t in calls.get(name, []):
+            visit(t, m * body_trips.get(t, 1))
+
+    for r in roots:
+        visit(r, 1.0)
+
+    per_op: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "bytes": 0.0, "link_bytes": 0.0})
+    op_re = re.compile(
+        r"=\s*(\([^=]*?\)|\S+)\s+(" + "|".join(_COLL_OPS) + r")(-start)?\(")
+
+    for name, lines in comps.items():
+        m_comp = mult.get(name, 1.0)
+        for ln in lines:
+            mm = op_re.search(ln)
+            if not mm:
+                continue
+            result, op, start = mm.group(1), mm.group(2), mm.group(3)
+            full_op = op + (start or "")
+            if "-done(" in ln:
+                continue
+            nbytes = _result_bytes(result, full_op)
+            g = _group_size(ln, n_devices_default)
+            if g <= 1:
+                link = 0.0
+            elif op == "all-gather":
+                link = nbytes * (g - 1) / g
+            elif op == "all-reduce":
+                link = nbytes * 2 * (g - 1) / g
+            elif op == "reduce-scatter":
+                link = nbytes * (g - 1)
+            elif op == "all-to-all":
+                link = nbytes * (g - 1) / g
+            else:  # collective-permute
+                link = float(nbytes)
+            d = per_op[op]
+            d["count"] += m_comp
+            d["bytes"] += nbytes * m_comp
+            d["link_bytes"] += link * m_comp
+
+    total = sum(d["bytes"] for d in per_op.values())
+    total_link = sum(d["link_bytes"] for d in per_op.values())
+    return {
+        "per_op": {k: {kk: round(vv, 1) for kk, vv in v.items()}
+                   for k, v in sorted(per_op.items())},
+        "total_bytes": round(total, 1),
+        "total_link_bytes": round(total_link, 1),
+        "n_while_loops": len(body_trips),
+        "trip_counts": sorted(body_trips.values(), reverse=True)[:8],
+    }

@@ -1,0 +1,350 @@
+"""Loop-aware instruction-level cost model parsed from compiled HLO text.
+
+Why: ``compiled.cost_analysis()`` reports a single aggregate WITHOUT
+multiplying while-loop trip counts — scan-over-layers (and grad-accum
+scans) under-count FLOPs/bytes by the layer count.  This parser rebuilds
+the three roofline inputs per device from the scheduled SPMD module:
+
+  flops       2 * prod(result_dims) * prod(contracting_dims) per dot,
+              times the enclosing loops' trip counts
+  hbm_bytes   sum of (operands + result) bytes over every non-free
+              instruction at fusion granularity (fusion bodies excluded —
+              their traffic happens in registers/VMEM), times trip counts
+  collectives per-op counts/bytes/ring-link-bytes, times trip counts
+
+Computation multipliers: entry = 1; while bodies/conds multiply by the trip
+count recovered from the loop-condition constant; fusion bodies (calls=)
+and reduce subcomputations (to_apply=) are skipped — their cost is
+attributed at the call site.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "iota", "partition-id", "replica-id",
+             "opt-barrier"}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\([^=]*?\)|\S+)\s+([\w\-]+)\(")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)|body=%?([\w\.\-]+).*?condition=%?([\w\.\-]+)")
+_GROUPS_EXPLICIT = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_dims(shape_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return None
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",")] if dims else []
+
+
+def _shape_bytes(shape_str: str) -> int:
+    shape_str = shape_str.strip()
+    if shape_str.startswith("("):
+        return sum(_shape_bytes(p) for p in _split_tuple(shape_str))
+    sd = _shape_dims(shape_str)
+    if sd is None:
+        return 0
+    dt, dims = sd
+    n = 1
+    for d in dims:
+        n *= d
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _split_tuple(s: str) -> List[str]:
+    s = s.strip()
+    depth = 0
+    parts, cur = [], []
+    for ch in s[1:]:
+        if ch == "(":
+            depth += 1
+        if ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return [p.strip() for p in parts if p.strip()]
+
+
+def _first_paren_group(line: str) -> str:
+    """Contents of the first (...) after the op name (operand list)."""
+    start = line.find("(")
+    if start < 0:
+        return ""
+    depth = 0
+    for i in range(start, len(line)):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return line[start + 1:i]
+    return line[start + 1:]
+
+
+def _parse_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{") and "->" in stripped:
+                name = stripped
+                if name.startswith("ENTRY"):
+                    name = name[len("ENTRY"):].strip()
+                name = name.split("(")[0].strip().lstrip("%").strip()
+                if name:
+                    cur = name
+                    comps[cur] = []
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        comps[cur].append(stripped)
+    return comps
+
+
+def analyze_hlo(hlo: str) -> Dict:
+    comps = _parse_computations(hlo)
+
+    # --- call graph + loop trip counts ---
+    body_trips: Dict[str, int] = {}
+    loop_calls: Dict[str, List[str]] = defaultdict(list)   # body=/condition=
+    fusion_targets = set()                                  # calls=/to_apply=
+    for name, lines in comps.items():
+        for ln in lines:
+            if " while(" in ln and "condition=" in ln and "body=" in ln:
+                m = _WHILE_RE.search(ln)
+                if m:
+                    g = m.groups()
+                    cond, body = (g[0], g[1]) if g[0] else (g[3], g[2])
+                    trip = 1
+                    for cl in comps.get(cond, []):
+                        for c in _CONST_RE.findall(cl):
+                            trip = max(trip, int(c))
+                    body_trips[body] = trip
+                    loop_calls[name] += [body, cond]
+            for t in re.findall(r"(?:calls|to_apply)=%?([\w\.\-]+)", ln):
+                fusion_targets.add(t)
+            for t in re.findall(r"branch_computations=\{([^}]*)\}", ln):
+                for b in t.split(","):
+                    loop_calls[name].append(b.strip().lstrip("%"))
+
+    called = {t for ts in loop_calls.values() for t in ts} | fusion_targets
+    roots = [c for c in comps if c not in called]
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, m: float):
+        if m <= mult.get(name, 0):
+            return
+        mult[name] = m
+        for t in loop_calls.get(name, []):
+            visit(t, m * body_trips.get(t, 1))
+
+    for r in roots:
+        visit(r, 1.0)
+
+    # map each fusion computation's parameters to their slice behaviour so
+    # fusion call sites can charge sliced windows instead of full operands
+    # (scan bodies slice one layer of stacked params per trip).
+    fusion_param_bytes: Dict[str, Dict[int, Optional[int]]] = {}
+    for fname in fusion_targets:
+        lines = comps.get(fname, [])
+        shapes_f: Dict[str, str] = {}
+        param_of: Dict[str, int] = {}
+        for ln in lines:
+            im = _INSTR_RE.match(ln)
+            if not im:
+                continue
+            iname, result, op = im.groups()
+            shapes_f[iname] = result
+            if op == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", ln)
+                if pm:
+                    param_of[iname] = int(pm.group(1))
+        overrides: Dict[int, Optional[int]] = {}
+        # def-use inside the fusion; "passthrough" ops (bitcast/convert/...)
+        # forward the analysis so `convert(param) -> dynamic-slice` is still
+        # recognized as a windowed read (scan bodies do this constantly).
+        _PASS = {"bitcast", "reshape", "copy", "convert", "transpose",
+                 "broadcast"}
+        uses: Dict[str, List[Tuple[str, int, str]]] = defaultdict(list)
+        for ln in lines:
+            im = _INSTR_RE.match(ln)
+            if not im:
+                continue
+            iname, result, op = im.groups()
+            if op == "parameter":
+                continue
+            for idx, o in enumerate(
+                    re.findall(r"%([\w\.\-]+)", _first_paren_group(ln))):
+                uses[o].append((op, idx, result, iname))
+
+        def slice_bytes_of(name: str, depth: int = 0) -> Optional[int]:
+            """Total windowed bytes if every (transitive) use of `name` is
+            slice-like; None if any use reads it in full."""
+            if depth > 6:
+                return None
+            total = 0
+            for op, argidx, result, iname in uses.get(name, []):
+                if op in ("dynamic-slice", "slice", "gather"):
+                    total += _shape_bytes(result)
+                elif op == "dynamic-update-slice" and argidx == 0:
+                    pass  # in-place target; the update op is counted
+                elif op in _PASS:
+                    sub = slice_bytes_of(iname, depth + 1)
+                    if sub is None:
+                        return None
+                    total += sub
+                else:
+                    return None
+            return total
+
+        for pname, pidx in param_of.items():
+            sb = slice_bytes_of(pname)
+            if sb is not None:
+                overrides[pidx] = sb
+        fusion_param_bytes[fname] = overrides
+
+    # --- per-instruction pass (skip fusion bodies) ---
+    flops = 0.0
+    hbm_bytes = 0.0
+    per_coll: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0.0, "bytes": 0.0, "link_bytes": 0.0})
+    dot_flops_detail: Dict[str, float] = defaultdict(float)
+
+    for name, lines in comps.items():
+        if name in fusion_targets:
+            continue
+        m_comp = mult.get(name, 1.0)
+        shapes: Dict[str, str] = {}
+        for ln in lines:
+            im = _INSTR_RE.match(ln)
+            if not im:
+                continue
+            iname, result, op = im.groups()
+            shapes[iname] = result
+
+        for ln in lines:
+            im = _INSTR_RE.match(ln)
+            if not im:
+                continue
+            iname, result, op = im.groups()
+            if op in _FREE_OPS:
+                continue
+            operands = re.findall(r"%([\w\.\-]+)", _first_paren_group(ln))
+            res_bytes = _shape_bytes(result)
+            if op in ("dynamic-slice", "slice"):
+                # only the sliced window moves, not the full operand
+                touched = 2 * res_bytes
+            elif op == "dynamic-update-slice":
+                upd = _shape_bytes(shapes.get(operands[1], "")) if len(operands) > 1 else 0
+                touched = 2 * upd        # read update + write window (in-place)
+            elif op in ("while", "conditional", "call"):
+                touched = 0              # cost attributed inside
+            elif op == "fusion":
+                target = None
+                fm = re.search(r"calls=%?([\w\.\-]+)", ln)
+                if fm:
+                    target = fm.group(1)
+                overrides = fusion_param_bytes.get(target, {})
+                op_bytes = 0
+                for idx, o in enumerate(operands):
+                    if idx in overrides:
+                        op_bytes += overrides[idx]
+                    else:
+                        op_bytes += _shape_bytes(shapes.get(o, ""))
+                touched = op_bytes + res_bytes
+            else:
+                op_bytes = sum(_shape_bytes(shapes.get(o, "")) for o in operands)
+                touched = op_bytes + res_bytes
+            hbm_bytes += touched * m_comp
+
+            if op == "dot":
+                sd = _shape_dims(result)
+                cm = _CDIMS_RE.search(ln)
+                if sd and cm and operands:
+                    _, rdims = sd
+                    out_elems = 1
+                    for d in rdims:
+                        out_elems *= d
+                    lhs = _shape_dims(shapes.get(operands[0], "")) or ("", [])
+                    cdim_idx = [int(x) for x in cm.group(1).split(",") if x]
+                    k = 1
+                    for ci in cdim_idx:
+                        if ci < len(lhs[1]):
+                            k *= lhs[1][ci]
+                    f = 2.0 * out_elems * k * m_comp
+                    flops += f
+                    dot_flops_detail[name] += f
+
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLL_OPS and not op.endswith("-done"):
+                if result.strip().startswith("("):
+                    parts = _split_tuple(result)
+                    nbytes = _shape_bytes(parts[-1]) if parts else 0
+                else:
+                    nbytes = _shape_bytes(result)
+                g = 1
+                gm = _GROUPS_IOTA.search(ln)
+                if gm:
+                    g = int(gm.group(2))
+                else:
+                    gm = _GROUPS_EXPLICIT.search(ln)
+                    if gm:
+                        g = len([x for x in gm.group(1).split(",") if x.strip()])
+                if g <= 1:
+                    link = 0.0
+                elif base == "all-gather":
+                    link = nbytes * (g - 1) / g
+                elif base == "all-reduce":
+                    link = nbytes * 2 * (g - 1) / g
+                elif base == "reduce-scatter":
+                    link = nbytes * (g - 1)
+                elif base == "all-to-all":
+                    link = nbytes * (g - 1) / g
+                else:
+                    link = float(nbytes)
+                d = per_coll[base]
+                d["count"] += m_comp
+                d["bytes"] += nbytes * m_comp
+                d["link_bytes"] += link * m_comp
+
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "collectives": {
+            "per_op": {k: {kk: round(vv, 1) for kk, vv in v.items()}
+                       for k, v in sorted(per_coll.items())},
+            "total_bytes": round(sum(d["bytes"] for d in per_coll.values()), 1),
+            "total_link_bytes": round(
+                sum(d["link_bytes"] for d in per_coll.values()), 1),
+            "n_while_loops": len(body_trips),
+            "trip_counts": sorted(body_trips.values(), reverse=True)[:8],
+        },
+    }

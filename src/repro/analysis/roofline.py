@@ -1,0 +1,114 @@
+"""Three-term roofline from the dry-run artifacts (TPU v5e constants).
+
+    compute term    = HLO_FLOPs_per_device / PEAK_FLOPS
+    memory term     = HLO_bytes_per_device / HBM_BW
+    collective term = ring_link_bytes_per_device / ICI_BW
+
+The dominant term is the step-time lower bound; the reported roofline
+fraction is  (MODEL_FLOPS_per_device / PEAK_FLOPS) / dominant — i.e. what
+share of the theoretically-attainable step time goes to *useful* model
+math.  MODEL_FLOPS / HLO_FLOPs separately exposes remat/padding/redundancy
+waste.
+
+Usage:
+  PYTHONPATH=src python -m repro.analysis.roofline [--mesh 16x16] [--csv]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12     # bf16 / chip (v5e)
+HBM_BW = 819e9          # bytes/s / chip
+ICI_BW = 50e9           # bytes/s / link
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def roofline_row(art: Dict) -> Dict:
+    from .analytic import cell_flops
+
+    n_dev = art["n_devices"]
+    flops_dev = art["hlo_flops"]
+    bytes_dev = art["hlo_bytes"]
+    link_dev = art["collectives"]["total_link_bytes"]
+
+    ana = cell_flops(art["arch"], art["shape"])
+    model_dev = ana["model_flops"] / n_dev
+    expected_dev = ana["expected_flops"] / n_dev
+    # the HLO parser cannot expand dynamic-bound (causal flash) loops;
+    # take the max of parsed and analytic as the compute estimate.
+    flops_est = max(flops_dev, expected_dev)
+
+    t_comp = flops_est / PEAK_FLOPS
+    t_mem = bytes_dev / HBM_BW
+    t_coll = link_dev / ICI_BW
+    dom = max(("compute", t_comp), ("memory", t_mem), ("collective", t_coll),
+              key=lambda kv: kv[1])
+    t_model = model_dev / PEAK_FLOPS
+    frac = t_model / dom[1] if dom[1] > 0 else 0.0
+    return {
+        "arch": art["arch"], "shape": art["shape"], "mesh": art["mesh"],
+        "tag": art.get("tag", ""),
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "dominant": dom[0],
+        "model_flops_dev": model_dev,
+        "hlo_flops_dev": flops_dev,
+        "expected_flops_dev": expected_dev,
+        "useful_ratio": model_dev / flops_est if flops_est else 0.0,
+        "roofline_fraction": frac,
+        "peak_gib": art["bytes_per_device"]["peak"] / 2**30,
+        "arg_gib": art["bytes_per_device"]["argument"] / 2**30,
+        "temp_gib": art["bytes_per_device"]["temp"] / 2**30,
+    }
+
+
+def load_rows(mesh: str = "16x16", tag: Optional[str] = None) -> List[Dict]:
+    rows = []
+    for f in sorted((ARTIFACTS / mesh).glob("*.json")):
+        art = json.loads(f.read_text())
+        if tag is not None and art.get("tag", "") != tag:
+            continue
+        if tag is None and art.get("tag", ""):
+            continue
+        rows.append(roofline_row(art))
+    return rows
+
+
+def fmt_table(rows: List[Dict]) -> str:
+    hdr = (f"| {'arch':22s} | {'shape':11s} | {'comp s':>9s} | {'mem s':>9s} "
+           f"| {'coll s':>9s} | {'bound':10s} | {'useful':>6s} | {'roofl%':>6s} "
+           f"| {'peak GiB':>8s} |")
+    sep = "|" + "-" * (len(hdr) - 2) + "|"
+    out = [hdr, sep]
+    for r in rows:
+        out.append(
+            f"| {r['arch']:22s} | {r['shape']:11s} | {r['compute_s']:9.4f} "
+            f"| {r['memory_s']:9.4f} | {r['collective_s']:9.4f} "
+            f"| {r['dominant']:10s} | {r['useful_ratio']*100:5.1f}% "
+            f"| {r['roofline_fraction']*100:5.1f}% "
+            f"| {max(r['peak_gib'], r['arg_gib']+r['temp_gib']):8.2f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--tag", default=None)
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    rows = load_rows(args.mesh, args.tag)
+    if args.csv:
+        keys = list(rows[0].keys())
+        print(",".join(keys))
+        for r in rows:
+            print(",".join(str(r[k]) for k in keys))
+    else:
+        print(fmt_table(rows))
+
+
+if __name__ == "__main__":
+    main()

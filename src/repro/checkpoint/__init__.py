@@ -1,0 +1,2 @@
+from .store import (AsyncCheckpointer, latest_step, load_checkpoint,  # noqa: F401
+                    save_checkpoint)

@@ -1,0 +1,44 @@
+"""Architecture registry: one module per assigned arch, ``--arch <id>``."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from ..models.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "musicgen_medium",
+    "llama3_2_3b",
+    "mistral_large_123b",
+    "granite_8b",
+    "qwen3_14b",
+    "olmoe_1b_7b",
+    "qwen3_moe_235b_a22b",
+    "pixtral_12b",
+    "recurrentgemma_9b",
+    "xlstm_1_3b",
+]
+
+_ALIAS = {i.replace("_", "-"): i for i in ARCH_IDS}
+
+
+def canonical(arch: str) -> str:
+    arch = arch.replace("-", "_").replace(".", "_")
+    if arch not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return arch
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f".{canonical(arch)}", __package__)
+    return mod.CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f".{canonical(arch)}", __package__)
+    return mod.REDUCED
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

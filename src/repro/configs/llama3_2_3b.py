@@ -1,0 +1,20 @@
+"""llama3.2-3b [dense]: 28L d_model=3072 24H (GQA kv=8) d_ff=8192
+vocab=128256 [hf:meta-llama/Llama-3.2-3B].  q heads pad 24->32; KV=8
+repeats 2x inside flash tiles (cache stores true 8)."""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3_2_3b",
+    family="dense",
+    n_layers=28,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=128256,
+    head_dim=128,
+    rope_theta=500000.0,
+)
+
+REDUCED = CONFIG.reduced()

@@ -1,0 +1,25 @@
+"""musicgen-medium [audio]: decoder-only over EnCodec tokens (arXiv:2306.05284).
+
+48L d_model=1536 24H (MHA: kv=24) d_ff=6144 vocab=2048.  The EnCodec /
+conditioning frontend is a STUB: input_specs provides precomputed frame
+embeddings as a prefix (DESIGN.md §frontends); the backbone is the standard
+transformer decoder.  MHA heads (24) pad to 32 for 16-way TP.
+"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen_medium",
+    family="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    d_ff=6144,
+    vocab_size=2048,
+    head_dim=64,
+    frontend="audio_frames",
+    prefix_len=256,
+)
+
+REDUCED = CONFIG.reduced(n_heads=4, n_kv_heads=4)

@@ -1,0 +1,21 @@
+"""olmoe-1b-7b [moe]: 16L d_model=2048 16H (kv=16) vocab=50304,
+64 experts top-8, d_ff(expert)=1024 (arXiv:2409.02060).  Experts shard
+over the model axis (EP); the all-to-all dispatch dominates collectives."""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmoe_1b_7b",
+    family="moe",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1024,
+    vocab_size=50304,
+    head_dim=128,
+    n_experts=64,
+    experts_per_token=8,
+)
+
+REDUCED = CONFIG.reduced(n_heads=4, n_kv_heads=4)

@@ -1,0 +1,23 @@
+"""pixtral-12b [vlm]: pixtral-ViT + mistral-nemo decoder
+[hf:mistralai/Pixtral-12B-2409].  40L d_model=5120 32H (GQA kv=8)
+d_ff=14336 vocab=131072.  The ViT frontend is a STUB: input_specs provides
+precomputed patch embeddings as a (B, 256, d) prefix."""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral_12b",
+    family="vlm",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=131072,
+    head_dim=128,
+    rope_theta=1000000.0,
+    frontend="vision_patches",
+    prefix_len=256,
+)
+
+REDUCED = CONFIG.reduced()

@@ -1,0 +1,21 @@
+"""qwen3-14b [dense]: 40L d_model=5120 40H (GQA kv=8) d_ff=17408
+vocab=151936, per-head q/k RMSNorm [hf:Qwen/Qwen3-14B].  q heads pad
+40->48 for 16-way TP."""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3_14b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=17408,
+    vocab_size=151936,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=1000000.0,
+)
+
+REDUCED = CONFIG.reduced(qk_norm=True)

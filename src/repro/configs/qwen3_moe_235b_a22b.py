@@ -1,0 +1,23 @@
+"""qwen3-moe-235b-a22b [moe]: 94L d_model=4096 64H (GQA kv=4) vocab=151936,
+128 experts top-8, d_ff(expert)=1536, qk_norm [hf:Qwen/Qwen3-235B-A22B].
+KV=4 repeats 4x in flash tiles; decode shards cache time (flash-decoding)."""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3_moe_235b_a22b",
+    family="moe",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv_heads=4,
+    d_ff=1536,
+    vocab_size=151936,
+    head_dim=128,
+    qk_norm=True,
+    n_experts=128,
+    experts_per_token=8,
+    rope_theta=1000000.0,
+)
+
+REDUCED = CONFIG.reduced(qk_norm=True)

@@ -1,0 +1,23 @@
+"""recurrentgemma-9b [hybrid]: Griffin RG-LRU + local attention 1:2
+(arXiv:2402.19427).  38L = 12 x (R,R,A) + 2R tail, d_model=4096,
+16H MQA (kv=1) head_dim=256, d_ff=12288, window=2048, lru_width=4096,
+vocab=256000.  Sub-quadratic -> runs long_500k."""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma_9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    d_ff=12288,
+    vocab_size=256000,
+    head_dim=256,
+    block_pattern=("R", "R", "A"),
+    window=2048,
+    lru_width=4096,
+)
+
+REDUCED = CONFIG.reduced(n_heads=4, n_kv_heads=1, head_dim=16)

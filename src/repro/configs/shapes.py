@@ -1,0 +1,46 @@
+"""Assigned input-shape cells (LM-family: seq_len x global_batch).
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one token + KV cache of
+seq_len); ``train_*`` lower ``train_step``; ``prefill_*`` lower the prefill.
+``long_500k`` requires sub-quadratic attention: only recurrentgemma (local
+window) and xlstm (constant state) run it — the 8 pure full-attention archs
+skip with a note (DESIGN.md §long-context skips).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524_288, 1),
+}
+
+# archs with sub-quadratic sequence mixing (run long_500k)
+SUBQUADRATIC = {"recurrentgemma_9b", "xlstm_1_3b"}
+
+
+def cells_for(arch: str) -> List[Tuple[str, ShapeCell]]:
+    out = []
+    for name, cell in SHAPES.items():
+        if name == "long_500k" and arch not in SUBQUADRATIC:
+            continue  # full-attention: O(S^2)/KV>HBM — documented skip
+        out.append((name, cell))
+    return out
+
+
+def all_cells() -> List[Tuple[str, str]]:
+    from . import ARCH_IDS
+    return [(a, n) for a in ARCH_IDS for (n, _) in cells_for(a)]

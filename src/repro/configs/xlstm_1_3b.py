@@ -1,0 +1,23 @@
+"""xlstm-1.3b [ssm]: sLSTM + mLSTM blocks 7:1 (arXiv:2405.04517).
+48 blocks = 6 x (7 mLSTM + 1 sLSTM), d_model=2048, 4 heads head_dim=512,
+d_ff=0 (cell-internal projections only), vocab=50304.  Constant-size
+state -> runs long_500k.  mLSTM value dim shards over model (4 heads
+cannot split 16 ways); chunkwise form makes the cell matmul-bound."""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm_1_3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    head_dim=512,
+    mlstm_per_group=7,
+    mlstm_chunk=64,
+)
+
+REDUCED = CONFIG.reduced()

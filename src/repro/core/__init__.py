@@ -1,0 +1,22 @@
+"""LBP core: the paper's contribution (schedulers, partition, distributed matmul).
+
+Scheduler plane (pure numpy/scipy, the paper's algorithms):
+  network           star/mesh heterogeneous network models (§4/§5/§6 params)
+  star              closed-form {k_i} solvers: SCSS/SCCS/PCCS/PCSS (§4)
+  integer_adjust    §4.5 rounding + sum repair (quantum=1 paper, 128 TPU)
+  mesh_lp           MFT-LBP linear program (§5.2, eqs 49-61)
+  pmft              PMFT-LBP 3-phase solver + FIFS (§5.3, Algs 1-2)
+  heuristic         MFT-LBP-heuristic (§5.4, Alg 3)
+  rect_partition    rectangular baselines: Even-Col/PERI-SUM/Recursive/NRRP + bounds
+  mesh_baselines    SUMMA / Pipeline / Modified Pipeline mesh simulators
+
+Execution plane (JAX):
+  partition         LayerAssignment {k_i} datatype
+  lbp_matmul        k-sharded distributed matmul (layers/allreduce/scatter),
+                    ragged heterogeneous shards
+"""
+
+from .network import MeshNetwork, SpeedProfile, StarNetwork, random_mesh, random_star  # noqa: F401
+from .partition import LayerAssignment  # noqa: F401
+from .star import SOLVERS, StarSchedule, per_processor_finish, solve  # noqa: F401
+from .integer_adjust import adjust_integer, solve_integer  # noqa: F401

@@ -1,0 +1,75 @@
+"""Integer adjustment of real-valued LBP splits (paper §4.5).
+
+The star solvers return real-valued ``{k_i}``.  In practice k_i must be an
+integer (a whole column of A / row of B).  The paper's heuristic:
+
+  1. round each k_i to the nearest integer ("a processor gets the whole
+     row/column if it takes more than half of the fractional part");
+  2. if sum != N, sort processors by their actual finish time T_f(i):
+       sum < N  -> repeatedly give +1 to the processor with the SMALLEST T_f(i)
+       sum > N  -> repeatedly take -1 from the processor with the LARGEST T_f(i)
+     recomputing finish times after every single-unit move.
+
+TPU adaptation: the same machinery with ``quantum=128`` produces
+MXU-lane-aligned shard sizes (see DESIGN.md §2); quantum=1 reproduces the
+paper exactly.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+from .network import StarNetwork
+from .star import Mode, per_processor_finish
+
+
+def adjust_integer(
+    net: StarNetwork,
+    N: int,
+    k_real: np.ndarray,
+    mode: Mode,
+    quantum: int = 1,
+) -> np.ndarray:
+    """Round a real split to integers (multiples of ``quantum``) summing to N.
+
+    N must be divisible by ``quantum`` when quantum > 1 (the TPU case pads N
+    upstream); quantum=1 is the paper's setting.
+    """
+    if quantum != 1:
+        assert N % quantum == 0, "pad N to a multiple of the quantum first"
+    q = float(quantum)
+    k = np.rint(np.asarray(k_real, dtype=np.float64) / q) * q
+    k = np.maximum(k, 0.0)
+
+    target = float(N)
+    # Iteratively repair the sum, one quantum at a time (paper: "we conduct
+    # the adjustment iteratively ... every iteration we only adjust one
+    # row/column, then we update each processor's T_f").
+    guard = 0
+    while k.sum() != target and guard < 16 * net.p + int(2 * N / q) + 8:
+        guard += 1
+        tf = per_processor_finish(net, N, k, mode)
+        if k.sum() < target:
+            i = int(np.argmin(tf))
+            k[i] += q
+        else:
+            # only remove from processors that still have load
+            loaded = k > 0
+            tf_masked = np.where(loaded, tf, -np.inf)
+            i = int(np.argmax(tf_masked))
+            k[i] -= q
+    assert k.sum() == target, "integer adjustment failed to converge"
+    assert np.all(k >= 0)
+    return k.astype(np.int64)
+
+
+def solve_integer(net: StarNetwork, N: int, mode: Mode = "PCCS", quantum: int = 1):
+    """Convenience: real solve + §4.5 adjustment. Returns (k_int, T_f)."""
+    from .star import SOLVERS, finish_time_for_split
+
+    sched = SOLVERS[mode](net, N)
+    k_int = adjust_integer(net, N, sched.k, mode, quantum=quantum)
+    tf = finish_time_for_split(net, N, k_int, mode)
+    return k_int, tf

@@ -1,0 +1,207 @@
+"""MFT-LBP: the paper's LP/MIP formulation for multi-neighbor (mesh) networks.
+
+Paper §5.2, eqs (49)-(61).  Variables:
+
+    k_i      layers assigned to node i           (integer in the MIP; real here)
+    T_s(i)   start time of node i
+    phi(i,j) load volume sent over directed edge (i,j)
+    T_f      overall finishing time (objective)
+
+``T_f(i) = T_s(i) + k_i N^2 w(i) Tcp`` is substituted into constraints (52)
+and (61) rather than carried as an explicit variable.
+
+Constraints (paper numbering):
+  (50) T_s(i) = 0 for the source
+  (51) T_s(i) >= T_s(j) + phi(j,i) z(j,i) Tcm        for every edge (j,i)
+  (53) sum_j phi(s,j) = 2 N^2                        source sends everything
+  (54) inflow(i) - outflow(i) = 2 k_i N              non-source consumption
+  (55/56) phi >= 0 on tau=1 edges, phi = 0 otherwise (we only create tau=1 vars)
+  (57->62) k_i >= 0 (relaxed; integrality handled by PMFT-LBP / heuristic)
+  (58) k_source = 0
+  (59) 2 k_i N + N^2 <= D_i                          storage (optional)
+  (60) sum_i k_i = N
+  (61) T_f >= T_s(i) + k_i N^2 w(i) Tcp
+
+Solved with scipy HiGHS dual simplex; ``nit`` is accumulated by callers to
+reproduce the paper's Fig. 9 (total simplex iterations).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+from scipy.optimize import linprog
+
+from .network import MeshNetwork
+
+
+@dataclasses.dataclass
+class LPResult:
+    k: np.ndarray                      # (p,) real-valued layer counts
+    t_start: np.ndarray                # (p,)
+    t_finish_nodes: np.ndarray         # (p,) T_f(i)
+    phi: Dict[Tuple[int, int], float]  # per-edge volume
+    t_finish: float                    # T_f (makespan)
+    nit: int                           # simplex iterations of this solve
+    status: int
+
+    @property
+    def comm_volume(self) -> float:
+        """Overall communication volume = sum of per-link traffic (paper §6.2.1)."""
+        return float(sum(self.phi.values()))
+
+
+def _build_and_solve(
+    net: MeshNetwork,
+    N: int,
+    fixed_k: Optional[np.ndarray] = None,
+) -> LPResult:
+    net.validate()
+    p = net.p
+    edges = net.edges()
+    E = len(edges)
+    eidx = {e: i for i, e in enumerate(edges)}
+
+    # variable layout: [k_0..k_{p-1} | Ts_0..Ts_{p-1} | phi_e0..phi_{E-1} | Tf]
+    nk, nt = p, p
+    n_var = nk + nt + E + 1
+    K0, T0, P0, F0 = 0, nk, nk + nt, nk + nt + E
+
+    tcp, tcm = net.t_cp, net.t_cm
+    s = net.source
+    N2 = float(N) * float(N)
+
+    c = np.zeros(n_var)
+    c[F0] = 1.0  # minimize T_f
+
+    A_ub, b_ub = [], []
+    A_eq, b_eq = [], []
+
+    # Flow variables are expressed in units of 2N entries (phi' = phi / (2N)):
+    # this keeps the constraint-matrix coefficients within ~4 orders of
+    # magnitude (raw phi ~ 4.5e6 against z*Tcm ~ 3e-4 makes HiGHS's dual
+    # simplex mis-declare feasible instances infeasible).
+    PHI_UNIT = 2.0 * float(N)
+
+    # (51): Ts_i - Ts_j - phi(j,i) z Tcm >= 0  ->  -Ts_i + Ts_j + phi*z*Tcm <= 0
+    for (j, i) in edges:
+        row = np.zeros(n_var)
+        row[T0 + i] = -1.0
+        row[T0 + j] = 1.0
+        row[P0 + eidx[(j, i)]] = net.z[(j, i)] * tcm * PHI_UNIT
+        A_ub.append(row)
+        b_ub.append(0.0)
+
+    # (61): Ts_i + k_i N^2 w_i Tcp - Tf <= 0
+    for i in range(p):
+        row = np.zeros(n_var)
+        row[T0 + i] = 1.0
+        row[K0 + i] = N2 * net.w[i] * tcp
+        row[F0] = -1.0
+        A_ub.append(row)
+        b_ub.append(0.0)
+
+    # (53): source outflow = 2 N^2  (in phi' units: = N)
+    row = np.zeros(n_var)
+    for e in net.out_edges(s):
+        row[P0 + eidx[e]] = 1.0
+    A_eq.append(row)
+    b_eq.append(2.0 * N2 / PHI_UNIT)
+
+    # (54): inflow - outflow - 2 N k_i = 0  (in phi' units: ... - k_i = 0)
+    for i in range(p):
+        if i == s:
+            continue
+        row = np.zeros(n_var)
+        for e in net.in_edges(i):
+            row[P0 + eidx[e]] = 1.0
+        for e in net.out_edges(i):
+            row[P0 + eidx[e]] = -1.0
+        row[K0 + i] = -2.0 * float(N) / PHI_UNIT
+        A_eq.append(row)
+        b_eq.append(0.0)
+
+    # (60): sum k = N
+    row = np.zeros(n_var)
+    row[K0:K0 + p] = 1.0
+    A_eq.append(row)
+    b_eq.append(float(N))
+
+    # bounds
+    bounds = []
+    for i in range(p):  # k
+        if i == s:
+            bounds.append((0.0, 0.0))                       # (58)
+        elif fixed_k is not None:
+            v = float(fixed_k[i])
+            bounds.append((v, v))
+        else:
+            hi = None
+            if net.storage is not None:                     # (59)
+                hi = max(0.0, (net.storage[i] - N2) / (2.0 * N))
+            bounds.append((0.0, hi))
+    for i in range(p):  # Ts
+        bounds.append((0.0, None) if i != s else (0.0, 0.0))  # (50)
+    for _ in range(E):  # phi
+        bounds.append((0.0, None))                          # (55)
+    bounds.append((0.0, None))                              # Tf
+
+    lp_args = dict(
+        A_ub=np.array(A_ub), b_ub=np.array(b_ub),
+        A_eq=np.array(A_eq), b_eq=np.array(b_eq),
+        bounds=bounds,
+    )
+    # Dual simplex, per the paper's simplex-iteration evaluation (Fig. 9).
+    # HiGHS presolve mis-declares some fixed-k instances infeasible (fixed
+    # bounds + exact flow equalities), so it is disabled; interior-point is
+    # the fallback for the rare conditioning failures of the simplex.
+    res = linprog(c, method="highs-ds", options={"presolve": False}, **lp_args)
+    if res.status != 0:
+        res = linprog(c, method="highs-ipm", options={"presolve": False}, **lp_args)
+    if res.status != 0:
+        raise RuntimeError(f"MFT-LBP LP infeasible/failed: status={res.status} {res.message}")
+
+    x = res.x
+    k = x[K0:K0 + p]
+    ts = x[T0:T0 + p]
+    tf_nodes = ts + k * N2 * net.w * tcp
+    phi = {e: float(x[P0 + eidx[e]]) * PHI_UNIT for e in edges}
+    return LPResult(
+        k=k, t_start=ts, t_finish_nodes=tf_nodes, phi=phi,
+        t_finish=float(x[F0]), nit=int(getattr(res, "nit", 0)), status=res.status,
+    )
+
+
+def solve_relaxed(net: MeshNetwork, N: int) -> LPResult:
+    """Phase-I relaxation (constraint (57) -> k_i >= 0 real)."""
+    return _build_and_solve(net, N, fixed_k=None)
+
+
+def solve_fixed_k(net: MeshNetwork, N: int, k: np.ndarray) -> LPResult:
+    """Re-solve timing/flow with {k_i} pinned (used by FIFS / neighbor search).
+
+    With k fixed the LP computes the optimal flow routing and start times,
+    i.e. it doubles as the finishing-time *simulator* for LBP on the mesh.
+    """
+    return _build_and_solve(net, N, fixed_k=np.asarray(k, dtype=np.float64))
+
+
+def solve_fixed_k_normalized(net: MeshNetwork, N: int, k: np.ndarray) -> LPResult:
+    """Fixed-k timing solve that tolerates sum(k) != N.
+
+    (53) emits 2N^2 while (54) consumes 2*k_i*N: with sum(k) != N the flow
+    constraints are inconsistent and the LP is strictly infeasible.  The
+    paper's FIFS/heuristic nevertheless 're-solve MFT-LBP with {k'_i} known'
+    mid-repair to rank T_f(i); the only feasible reading is the normalized
+    problem k * (N / sum(k)), which preserves the per-node finish-time
+    ordering used for the +1/-1 adjustment decisions.
+    """
+    k = np.asarray(k, dtype=np.float64)
+    total = float(k.sum())
+    if total <= 0:
+        raise ValueError("empty schedule")
+    if total == float(N):
+        return _build_and_solve(net, N, fixed_k=k)
+    return _build_and_solve(net, N, fixed_k=k * (float(N) / total))

@@ -1,0 +1,141 @@
+"""Network models for the paper's scheduling problems.
+
+The paper (§4, §6.1) evaluates LBP on a heterogeneous *star* network (one
+non-computing source, p children) and (§5, §6.2) on a heterogeneous *mesh*
+(X x Y grid, source at the quadrant corner, edges directed away from the
+source).  Unit costs follow the paper's conventions:
+
+  - ``w[i]``  : inverse computing speed of processor i  (unit load -> w_i*Tcp s)
+  - ``z[i]``  : inverse link speed of link i            (unit load -> z_i*Tcm s)
+  - ``Tcp``   : computing intensity constant
+  - ``Tcm``   : communication intensity constant
+
+For an N x N x N matmul, processor i holding ``k_i`` layers:
+  comm volume = 2*k_i*N   (k_i columns of A + k_i rows of B)
+  compute     = k_i*N^2 multiplications -> k_i*N^2*w_i*Tcp seconds
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+# Paper §6.1/§6.2 simulation parameter ranges.
+W_TCP_RANGE = (0.0005, 0.0008)  # unit processing time w*Tcp
+Z_TCM_RANGE = (0.0002, 0.0005)  # unit transmission time z*Tcm
+
+
+@dataclasses.dataclass(frozen=True)
+class StarNetwork:
+    """One source + p children. Source only transmits (never computes)."""
+
+    w: np.ndarray  # (p,) inverse compute speed of each child
+    z: np.ndarray  # (p,) inverse link speed source->child i
+    t_cp: float = 1.0
+    t_cm: float = 1.0
+
+    @property
+    def p(self) -> int:
+        return int(self.w.shape[0])
+
+    def validate(self) -> None:
+        assert self.w.shape == self.z.shape
+        assert np.all(self.w > 0) and np.all(self.z > 0)
+
+
+def random_star(p: int, seed: int, t_cp: float = 1.0, t_cm: float = 1.0) -> StarNetwork:
+    """Random heterogeneous star per paper §6.1 (16 children by default)."""
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(*W_TCP_RANGE, size=p) / t_cp
+    z = rng.uniform(*Z_TCM_RANGE, size=p) / t_cm
+    return StarNetwork(w=w, z=z, t_cp=t_cp, t_cm=t_cm)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshNetwork:
+    """X x Y grid; node (0,0) is the source (paper §6.2: lower-right quadrant
+    with the source at the top-left corner).  Edges are directed away from
+    the source: right (+x) and down (+y);  tau(i,j)=1 for those pairs.
+
+    Node ids are row-major: id = y * X + x.
+    """
+
+    X: int
+    Y: int
+    w: np.ndarray          # (p,) inverse compute speed; w[source] unused
+    z: Dict[Tuple[int, int], float]  # directed edge (i,j) -> inverse link speed
+    t_cp: float = 1.0
+    t_cm: float = 1.0
+    source: int = 0
+    storage: np.ndarray | None = None  # (p,) D_i, optional
+
+    @property
+    def p(self) -> int:
+        return self.X * self.Y
+
+    def node_id(self, x: int, y: int) -> int:
+        return y * self.X + x
+
+    def coords(self, i: int) -> Tuple[int, int]:
+        return i % self.X, i // self.X
+
+    def edges(self) -> List[Tuple[int, int]]:
+        """Directed edges (i -> j), flowing away from the source corner."""
+        return sorted(self.z.keys())
+
+    def in_edges(self, j: int) -> List[Tuple[int, int]]:
+        return [e for e in self.edges() if e[1] == j]
+
+    def out_edges(self, i: int) -> List[Tuple[int, int]]:
+        return [e for e in self.edges() if e[0] == i]
+
+    def validate(self) -> None:
+        assert self.w.shape[0] == self.p
+        for (i, j), zz in self.z.items():
+            xi, yi = self.coords(i)
+            xj, yj = self.coords(j)
+            assert (xj - xi, yj - yi) in ((1, 0), (0, 1)), "edges flow right/down"
+            assert zz > 0
+
+
+def random_mesh(X: int, Y: int, seed: int, t_cp: float = 1.0, t_cm: float = 1.0,
+                storage: float | None = None) -> MeshNetwork:
+    """Random heterogeneous mesh per paper §6.2.
+
+    Source at (0,0); every right/down link gets an independent z.
+    """
+    rng = np.random.default_rng(seed)
+    p = X * Y
+    w = rng.uniform(*W_TCP_RANGE, size=p) / t_cp
+    z: Dict[Tuple[int, int], float] = {}
+    for y in range(Y):
+        for x in range(X):
+            i = y * X + x
+            if x + 1 < X:
+                z[(i, i + 1)] = float(rng.uniform(*Z_TCM_RANGE)) / t_cm
+            if y + 1 < Y:
+                z[(i, i + X)] = float(rng.uniform(*Z_TCM_RANGE)) / t_cm
+    st = None
+    if storage is not None:
+        st = np.full(p, storage)
+    return MeshNetwork(X=X, Y=Y, w=w, z=z, t_cp=t_cp, t_cm=t_cm, storage=st)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeedProfile:
+    """Measured per-device effective speeds for the TPU runtime plane.
+
+    ``relative_speed[i]`` ~ 1.0 nominal; a straggler at 0.5 computes half as
+    fast.  Converted to the paper's ``w`` (inverse speed) for the solvers.
+    """
+
+    relative_speed: np.ndarray
+
+    def to_star(self, link_cost: float = 1e-9) -> StarNetwork:
+        # Near-zero z: inside a pod the solver should balance compute only
+        # (PCSS limit); link heterogeneity is modeled when provided.
+        w = 1.0 / np.asarray(self.relative_speed, dtype=np.float64)
+        z = np.full_like(w, link_cost)
+        return StarNetwork(w=w, z=z)

@@ -1,0 +1,87 @@
+"""Layer-assignment datatypes shared by the scheduler and execution planes.
+
+A ``LayerAssignment`` is the paper's ``{k_i}`` for one sharded contraction:
+device i owns ``k[i]`` columns of A / rows of B (a contiguous slice of the
+contraction dimension) and computes one *layer* of the output.
+
+``quantum`` is the TPU adaptation of §4.5 integer adjustment: shards are
+multiples of 128 so every local matmul stays MXU-lane aligned; quantum=1
+reproduces the paper exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .integer_adjust import adjust_integer
+from .network import SpeedProfile, StarNetwork
+from .star import SOLVERS
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerAssignment:
+    """Integer split {k_i} of a contraction dimension K across p devices."""
+
+    k: np.ndarray            # (p,) integer layer counts, sum == K
+    quantum: int = 1
+
+    def __post_init__(self):
+        k = np.asarray(self.k, dtype=np.int64)
+        object.__setattr__(self, "k", k)
+        assert np.all(k >= 0)
+        if self.quantum > 1:
+            assert np.all(k % self.quantum == 0), "shards must be quantum-aligned"
+
+    @property
+    def p(self) -> int:
+        return int(self.k.shape[0])
+
+    @property
+    def K(self) -> int:
+        return int(self.k.sum())
+
+    @property
+    def offsets(self) -> np.ndarray:
+        """Start offset of each device's slice in the contraction dim."""
+        return np.concatenate([[0], np.cumsum(self.k)[:-1]]).astype(np.int64)
+
+    @property
+    def k_max(self) -> int:
+        return int(self.k.max())
+
+    def is_even(self) -> bool:
+        return bool(np.all(self.k == self.k[0]))
+
+    @property
+    def comm_volume(self) -> float:
+        """Source->device volume for an N=K square matmul: 2*K*sum(k) = 2K^2
+        — Theorem 1's optimum (each entry sent once)."""
+        return 2.0 * self.K * float(self.k.sum())
+
+    @staticmethod
+    def even(K: int, p: int, quantum: int = 1) -> "LayerAssignment":
+        assert K % (p * quantum) == 0, (K, p, quantum)
+        return LayerAssignment(np.full(p, K // p, dtype=np.int64), quantum)
+
+    @staticmethod
+    def from_speeds(
+        K: int,
+        speeds: Sequence[float],
+        quantum: int = 1,
+        mode: str = "PCSS",
+        net: Optional[StarNetwork] = None,
+    ) -> "LayerAssignment":
+        """Heterogeneity-aware split via the paper's star solvers (§4).
+
+        ``speeds`` are relative compute rates (1.0 = nominal); PCSS balances
+        pure compute (eq. 31-33); pass a full ``StarNetwork`` + mode for
+        link-aware splits (SCSS/SCCS/PCCS).
+        """
+        if net is None:
+            net = SpeedProfile(np.asarray(speeds, dtype=np.float64)).to_star()
+        sched = SOLVERS[mode](net, K)
+        k = adjust_integer(net, K, sched.k, mode, quantum=quantum)
+        return LayerAssignment(k, quantum)

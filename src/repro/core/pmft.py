@@ -1,0 +1,149 @@
+"""PMFT-LBP (paper Algorithm 1) and FIFS (Algorithm 2).
+
+Three phases:
+  I.   solve the LP relaxation (mesh_lp.solve_relaxed);
+  II.  FIFS: round k to integers, then repair sum(k)=N one unit at a time,
+       re-solving the fixed-k LP after every move to refresh T_f(i);
+  III. neighbor search: move one unit from the max-T_f node to the min-T_f
+       node; accept while the makespan improves.
+
+``quantum`` generalizes the unit move to 128-aligned moves for the TPU
+scheduler plane (DESIGN.md §2); quantum=1 is the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .mesh_lp import LPResult, solve_fixed_k, solve_fixed_k_normalized, solve_relaxed
+from .network import MeshNetwork
+
+
+@dataclasses.dataclass
+class MeshSchedule:
+    k: np.ndarray            # (p,) integer layer counts
+    result: LPResult         # fixed-k LP at the final schedule
+    lp_solves: int           # number of LP solves
+    simplex_iters: int       # total simplex iterations (paper Fig. 9 metric)
+
+    @property
+    def t_finish(self) -> float:
+        return self.result.t_finish
+
+    @property
+    def comm_volume(self) -> float:
+        return self.result.comm_volume
+
+
+def _storage_cap(net: MeshNetwork, N: int, i: int) -> float:
+    if net.storage is None:
+        return np.inf
+    return max(0.0, (net.storage[i] - float(N) ** 2) / (2.0 * N))
+
+
+def _eligible_receivers(net: MeshNetwork, N: int, k: np.ndarray, q: int) -> np.ndarray:
+    """Non-source nodes that can take q more layers without violating (59)."""
+    ok = np.ones(net.p, dtype=bool)
+    ok[net.source] = False
+    for i in range(net.p):
+        if ok[i] and k[i] + q > _storage_cap(net, N, i):
+            ok[i] = False
+    return ok
+
+
+def fifs(net: MeshNetwork, N: int, relaxed: LPResult, quantum: int = 1):
+    """Algorithm 2: find an integer feasible solution near the LP optimum.
+
+    Returns (k_int, last_fixed_lp, lp_solves, simplex_iters).
+    """
+    q = quantum
+    k = np.rint(relaxed.k / q) * q
+    k = np.maximum(k, 0.0)
+    k[net.source] = 0.0
+
+    solves, iters = 0, 0
+    res = None
+    guard = 0
+    while k.sum() != N and guard < 4 * net.p + int(2 * N / q) + 8:
+        guard += 1
+        res = solve_fixed_k_normalized(net, N, k)  # refresh T_f(i) (paper: every iteration)
+        solves += 1
+        iters += res.nit
+        tf = res.t_finish_nodes
+        if k.sum() > N:
+            loaded = (k > 0)
+            loaded[net.source] = False
+            i = int(np.argmax(np.where(loaded, tf, -np.inf)))
+            k[i] -= q
+        else:
+            ok = _eligible_receivers(net, N, k, q)
+            i = int(np.argmin(np.where(ok, tf, np.inf)))
+            k[i] += q
+    assert k.sum() == N, "FIFS failed to reach sum(k)=N"
+    if res is None or True:  # always evaluate the final schedule
+        res = solve_fixed_k(net, N, k)
+        solves += 1
+        iters += res.nit
+    return k.astype(np.int64), res, solves, iters
+
+
+def pmft_lbp(net: MeshNetwork, N: int, quantum: int = 1,
+             max_moves: int = 200, full_search: bool = False) -> MeshSchedule:
+    """Algorithm 1.  ``full_search=True`` explores the whole O(p^2) neighborhood
+    (the §5.3 prose); False follows Algorithm 1's max->min single neighbor,
+    which is also what §5.4 calls the gradient-descent move.
+    """
+    q = quantum
+    relaxed = solve_relaxed(net, N)
+    solves, iters = 1, relaxed.nit
+
+    k, cur, s2, i2 = fifs(net, N, relaxed, quantum=q)
+    solves += s2
+    iters += i2
+
+    for _ in range(max_moves):
+        tf = cur.t_finish_nodes
+        loaded = (k > 0)
+        loaded[net.source] = False
+        if not loaded.any():
+            break
+        if full_search:
+            best = None
+            order_a = np.argsort(-np.where(loaded, tf, -np.inf))[:4]
+            ok = _eligible_receivers(net, N, k, q)
+            order_b = np.argsort(np.where(ok, tf, np.inf))[:4]
+            for a in order_a:
+                for b in order_b:
+                    if a == b or k[a] < q or not ok[b]:
+                        continue
+                    kk = k.copy()
+                    kk[a] -= q
+                    kk[b] += q
+                    r = solve_fixed_k(net, N, kk)
+                    solves += 1
+                    iters += r.nit
+                    if best is None or r.t_finish < best[2].t_finish:
+                        best = (a, b, r, kk)
+            if best is None or best[2].t_finish >= cur.t_finish:
+                break
+            k, cur = best[3], best[2]
+        else:
+            a = int(np.argmax(np.where(loaded, tf, -np.inf)))
+            ok = _eligible_receivers(net, N, k, q)
+            ok[a] = False
+            if not ok.any():
+                break
+            b = int(np.argmin(np.where(ok, tf, np.inf)))
+            kk = k.copy()
+            kk[a] -= q
+            kk[b] += q
+            r = solve_fixed_k(net, N, kk)
+            solves += 1
+            iters += r.nit
+            if r.t_finish >= cur.t_finish:   # Algorithm 1 line 18: break
+                break
+            k, cur = kk, r
+
+    return MeshSchedule(k=k, result=cur, lp_solves=solves, simplex_iters=iters)

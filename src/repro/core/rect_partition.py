@@ -1,0 +1,246 @@
+"""Rectangular-partition baselines (paper §6.1.2) and their communication cost.
+
+All algorithms partition the N x N *output* matrix into p pieces with
+prescribed areas ``s_i`` (load shares, typically proportional to processor
+speed).  A piece covering ``r`` distinct rows and ``c`` distinct columns of
+the output needs ``r`` rows of A and ``c`` columns of B, i.e. a volume of
+``(r + c) * N`` entries; for a rectangle of (fractional) height h and width
+w on the unit square this is the classical ``C_REC = N^2 * sum_i (h_i+w_i)``
+(paper eq. before (1)).
+
+Implemented baselines:
+
+  even_col      naive equal-column partition (paper "Even-Col")
+  peri_sum      Beaumont et al. [26] column-based partition; the optimal
+                *column-based* layout found by an O(p^2) DP over the areas
+                sorted in non-increasing order (their 1.75-approximation)
+  recursive     Nagamochi-Abe [29] style recursive guillotine bisection
+                (1.25-approximation)
+  nrrp          Beaumont et al. [30] non-rectangular recursive partition:
+                the same recursion but 2-processor leaves may use the
+                square-corner (non-rectangular) layout from DeFlumere [28]
+  rect_lower_bound   Ballard et al. [25]: C >= 2 * N * sum_i sqrt(s_i)
+
+Everything is computed on the unit square with fractional areas
+``f_i = s_i / N^2`` and scaled back: a unit-square (rows+cols) sum ``c``
+corresponds to a volume of ``c * N^2`` matrix entries.
+
+LBP's volume is ``2 N^2`` regardless of the split (paper Theorem 1), which
+these baselines are compared against in benchmarks/fig6a.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Piece:
+    """One processor's share of the output matrix.
+
+    ``cost`` = fraction of rows covered + fraction of columns covered
+    (for a rectangle: h + w; for non-rectangular shapes: their coverage).
+    ``area`` = fraction of the output owned (=> compute load).
+    """
+
+    proc: int
+    area: float
+    cost: float
+    kind: str = "rect"
+
+
+@dataclasses.dataclass(frozen=True)
+class RectPartition:
+    pieces: List[Piece]
+
+    def cost_unit(self) -> float:
+        """sum_i (rows_i + cols_i) on the unit square."""
+        return float(sum(p.cost for p in self.pieces))
+
+    def comm_volume(self, N: int) -> float:
+        """Total entries sent = N^2 * unit cost."""
+        return self.cost_unit() * float(N) * float(N)
+
+    def areas(self, p: int) -> np.ndarray:
+        out = np.zeros(p)
+        for pc in self.pieces:
+            out[pc.proc] += pc.area
+        return out
+
+
+def _norm_areas(areas: Sequence[float]) -> np.ndarray:
+    f = np.asarray(areas, dtype=np.float64)
+    assert np.all(f >= 0) and f.sum() > 0
+    return f / f.sum()
+
+
+# ---------------------------------------------------------------------------
+# Even-Col
+# ---------------------------------------------------------------------------
+
+def even_col(p: int) -> RectPartition:
+    """p equal-width full-height columns (ignores heterogeneity)."""
+    w = 1.0 / p
+    return RectPartition([Piece(i, w, 1.0 + w) for i in range(p)])
+
+
+# ---------------------------------------------------------------------------
+# PERI-SUM: optimal column-based partition via DP (Beaumont et al. 2001)
+# ---------------------------------------------------------------------------
+
+def peri_sum(areas: Sequence[float]) -> RectPartition:
+    """Optimal *column-based* partition.
+
+    Sort areas in non-increasing order; group them into contiguous columns.
+    A column holding areas ``f_a..f_b`` has width ``W = sum f`` and each
+    rectangle spans the full column width with height ``f_i / W``.  Column
+    cost = (#rects)*W + 1 (heights sum to 1).  DP minimizes the total.
+    """
+    f = _norm_areas(areas)
+    order = np.argsort(-f)
+    fs = f[order]
+    p = len(fs)
+    pref = np.concatenate([[0.0], np.cumsum(fs)])
+
+    INF = float("inf")
+    best = np.full(p + 1, INF)
+    best[0] = 0.0
+    choice = np.zeros(p + 1, dtype=np.int64)
+    for i in range(1, p + 1):
+        for j in range(i):
+            width = pref[i] - pref[j]
+            c = best[j] + (i - j) * width + 1.0
+            if c < best[i]:
+                best[i] = c
+                choice[i] = j
+
+    pieces: List[Piece] = []
+    i = p
+    cols: List[Tuple[int, int]] = []
+    while i > 0:
+        j = int(choice[i])
+        cols.append((j, i))
+        i = j
+    for (j, i) in cols:
+        width = pref[i] - pref[j]
+        for t in range(j, i):
+            h = fs[t] / width if width > 0 else 0.0
+            pieces.append(Piece(int(order[t]), fs[t], width + h))
+    return RectPartition(pieces)
+
+
+# ---------------------------------------------------------------------------
+# Recursive guillotine bisection (Nagamochi-Abe style) and NRRP
+# ---------------------------------------------------------------------------
+
+def _balanced_split(idx: np.ndarray, f: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Greedy split of the index set into two groups with near-equal area."""
+    order = idx[np.argsort(-f[idx])]
+    g1: List[int] = []
+    g2: List[int] = []
+    s1 = s2 = 0.0
+    for t in order:
+        if s1 <= s2:
+            g1.append(int(t))
+            s1 += f[t]
+        else:
+            g2.append(int(t))
+            s2 += f[t]
+    return np.asarray(g1, dtype=np.int64), np.asarray(g2, dtype=np.int64)
+
+
+def _recurse(w: float, h: float, idx: np.ndarray, f: np.ndarray,
+             out: List[Piece], square_corner: bool) -> None:
+    if len(idx) == 1:
+        out.append(Piece(int(idx[0]), w * h, w + h))
+        return
+    if square_corner and len(idx) == 2:
+        # DeFlumere square-corner: the smaller share becomes a square in the
+        # corner (side a); the other takes the L-shape, which covers all rows
+        # and all columns of this sub-rectangle (cost w + h).
+        a_idx, b_idx = (idx[0], idx[1]) if f[idx[0]] >= f[idx[1]] else (idx[1], idx[0])
+        total = f[idx[0]] + f[idx[1]]
+        side = float(np.sqrt((f[b_idx] / total) * w * h))
+        if side <= min(w, h):
+            if w >= h:
+                w1 = w * (f[a_idx] / total)
+                guillotine = (h + w1) + (h + (w - w1))
+            else:
+                h1 = h * (f[a_idx] / total)
+                guillotine = (w + h1) + (w + (h - h1))
+            corner = 2.0 * side + (w + h)
+            if corner < guillotine:
+                out.append(Piece(int(b_idx), side * side, 2.0 * side, "square"))
+                out.append(Piece(int(a_idx), w * h - side * side, w + h, "L"))
+                return
+        # fall through to guillotine
+    g1, g2 = _balanced_split(idx, f)
+    s1, s2 = f[g1].sum(), f[g2].sum()
+    r = s1 / (s1 + s2)
+    if w >= h:
+        _recurse(w * r, h, g1, f, out, square_corner)
+        _recurse(w * (1 - r), h, g2, f, out, square_corner)
+    else:
+        _recurse(w, h * r, g1, f, out, square_corner)
+        _recurse(w, h * (1 - r), g2, f, out, square_corner)
+
+
+def recursive(areas: Sequence[float]) -> RectPartition:
+    """Recursive guillotine bisection (all-rectangular leaves)."""
+    f = _norm_areas(areas)
+    out: List[Piece] = []
+    _recurse(1.0, 1.0, np.arange(len(f)), f, out, False)
+    return RectPartition(out)
+
+
+def nrrp(areas: Sequence[float]) -> RectPartition:
+    """Recursive partition with non-rectangular (square-corner) 2-proc leaves."""
+    f = _norm_areas(areas)
+    out: List[Piece] = []
+    _recurse(1.0, 1.0, np.arange(len(f)), f, out, True)
+    return RectPartition(out)
+
+
+# ---------------------------------------------------------------------------
+# Bounds
+# ---------------------------------------------------------------------------
+
+def rect_lower_bound_volume(areas: Sequence[float], N: int) -> float:
+    """Ballard et al. [25]: C_REC >= 2 N sum_i sqrt(s_i); s_i = f_i N^2."""
+    f = _norm_areas(areas)
+    return float(2.0 * N * np.sum(np.sqrt(f * N * N)))
+
+
+def lbp_volume(N: int) -> float:
+    """Paper Theorem 1: LBP always reaches the global lower bound 2 N^2."""
+    return 2.0 * float(N) * float(N)
+
+
+# ---------------------------------------------------------------------------
+# Finish time of a partition on a star network (PCCS mode)
+# ---------------------------------------------------------------------------
+
+def star_finish_time(partition: RectPartition, net, N: int) -> float:
+    """PCCS finish time of a partition on a star network.
+
+    A piece with unit-square coverage ``cost`` and area ``area`` receives
+    ``cost * N^2`` entries and performs ``area * N^3`` multiply-accumulates.
+    """
+    comm = np.zeros(net.p)
+    comp = np.zeros(net.p)
+    n2 = float(N) * float(N)
+    for pc in partition.pieces:
+        comm[pc.proc] += pc.cost * n2 * net.z[pc.proc] * net.t_cm
+        comp[pc.proc] += pc.area * n2 * float(N) * net.w[pc.proc] * net.t_cp
+    return float(np.max(comm + comp))
+
+
+def speed_proportional_areas(net) -> np.ndarray:
+    """Load shares proportional to compute speed 1/w_i (paper §6.1.3:
+    'each share of load is proportional to that processor's computing
+    ability')."""
+    inv = 1.0 / net.w
+    return inv / inv.sum()

@@ -1,0 +1,154 @@
+"""Closed-form LBP load-balancing solvers for single-neighbor (star) networks.
+
+Paper §4: all processors must finish at the same time (Theorem 2, from
+Bharadwaj et al.'s divisible-load monograph).  Four communication modes:
+
+  SCSS  Sequential Communication, Simultaneous Start   (eqs 5-12)
+  SCCS  Sequential Communication, Consecutive Start    (eqs 13-20)
+  PCCS  Parallel Communication,  Consecutive Start     (eqs 21-28)
+  PCSS  Parallel Communication,  Simultaneous Start    (eqs 29-33)
+
+Each solver returns the real-valued optimal split ``k`` (k_i >= 0, sum = N)
+and the overall finishing time T_f.  Integer rounding lives in
+``integer_adjust.py`` (§4.5).
+
+Degenerate handling: in SCSS the recurrence factor
+``(N w_{j-1} Tcp - 2 z_{j-1} Tcm) / (N w_j Tcp)`` can be <= 0 when a link is
+so slow that transmitting processor j-1's share takes longer than computing
+it; then processors j..p receive no load (k=0).  The paper implicitly
+assumes the positive regime; we guard it explicitly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import numpy as np
+
+from .network import StarNetwork
+
+Mode = str  # "SCSS" | "SCCS" | "PCCS" | "PCSS"
+
+
+@dataclasses.dataclass(frozen=True)
+class StarSchedule:
+    mode: Mode
+    k: np.ndarray          # (p,) real-valued layer counts, sum = N
+    finish_time: float     # T_f
+    comm_volume: float     # total source->children volume = 2 * N * sum(k) = 2N^2
+
+
+def _cumprod_ratios(ratios: np.ndarray) -> np.ndarray:
+    """[1, r_2, r_2*r_3, ...] with clamping at the first non-positive ratio."""
+    p = ratios.shape[0] + 1
+    out = np.ones(p)
+    for i in range(1, p):
+        r = ratios[i - 1]
+        out[i] = out[i - 1] * r if r > 0 else 0.0
+        if out[i] <= 0:
+            out[i:] = 0.0
+            break
+    return out
+
+
+def solve_scss(net: StarNetwork, N: int) -> StarSchedule:
+    """Eqs (10)-(12): k_i = k_1 * prod_{j=2..i} (N w_{j-1} Tcp - 2 z_{j-1} Tcm)/(N w_j Tcp)."""
+    w, z, tcp, tcm = net.w, net.z, net.t_cp, net.t_cm
+    num = N * w[:-1] * tcp - 2.0 * z[:-1] * tcm
+    den = N * w[1:] * tcp
+    coef = _cumprod_ratios(num / den)
+    k1 = N / coef.sum()
+    k = coef * k1
+    tf = float(k[0] * N * N * w[0] * tcp)  # eq (12)
+    return StarSchedule("SCSS", k, tf, 2.0 * N * float(k.sum()))
+
+
+def solve_sccs(net: StarNetwork, N: int) -> StarSchedule:
+    """Eqs (18)-(20): k_i = k_1 * prod_{j=2..i} (N w_{j-1} Tcp)/(N w_j Tcp + 2 z_j Tcm)."""
+    w, z, tcp, tcm = net.w, net.z, net.t_cp, net.t_cm
+    num = N * w[:-1] * tcp
+    den = N * w[1:] * tcp + 2.0 * z[1:] * tcm
+    coef = _cumprod_ratios(num / den)
+    k1 = N / coef.sum()
+    k = coef * k1
+    tf = float(k[0] * N * N * w[0] * tcp + 2.0 * k[0] * N * z[0] * tcm)  # eq (20)
+    return StarSchedule("SCCS", k, tf, 2.0 * N * float(k.sum()))
+
+
+def solve_pccs(net: StarNetwork, N: int) -> StarSchedule:
+    """Eqs (26)-(28): k_i proportional to 1/(N w_i Tcp + 2 z_i Tcm)."""
+    w, z, tcp, tcm = net.w, net.z, net.t_cp, net.t_cm
+    cost = N * w * tcp + 2.0 * z * tcm       # per-unit-k finishing cost
+    coef = cost[0] / cost                    # == prod form of eq (26)
+    k1 = N / coef.sum()
+    k = coef * k1
+    tf = float(k[0] * N * N * w[0] * tcp + 2.0 * k[0] * N * z[0] * tcm)  # eq (28)
+    return StarSchedule("PCCS", k, tf, 2.0 * N * float(k.sum()))
+
+
+def solve_pcss(net: StarNetwork, N: int) -> StarSchedule:
+    """Eqs (31)-(33): k_i proportional to 1/w_i (pure compute balance)."""
+    w, tcp = net.w, net.t_cp
+    coef = w[0] / w
+    k1 = N / coef.sum()
+    k = coef * k1
+    tf = float(k[0] * N * N * w[0] * tcp)  # eq (33)
+    return StarSchedule("PCSS", k, tf, 2.0 * N * float(k.sum()))
+
+
+SOLVERS: Dict[Mode, Callable[[StarNetwork, int], StarSchedule]] = {
+    "SCSS": solve_scss,
+    "SCCS": solve_sccs,
+    "PCCS": solve_pccs,
+    "PCSS": solve_pcss,
+}
+
+
+def solve(net: StarNetwork, N: int, mode: Mode = "PCCS") -> StarSchedule:
+    return SOLVERS[mode](net, N)
+
+
+def finish_time_for_split(net: StarNetwork, N: int, k: np.ndarray, mode: Mode) -> float:
+    """Simulate T_f for an *arbitrary* (e.g. integer-rounded) split.
+
+    Mirrors the timing diagrams of Figs 3-4.  Used by §4.5 integer
+    adjustment and by the benchmarks to evaluate rounded schedules.
+    """
+    w, z, tcp, tcm = net.w, net.z, net.t_cp, net.t_cm
+    k = np.asarray(k, dtype=np.float64)
+    comp = k * N * N * w * tcp          # compute duration per processor
+    comm = 2.0 * k * N * z * tcm        # transmission duration per processor
+    if mode == "PCSS":
+        # all links start at t=0, compute overlaps communication
+        return float(np.max(comp))
+    if mode == "PCCS":
+        return float(np.max(comm + comp))
+    if mode == "SCSS":
+        # source sends sequentially; processor i computes while receiving,
+        # so P_i starts at the end of transmissions 1..i-1.
+        start = np.concatenate([[0.0], np.cumsum(comm)[:-1]])
+        return float(np.max(start + comp))
+    if mode == "SCCS":
+        # sequential sends; P_i starts after *its own* transmission completes.
+        end_comm = np.cumsum(comm)
+        return float(np.max(end_comm + comp))
+    raise ValueError(mode)
+
+
+def per_processor_finish(net: StarNetwork, N: int, k: np.ndarray, mode: Mode) -> np.ndarray:
+    """Per-processor finish times T_f(i) for a given split (same model as above)."""
+    w, z, tcp, tcm = net.w, net.z, net.t_cp, net.t_cm
+    k = np.asarray(k, dtype=np.float64)
+    comp = k * N * N * w * tcp
+    comm = 2.0 * k * N * z * tcm
+    if mode == "PCSS":
+        return comp
+    if mode == "PCCS":
+        return comm + comp
+    if mode == "SCSS":
+        start = np.concatenate([[0.0], np.cumsum(comm)[:-1]])
+        return start + comp
+    if mode == "SCCS":
+        return np.cumsum(comm) + comp
+    raise ValueError(mode)

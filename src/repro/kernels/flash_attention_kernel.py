@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: blocked online-softmax (flash) attention.
+
+Attention is the second compute hot-spot of the assigned LM architectures
+(32k prefill).  The same LBP idea used for the matmul kernel applies to the
+KV axis: the KV-block grid dimension plays the role of the paper's layers —
+each step contributes one partial (softmax-weighted) layer of the output
+tile, accumulated in VMEM with the numerically-stable online rescaling, and
+the output is written to HBM once, on the last KV block.
+
+Grid ``(BH, S/bq, T/bk)`` with KV innermost (arbitrary semantics — the
+running max / denominator / accumulator carry across KV steps in VMEM
+scratch).  Causal masking skips fully-masked KV blocks via pl.when.
+
+VMEM per cell (bq=bk=512, D<=256, f32): q 0.5 + k 0.5 + v 0.5 + acc 0.5 MB
++ m/l negligible — comfortably under v5e's 16 MB with double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, n_kv: int, block_q: int, block_k: int, causal: bool,
+                  scale: float):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: KV block j is live iff its first col <= last row of q block i
+    live = (j * block_k <= i * block_q + block_q - 1) if causal else True
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)            # (bq, d)
+        k = k_ref[0].astype(jnp.float32)            # (bk, d)
+        v = v_ref[0].astype(jnp.float32)            # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        if causal:
+            rows = i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        m_prev = m_ref[...]                          # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)                       # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)              # (bq, 1)
+        l_ref[...] = alpha * l_ref[...] + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _done():
+        o_ref[0, ...] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (BH, S, D), k/v: (BH, T, D) -> (BH, S, D).
+
+    S % block_q == 0 and T % block_k == 0 (ops.py pads).
+    """
+    BH, S, D = q.shape
+    _, T, _ = k.shape
+    assert k.shape == (BH, T, D) and v.shape == (BH, T, D)
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0
+    scale = float(scale) if scale is not None else float(D) ** -0.5
+    n_kv = T // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, n_kv=n_kv, block_q=block_q, block_k=block_k,
+        causal=causal, scale=scale)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, S // block_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denominator
+            pltpu.VMEM((block_q, D), jnp.float32),   # output accumulator
+        ],
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: blocked RG-LRU linear recurrence (recurrentgemma).
+
+The RG-LRU update (Griffin, arXiv:2402.19427) after gate precomputation is a
+per-channel gated linear recurrence
+
+    h_t = a_t * h_{t-1} + b_t,        a_t in (0,1),  b_t = sqrt(1-a_t^2) * gated_x_t
+
+which has no contraction dimension, so the paper's layer partition does not
+apply (DESIGN.md §Arch-applicability); it is instead embarrassingly parallel
+over (batch, channel).  The kernel tiles channels into VMEM blocks — grid
+``(B, D/bd)`` — and runs the time loop inside the kernel with the carry held
+in VREGs, streaming one (1, S_chunk, bd) block of a/b per grid cell.  Long
+sequences are chunked by the ops.py wrapper, carrying h between chunks.
+
+VMEM per cell (defaults S_chunk=256, bd=512, f32):
+  a + b blocks: 2 * 256*512*4 = 1.0 MB, out 0.5 MB, carry negligible.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, hend_ref, *, seq_len: int):
+    def body(t, h):
+        a = a_ref[0, t, :]
+        b = b_ref[0, t, :]
+        h = a * h + b
+        o_ref[0, pl.dslice(t, 1), :] = h[None, :]
+        return h
+
+    h = jax.lax.fori_loop(0, seq_len, body, h0_ref[0, :])
+    hend_ref[0, :] = h
+
+
+def rglru_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    h0: jax.Array,
+    *,
+    block_d: int = 512,
+    interpret: bool = False,
+):
+    """One chunk of the recurrence.
+
+    a, b: (B, S, D) decay / input;  h0: (B, D) carry.
+    Returns (h: (B, S, D), h_end: (B, D)).  D must divide by block_d
+    (ops.py pads).
+    """
+    B, S, D = a.shape
+    assert b.shape == (B, S, D) and h0.shape == (B, D)
+    block_d = min(block_d, D)
+    assert D % block_d == 0, (D, block_d)
+
+    kernel = functools.partial(_rglru_kernel, seq_len=S)
+    grid = (B, D // block_d)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, S, block_d), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, S, block_d), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, block_d), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, S, block_d), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, block_d), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, D), a.dtype),
+            jax.ShapeDtypeStruct((B, D), h0.dtype),
+        ],
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(a, b, h0)

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: weight-stationary sLSTM recurrence.
+
+§Perf finding (EXPERIMENTS.md): at the XLA level the sLSTM scan re-reads
+its per-head recurrent matrices R_{z,i,f,o} (hd x hd each) from HBM on
+EVERY timestep — ~16.8 MB x S x n_blocks, the dominant memory term of the
+xlstm arch (hundreds of seconds on the roofline).  The fix is structural
+and kernel-shaped: keep R resident in VMEM across the time loop
+(weight-stationary), stream only the 4 gate pre-activations per step.
+
+Grid: (B, H) — one cell per (batch row, head).  VMEM per cell
+(hd=512, f32): 4 R matrices = 4 MB, gate streams (S_chunk, 4*hd) and the
+carry vectors — well under 16 MB for hd <= 512 with single buffering.
+HBM traffic becomes: R once per (B,H) cell + gates once + h once — the
+per-step weight re-reads disappear.
+
+The ops.py wrapper chunks long sequences (carrying c/n/h) like rglru.
+Recurrence (simplified gates, matching models/xlstm.slstm_block):
+    z = tanh(pz_t + h R_z);  i = sig(pi_t + h R_i)
+    f = sig(pf_t + 1 + h R_f);  o = sig(po_t + h R_o)
+    c' = f c + i z;  n' = f n + i;  h' = o c' / max(n', 1e-6)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _slstm_kernel(pz_ref, pi_ref, pf_ref, po_ref, rz_ref, ri_ref, rf_ref,
+                  ro_ref, c0_ref, n0_ref, h0_ref, hs_ref, c_ref, n_ref,
+                  h_ref, *, seq_len: int):
+    rz = rz_ref[0]          # (hd, hd) — VMEM-resident across the time loop
+    ri = ri_ref[0]
+    rf = rf_ref[0]
+    ro = ro_ref[0]
+
+    def body(t, carry):
+        c, n, h = carry
+        hz = jnp.dot(h, rz, preferred_element_type=jnp.float32)
+        hi = jnp.dot(h, ri, preferred_element_type=jnp.float32)
+        hf = jnp.dot(h, rf, preferred_element_type=jnp.float32)
+        ho = jnp.dot(h, ro, preferred_element_type=jnp.float32)
+        z = jnp.tanh(pz_ref[0, t] + hz)
+        i = jax.nn.sigmoid(pi_ref[0, t] + hi)
+        f = jax.nn.sigmoid(pf_ref[0, t] + 1.0 + hf)
+        o = jax.nn.sigmoid(po_ref[0, t] + ho)
+        c = f * c + i * z
+        n = f * n + i
+        h = o * c / jnp.maximum(n, 1e-6)
+        hs_ref[0, pl.dslice(t, 1), :] = h[None, :]
+        return c, n, h
+
+    c, n, h = jax.lax.fori_loop(
+        0, seq_len, body, (c0_ref[0], n0_ref[0], h0_ref[0]))
+    c_ref[0] = c
+    n_ref[0] = n
+    h_ref[0] = h
+
+
+def slstm_pallas(pre, R, state, *, interpret: bool = False):
+    """One chunk of the weight-stationary sLSTM recurrence.
+
+    pre:   dict z/i/f/o -> (B, S, H, hd) gate pre-activations (x-path)
+    R:     dict z/i/f/o -> (H, hd, hd) recurrent matrices
+    state: (c, n, h) each (B, H, hd)
+    Returns (hs: (B, S, H, hd), (c, n, h)).
+    """
+    B, S, H, hd = pre["z"].shape
+    kernel = functools.partial(_slstm_kernel, seq_len=S)
+    grid = (B, H)
+
+    # flatten (B, H) into the leading block dim: gates (B*H, S, hd)
+    pres = {k: v.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+            for k, v in pre.items()}
+    Rs = {k: v for k, v in R.items()}
+    c0, n0, h0 = (s.reshape(B * H, hd) for s in state)
+
+    gate_spec = pl.BlockSpec((1, S, hd), lambda b, h: (b * H + h, 0, 0))
+    r_spec = pl.BlockSpec((1, hd, hd), lambda b, h: (h, 0, 0))
+    st_spec = pl.BlockSpec((1, hd), lambda b, h: (b * H + h, 0))
+
+    hs, c, n, h = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[gate_spec] * 4 + [r_spec] * 4 + [st_spec] * 3,
+        out_specs=[gate_spec, st_spec, st_spec, st_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, hd), jnp.float32),
+        ],
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(pres["z"], pres["i"], pres["f"], pres["o"],
+      Rs["z"], Rs["i"], Rs["f"], Rs["o"], c0, n0, h0)
+
+    hs = hs.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    st = tuple(x.reshape(B, H, hd) for x in (c, n, h))
+    return hs, st

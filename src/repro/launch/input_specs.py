@@ -1,0 +1,133 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+Nothing here allocates: shapes come from ``jax.eval_shape`` over the init
+functions, and the dry-run lowers against these structs (the shannon/kernels
+pattern: weak-type-correct, shardable, no device memory).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import get_config
+from ..configs.shapes import SHAPES, ShapeCell
+from ..models import transformer as T
+from ..models.config import ModelConfig
+from ..optim.adamw import AdamWConfig
+from ..sharding.rules import Rules, make_rules
+from ..train.step import (batch_specs, default_grad_accum, init_train_state,
+                          make_train_step, train_state_specs)
+from ..serve.step import make_decode_step, make_prefill_step
+
+
+class CellPlan(NamedTuple):
+    """Everything the dry-run needs to lower one (arch x shape) cell."""
+    arch: str
+    shape: str
+    cfg: ModelConfig
+    rules: Rules
+    fn: Any                    # callable to jit
+    args: Tuple[Any, ...]      # ShapeDtypeStructs
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate: Tuple[int, ...] = ()
+
+
+def _structs(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _as_bf16(tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if jnp.issubdtype(s.dtype, jnp.floating)
+            else s.dtype), tree)
+
+
+def _shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def token_split(cfg: ModelConfig, seq_len: int) -> int:
+    """Tokens per row once the frontend prefix is carved out of seq_len."""
+    return seq_len - cfg.prefix_len
+
+
+def make_plan(arch: str, shape: str, mesh: Mesh,
+              profile_override: Optional[str] = None,
+              grad_accum: Optional[int] = None) -> CellPlan:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    B, S = cell.global_batch, cell.seq_len
+
+    if cell.kind == "train":
+        profile = profile_override or "train"
+        rules = make_rules(profile, mesh)
+        ga = grad_accum or default_grad_accum(cfg)
+        opt_cfg = AdamWConfig()
+        step = make_train_step(cfg, rules, opt_cfg, grad_accum=ga)
+
+        state_shapes = jax.eval_shape(
+            functools.partial(init_train_state, cfg), jax.random.PRNGKey(0))
+        state_specs = train_state_specs(cfg, rules)
+        S_tok = token_split(cfg, S)
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S_tok), jnp.int32)}
+        if cfg.frontend != "none":
+            batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.prefix_len, cfg.d_model), jnp.bfloat16)
+        b_specs = batch_specs(cfg, rules)
+
+        args = (state_shapes, batch)
+        in_sh = (_shardings(mesh, state_specs), _shardings(mesh, b_specs))
+        out_sh = (_shardings(mesh, state_specs),
+                  jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                               {"loss": 0, "grad_norm": 0, "lr": 0}))
+        return CellPlan(arch, shape, cfg, rules, step, args, in_sh, out_sh,
+                        donate=(0,))
+
+    profile = profile_override or ("long" if shape == "long_500k" else cell.kind)
+    rules = make_rules(profile, mesh)
+    params = _as_bf16(jax.eval_shape(
+        functools.partial(T.init_params, cfg), jax.random.PRNGKey(0)))
+    p_specs = T.param_specs(cfg, rules)
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, B, S))
+    c_specs = T.cache_specs(cfg, rules)
+
+    if cell.kind == "prefill":
+        step = make_prefill_step(cfg, rules)
+        S_tok = token_split(cfg, S)
+        tokens = jax.ShapeDtypeStruct((B, S_tok), jnp.int32)
+        args = [params, tokens, cache]
+        in_sh = [_shardings(mesh, p_specs),
+                 NamedSharding(mesh, rules.spec("batch", None)),
+                 _shardings(mesh, c_specs)]
+        if cfg.frontend != "none":
+            args.append(jax.ShapeDtypeStruct(
+                (B, cfg.prefix_len, cfg.d_model), jnp.bfloat16))
+            in_sh.append(NamedSharding(mesh, rules.spec("batch", None, None)))
+        out_sh = (_shardings(mesh, c_specs),
+                  NamedSharding(mesh, rules.spec("batch", "vocab")))
+        return CellPlan(arch, shape, cfg, rules, step, tuple(args),
+                        tuple(in_sh), out_sh, donate=(2,))
+
+    # decode (decode_32k / long_500k): one token against a seq_len cache
+    step = make_decode_step(cfg, rules)
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+    args = (params, token, pos, cache)
+    in_sh = (_shardings(mesh, p_specs),
+             NamedSharding(mesh, rules.spec("batch", None)),
+             NamedSharding(mesh, rules.spec("batch")),
+             _shardings(mesh, c_specs))
+    out_sh = (NamedSharding(mesh, rules.spec("batch")),
+              NamedSharding(mesh, rules.spec("batch", None, "vocab")),
+              _shardings(mesh, c_specs))
+    return CellPlan(arch, shape, cfg, rules, step, args, in_sh, out_sh,
+                    donate=(3,))

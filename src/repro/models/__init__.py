@@ -1,0 +1,11 @@
+"""Model zoo substrate: decoder-only LM families (dense / MoE / hybrid / ssm).
+
+config.py       ModelConfig (+ reduced smoke variants)
+layers.py       RMSNorm, RoPE, SwiGLU, embeddings, chunked sharded xent
+attention.py    GQA with custom-VJP chunked online-softmax (flash at XLA
+                level), local-window variant, KV-cache decode
+moe.py          top-k router + sort-based capacity dispatch (EP)
+rglru.py        RG-LRU recurrent block (recurrentgemma)
+xlstm.py        chunkwise mLSTM + sLSTM blocks
+transformer.py  block assembly (scan over layers, remat), init, train/serve
+"""

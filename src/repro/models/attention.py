@@ -1,0 +1,257 @@
+"""GQA attention: custom-VJP chunked online-softmax (flash at the XLA level).
+
+Why custom VJP: plain AD through a scanned online-softmax stores per-tile
+residuals — the full (S, T) score matrix again — which is exactly what flash
+attention exists to avoid.  The forward saves only (q, k, v, out, lse); the
+backward recomputes tiles (the classical flash backward), so train-time
+activation memory for 32k sequences stays O(S·d) per layer.
+
+This is the portable XLA implementation used by the models everywhere (and
+the only executable path on this CPU container).  The Pallas kernel
+(kernels/flash_attention_kernel.py) is the TPU hot-path with the same
+blocking scheme; tests assert all three (ref / XLA-flash / Pallas-interpret)
+agree.
+
+Layout: q (B, S, KV, G, hd) — GQA groups explicit; k, v (B, T, KV, hd).
+``window > 0`` restricts attention to the trailing window (recurrentgemma
+local attention): tiles outside the band are skipped by loop bounds, so
+compute is O(S * (window + chunk)), sub-quadratic in S.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def _pick_chunk(size: int, want: int) -> int:
+    want = min(want, size)
+    while size % want:
+        want -= 1
+    return want
+
+
+def _mask(i, j, qc, kvc, causal, window):
+    rows = i * qc + jax.lax.broadcasted_iota(jnp.int32, (qc, kvc), 0)
+    cols = j * kvc + jax.lax.broadcasted_iota(jnp.int32, (qc, kvc), 1)
+    ok = jnp.ones((qc, kvc), bool)
+    if causal:
+        ok &= cols <= rows
+    if window > 0:
+        ok &= cols > rows - window
+    return ok
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention_xla(q, k, v, causal: bool = True, window: int = 0,
+                        q_chunk: int = 512, kv_chunk: int = 1024):
+    out, _ = _fwd_impl(q, k, v, causal, window, q_chunk, kv_chunk)
+    return out
+
+
+def _bounds(i, qc, kvc, T, causal, window):
+    """KV-chunk loop bounds for q chunk i (traced)."""
+    n_kv = T // kvc
+    if causal:
+        hi = jnp.minimum((i * qc + qc + kvc - 1) // kvc, n_kv)
+    else:
+        hi = jnp.asarray(n_kv)
+    if window > 0:
+        # smallest visible col across the whole chunk belongs to its FIRST
+        # row: col_min = i*qc - window + 1
+        lo = jnp.maximum((i * qc - window + 1) // kvc, 0)
+        lo = jnp.minimum(lo, hi)
+    else:
+        lo = jnp.asarray(0)
+    return lo, hi
+
+
+def _fwd_impl(q, k, v, causal, window, q_chunk, kv_chunk):
+    B, S, KV, G, hd = q.shape
+    T = k.shape[1]
+    qc = _pick_chunk(S, q_chunk)
+    kvc = _pick_chunk(T, kv_chunk)
+    scale = float(hd) ** -0.5
+    nq = S // qc
+
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def q_step(i):
+        qi = jax.lax.dynamic_slice_in_dim(q, i * qc, qc, 1).astype(jnp.float32)
+        lo, hi = _bounds(i, qc, kvc, T, causal, window)
+
+        def kv_step(j, carry):
+            m, l, acc = carry
+            kj = jax.lax.dynamic_slice_in_dim(kf, j * kvc, kvc, 1)
+            vj = jax.lax.dynamic_slice_in_dim(vf, j * kvc, kvc, 1)
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qi, kj) * scale
+            ok = _mask(i, j, qc, kvc, causal, window)
+            s = jnp.where(ok[None, None, None], s, NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # explicit zero on masked entries: on an all-masked row
+            # (m_new == NEG) exp(s - m_new) would be exp(0) = 1.
+            p = jnp.where(ok[None, None, None],
+                          jnp.exp(s - m_new[..., None]), 0.0)
+            alpha = jnp.exp(jnp.minimum(m - m_new, 0.0))
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum("bkgqt,btkd->bkgqd", p, vj)
+            return m_new, l, acc
+
+        m0 = jnp.full((B, KV, G, qc), NEG, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, qc, hd), jnp.float32)
+        m, l, acc = jax.lax.fori_loop(lo, hi, kv_step, (m0, l0, a0))
+        l_safe = jnp.maximum(l, 1e-30)
+        oi = (acc / l_safe[..., None])                     # (B,KV,G,qc,hd)
+        lse = m + jnp.log(l_safe)                          # (B,KV,G,qc)
+        return oi.transpose(0, 3, 1, 2, 4).astype(q.dtype), lse
+
+    ois, lses = jax.lax.map(q_step, jnp.arange(nq))
+    out = jnp.moveaxis(ois, 0, 1).reshape(B, S, KV, G, hd)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(B, KV, G, S)
+    return out, lse
+
+
+def _fwd(q, k, v, causal, window, q_chunk, kv_chunk):
+    out, lse = _fwd_impl(q, k, v, causal, window, q_chunk, kv_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd(causal, window, q_chunk, kv_chunk, res, dout):
+    q, k, v, out, lse = res
+    B, S, KV, G, hd = q.shape
+    T = k.shape[1]
+    qc = _pick_chunk(S, q_chunk)
+    kvc = _pick_chunk(T, kv_chunk)
+    scale = float(hd) ** -0.5
+    nq, nkv = S // qc, T // kvc
+
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    dof = dout.astype(jnp.float32)
+    # D_i = rowsum(dout * out): (B, KV, G, S)
+    Dfull = jnp.einsum("bskgd,bskgd->bkgs", dof, out.astype(jnp.float32))
+
+    def tile(qi, kj, vj, lse_i, D_i, doi, i, j):
+        """Recompute p and ds for tile (i, j); returns (p, ds)."""
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qi, kj) * scale
+        ok = _mask(i, j, qc, kvc, causal, window)
+        s = jnp.where(ok[None, None, None], s, NEG)
+        p = jnp.exp(s - lse_i[..., None])                  # (B,KV,G,qc,kvc)
+        dp = jnp.einsum("bqkgd,btkd->bkgqt", doi, vj)
+        ds = p * (dp - D_i[..., None]) * scale
+        return p, ds
+
+    # ---- dq: map over q chunks, loop over the kv band ----
+    def dq_step(i):
+        qi = jax.lax.dynamic_slice_in_dim(qf, i * qc, qc, 1)
+        doi = jax.lax.dynamic_slice_in_dim(dof, i * qc, qc, 1)
+        lse_i = jax.lax.dynamic_slice_in_dim(lse, i * qc, qc, 3)
+        D_i = jax.lax.dynamic_slice_in_dim(Dfull, i * qc, qc, 3)
+        lo, hi = _bounds(i, qc, kvc, T, causal, window)
+
+        def kv_step(j, dqi):
+            kj = jax.lax.dynamic_slice_in_dim(kf, j * kvc, kvc, 1)
+            vj = jax.lax.dynamic_slice_in_dim(vf, j * kvc, kvc, 1)
+            _, ds = tile(qi, kj, vj, lse_i, D_i, doi, i, j)
+            return dqi + jnp.einsum("bkgqt,btkd->bqkgd", ds, kj)
+
+        dqi = jax.lax.fori_loop(lo, hi, kv_step,
+                                jnp.zeros((B, qc, KV, G, hd), jnp.float32))
+        return dqi
+
+    dq = jnp.moveaxis(jax.lax.map(dq_step, jnp.arange(nq)), 0, 1)
+    dq = dq.reshape(B, S, KV, G, hd)
+
+    # ---- dk/dv: map over kv chunks, loop over the q band ----
+    def dkv_step(j):
+        kj = jax.lax.dynamic_slice_in_dim(kf, j * kvc, kvc, 1)
+        vj = jax.lax.dynamic_slice_in_dim(vf, j * kvc, kvc, 1)
+        if causal:
+            ilo = (j * kvc) // qc
+        else:
+            ilo = jnp.asarray(0)
+        if window > 0:
+            ihi = jnp.minimum((j * kvc + kvc - 1 + window) // qc + 1, nq)
+        else:
+            ihi = jnp.asarray(nq)
+
+        def q_step(i, carry):
+            dkj, dvj = carry
+            qi = jax.lax.dynamic_slice_in_dim(qf, i * qc, qc, 1)
+            doi = jax.lax.dynamic_slice_in_dim(dof, i * qc, qc, 1)
+            lse_i = jax.lax.dynamic_slice_in_dim(lse, i * qc, qc, 3)
+            D_i = jax.lax.dynamic_slice_in_dim(Dfull, i * qc, qc, 3)
+            p, ds = tile(qi, kj, vj, lse_i, D_i, doi, i, j)
+            dkj = dkj + jnp.einsum("bkgqt,bqkgd->btkd", ds, qi)
+            dvj = dvj + jnp.einsum("bkgqt,bqkgd->btkd", p, doi)
+            return dkj, dvj
+
+        z = jnp.zeros((B, kvc, KV, hd), jnp.float32)
+        return jax.lax.fori_loop(ilo, ihi, q_step, (z, z))
+
+    dks, dvs = jax.lax.map(dkv_step, jnp.arange(nkv))
+    dk = jnp.moveaxis(dks, 0, 1).reshape(B, T, KV, hd)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(B, T, KV, hd)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention_xla.defvjp(_fwd, _bwd)
+
+
+# ---------------------------------------------------------------------------
+# decode (single new token against a cache) — no grad needed
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0):
+    """q: (B, 1, KV, G, hd); caches: (B, T, KV, hd); pos: (B,) current index.
+
+    Attends to cache positions <= pos (and > pos - window if windowed).
+
+    The cache stays in its storage dtype (bf16) inside the einsums with f32
+    accumulation — an explicit .astype(f32) would materialize a full f32
+    COPY of the cache (2x HBM read + a write), which the §Perf pass found
+    to halve decode's useful-bandwidth ratio.
+    """
+    B, _, KVh, G, hd = q.shape
+    T = k_cache.shape[1]
+    scale = float(hd) ** -0.5
+    s = jnp.einsum("bqkgd,btkd->bkgqt", q.astype(k_cache.dtype), k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    t_idx = jnp.arange(T)[None, :]                     # (1, T)
+    ok = t_idx <= pos[:, None]
+    if window > 0:
+        ok &= t_idx > (pos[:, None] - window)
+    s = jnp.where(ok[:, None, None, None, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def reference_attention(q, k, v, causal=True, window: int = 0):
+    """Naive oracle in the same (B,S,KV,G,hd) layout (tests only)."""
+    B, S, KV, G, hd = q.shape
+    T = k.shape[1]
+    scale = float(hd) ** -0.5
+    s = jnp.einsum("bqkgd,btkd->bkgqt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(T)[None, :]
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok &= cols <= rows
+    if window > 0:
+        ok &= cols > rows - window
+    s = jnp.where(ok[None, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgqt,btkd->bqkgd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

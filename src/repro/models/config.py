@@ -1,0 +1,157 @@
+"""ModelConfig: one dataclass describes every assigned architecture.
+
+``tp`` is the tensor-parallel quantum: q-head counts are padded up to a
+multiple of it at parameter-shape time (DESIGN.md §5; the padding waste is
+visible in the roofline's MODEL_FLOPS / HLO_FLOPs ratio).  KV heads are
+never padded — when ``n_kv_heads % tp != 0`` the KV tensors replicate over
+the model axis instead (make_rules drops their sharding).
+
+``reduced()`` produces the small same-family variant used by the CPU smoke
+tests (few layers, narrow, tiny vocab, few experts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    # hybrid (recurrentgemma): block pattern unit, e.g. ("R","R","A")
+    block_pattern: Tuple[str, ...] = ()
+    window: int = 0             # local-attention window
+    lru_width: int = 0          # RG-LRU width (0 -> d_model)
+    conv_width: int = 4
+    # ssm (xlstm): blocks per macro-group, mLSTM:sLSTM ratio
+    mlstm_per_group: int = 0    # e.g. 7 (with 1 sLSTM per group)
+    mlstm_chunk: int = 64
+    # frontend stub
+    frontend: str = "none"      # none | audio_frames | vision_patches
+    prefix_len: int = 0         # frontend prefix tokens inside seq_len
+    # distribution
+    tp: int = 16                # head-padding quantum (1 for reduced configs)
+    dtype: str = "bfloat16"
+
+    # ------------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def h_padded(self) -> int:
+        """q heads padded to a multiple of tp (parameter shapes use this)."""
+        return math.ceil(self.n_heads / self.tp) * self.tp
+
+    @property
+    def kv_param(self) -> int:
+        """KV heads in parameters/caches: MHA pads with q; GQA keeps true KV."""
+        return self.h_padded if self.n_kv_heads == self.n_heads else self.n_kv_heads
+
+    @property
+    def kv_flash(self) -> int:
+        """KV heads inside flash attention: repeated transiently to the
+        smallest multiple of both kv_param and tp, so head compute shards
+        tp-ways even when true KV < tp (llama 8, qwen3-moe 4, MQA 1)."""
+        kv = self.kv_param
+        return kv * (self.tp // math.gcd(kv, self.tp))
+
+    @property
+    def kv_sharded(self) -> bool:
+        return self.kv_param % self.tp == 0
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def lru(self) -> int:
+        return self.lru_width or self.d_model
+
+    def n_params(self) -> int:
+        """Total parameter count (true heads, no TP padding)."""
+        d, hd = self.d_model, self.hd
+        n = self.vocab_size * d  # embed (tied)
+        if not self.tie_embeddings:
+            n += self.vocab_size * d
+        if self.family == "ssm":
+            per = 3 * d * d + d * self.n_heads * 2 + d * d + d * d  # qkv,i/f,o,out
+            n += self.n_layers * per
+            return n
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd \
+            + self.n_heads * hd * d
+        if self.is_moe:
+            ffn = d * self.n_experts + 3 * self.n_experts * d * self.d_ff
+        else:
+            ffn = 3 * d * self.d_ff
+        if self.block_pattern:
+            unit = self.block_pattern
+            n_attn = sum(1 for b in unit if b == "A")
+            n_rec = sum(1 for b in unit if b == "R")
+            groups = self.n_layers // len(unit)
+            rec = 2 * d * self.lru + self.conv_width * self.lru \
+                + 2 * self.lru + self.lru * d
+            n += groups * (n_attn * attn + n_rec * rec) \
+                + self.n_layers * ffn  # every layer has an MLP
+            tail = self.n_layers - groups * len(unit)
+            n += tail * rec
+        else:
+            n += self.n_layers * (attn + ffn)
+        return n
+
+    def n_active_params(self) -> int:
+        """Parameters touched per token (MoE: only routed experts)."""
+        if not self.is_moe:
+            return self.n_params()
+        d = self.d_model
+        dense = self.n_params() - 3 * self.n_layers * self.n_experts * d * self.d_ff
+        return dense + 3 * self.n_layers * self.experts_per_token * d * self.d_ff
+
+    # ------------------------------------------------------------------
+    def reduced(self, **over) -> "ModelConfig":
+        """Small same-family variant for CPU smoke tests."""
+        base = dict(
+            name=self.name + "-reduced",
+            n_layers=min(self.n_layers, 4 if not self.block_pattern else 5),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            d_ff=128,
+            vocab_size=256,
+            head_dim=16,
+            tp=1,
+        )
+        if self.is_moe:
+            # capacity 4.0: no token drops at smoke sizes, so serving
+            # (prefill+decode) is exactly consistent with the full forward
+            # (capacity-dropping depends on batch size by construction).
+            base.update(n_experts=8, experts_per_token=2, d_ff=32,
+                        capacity_factor=4.0)
+        if self.block_pattern:
+            base.update(block_pattern=self.block_pattern, window=16,
+                        lru_width=64, n_layers=5)
+        if self.family == "ssm":
+            base.update(mlstm_per_group=self.mlstm_per_group, n_layers=8,
+                        n_heads=2, head_dim=32, mlstm_chunk=8, d_ff=0)
+        if self.frontend != "none":
+            base.update(frontend=self.frontend, prefix_len=4)
+        base.update(over)
+        return dataclasses.replace(self, **base)

@@ -1,0 +1,114 @@
+"""Shared layers: RMSNorm, RoPE, SwiGLU, embedding, sharded chunked xent."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.rules import Rules, shard
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding.  x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu_ffn(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+               w_down: jax.Array, rules: Rules) -> jax.Array:
+    """Column-parallel gate/up, LBP row-parallel down-projection.
+
+    The down matmul contracts over the model-sharded ff dim — each device
+    computes one layer (partial sum) of the output; GSPMD inserts the
+    aggregation (all-reduce, or reduce-scatter under sequence parallelism —
+    the paper's eager vs deferred aggregation).
+    """
+    from .tuning import reduce_pref_dtype
+    h = jnp.einsum("bsd,df->bsf", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, w_up.astype(x.dtype))
+    h = shard(jax.nn.silu(h) * u, rules, "batch", None, "ff")
+    from . import lbp_linear
+    if lbp_linear.applicable(rules):
+        return lbp_linear.lbp_row_parallel(h, w_down.astype(x.dtype), rules)
+    out = jnp.einsum("bsf,fd->bsd", h, w_down.astype(x.dtype),
+                     preferred_element_type=reduce_pref_dtype(x.dtype))
+    return shard(out.astype(x.dtype), rules, "batch", "seq", None)
+
+
+def embed_tokens(tokens: jax.Array, table: jax.Array, rules: Rules) -> jax.Array:
+    """Vocab-sharded embedding lookup via one-hot matmul (TPU-friendly:
+    the gather over a vocab-sharded table becomes a masked matmul and the
+    cross-shard sum is a small all-reduce)."""
+    out = jnp.take(table, tokens, axis=0).astype(jnp.bfloat16)
+    return shard(out, rules, "batch", "seq", None)
+
+
+def chunked_cross_entropy(
+    x: jax.Array,                 # (B, S, d) final hidden
+    table: jax.Array,             # (V, d) tied embedding (or lm head.T)
+    labels: jax.Array,            # (B, S) int32
+    rules: Rules,
+    *,
+    chunk: int = 512,
+    z_loss: float = 1e-4,
+    mask: Optional[jax.Array] = None,   # (B, S) 1=count
+):
+    """Mean token cross-entropy without materializing (B, S, V) logits.
+
+    Scans over sequence chunks; per chunk the (B, c, V) logits live
+    vocab-sharded on the model axis, and the max/logsumexp/label-pick
+    reductions over V become small per-token collectives.  z-loss
+    (MaxText-style) keeps the softmax normalizer bounded.
+    """
+    B, S, d = x.shape
+    V = table.shape[0]
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = 1 if S < 2 else next(c for c in range(chunk, 0, -1) if S % c == 0)
+    n = S // chunk
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+
+    xc = x.reshape(B, n, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(B, n, chunk).swapaxes(0, 1)
+    mc = mask.reshape(B, n, chunk).swapaxes(0, 1)
+
+    def step(carry, inp):
+        loss_sum, z_sum, count = carry
+        xi, li, mi = inp
+        logits = jnp.einsum("bcd,vd->bcv", xi.astype(jnp.float32),
+                            table.astype(jnp.float32))
+        logits = shard(logits, rules, "batch", None, "vocab")
+        m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+        lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+        picked = jnp.sum(
+            logits * jax.nn.one_hot(li, V, dtype=logits.dtype), axis=-1)
+        nll = (lse - picked) * mi
+        zl = jnp.square(lse) * mi
+        return (loss_sum + nll.sum(), z_sum + zl.sum(), count + mi.sum()), None
+
+    (loss_sum, z_sum, count), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+               jnp.zeros((), jnp.float32)), (xc, lc, mc))
+    denom = jnp.maximum(count, 1.0)
+    return loss_sum / denom + z_loss * z_sum / denom

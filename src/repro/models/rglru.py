@@ -1,0 +1,109 @@
+"""RG-LRU recurrent temporal-mixing block (Griffin / recurrentgemma).
+
+Structure (Griffin, arXiv:2402.19427):
+    x -> [linear -> GeLU]          (gate branch)
+      -> [linear -> causal depthwise conv(4) -> RG-LRU]   (recurrent branch)
+    y = gate * recurrent -> linear -> residual
+
+RG-LRU per channel:  a_t = exp(-c_coef * softplus(Lambda) * r_t),
+                     h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+with r_t, i_t per-channel sigmoid gates (diagonal gate weights — the
+block-diagonal gates of the original are simplified to diagonal; DESIGN.md
+§assumption-changes).  The recurrence is elementwise over channels, so the
+paper's layer partition has no contraction dim here (DESIGN §Arch-
+applicability); channels shard over the model axis instead.
+
+Train path uses ``jax.lax.associative_scan`` (log-depth — TPU-friendly);
+the Pallas kernel (kernels/rglru_kernel.py) is the sequential-VMEM TPU
+alternative validated against the same math.  Decode carries (conv window,
+h) state.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.rules import Rules, shard
+
+C_COEF = 8.0
+
+
+class RGLRUState(NamedTuple):
+    conv: jax.Array   # (B, conv_width - 1, lru) trailing inputs
+    h: jax.Array      # (B, lru)
+
+
+def _gates(xr: jax.Array, p) -> Tuple[jax.Array, jax.Array]:
+    """Per-channel recurrence/input gates on the conv output."""
+    r = jax.nn.sigmoid(xr * p["gate_a_w"] + p["gate_a_b"])
+    i = jax.nn.sigmoid(xr * p["gate_x_w"] + p["gate_x_b"])
+    log_a = -C_COEF * jax.nn.softplus(p["lambda_param"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (i * xr)
+    return a, b
+
+
+def _conv1d_causal(x: jax.Array, kernel: jax.Array, bias: jax.Array,
+                   history: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv. x: (B,S,D), kernel: (W,D).  ``history`` is the
+    (B, W-1, D) trailing context (decode), else zero-padding."""
+    W = kernel.shape[0]
+    if history is None:
+        history = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([history, x], axis=1)
+    out = sum(xp[:, t:t + x.shape[1]] * kernel[t] for t in range(W))
+    return out + bias
+
+
+def recurrent_block(
+    x: jax.Array,              # (B, S, d)
+    p,                         # param dict for this block
+    rules: Rules,
+    state: Optional[RGLRUState] = None,
+) -> Tuple[jax.Array, Optional[RGLRUState]]:
+    xf = x.astype(jnp.float32)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dl->bsl", xf, p["w_gate"].astype(jnp.float32)))
+    xr = jnp.einsum("bsd,dl->bsl", xf, p["w_rec"].astype(jnp.float32))
+    gate = shard(gate, rules, "batch", None, "ff")
+    xr = shard(xr, rules, "batch", None, "ff")
+
+    hist = state.conv if state is not None else None
+    xr = _conv1d_causal(xr, p["conv_k"].astype(jnp.float32),
+                        p["conv_b"].astype(jnp.float32), hist)
+    a, b = _gates(xr, {k: v.astype(jnp.float32) for k, v in p.items()
+                       if k in ("gate_a_w", "gate_a_b", "gate_x_w",
+                                "gate_x_b", "lambda_param")})
+
+    h0 = state.h if state is not None else None
+    if x.shape[1] == 1 and state is not None:
+        # decode: single-step update
+        h = a[:, 0] * h0.astype(jnp.float32) + b[:, 0]
+        hs = h[:, None]
+    else:
+        if h0 is not None:
+            b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+        # associative scan over (a, b): (a2, b2) o (a1, b1) = (a1 a2, a2 b1 + b2)
+        def combine(lhs, rhs):
+            a1, b1 = lhs
+            a2, b2 = rhs
+            return a1 * a2, a2 * b1 + b2
+        _, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h = hs[:, -1]
+    hs = shard(hs, rules, "batch", None, "ff")
+
+    y = jnp.einsum("bsl,ld->bsd", hs * gate, p["w_out"].astype(jnp.float32))
+    y = shard(y.astype(x.dtype), rules, "batch", "seq", None)
+
+    new_state = None
+    if state is not None:
+        W = p["conv_k"].shape[0]
+        # xr here is post-conv; we must keep raw pre-conv inputs for history.
+        # recompute the raw projection tail:
+        raw = jnp.einsum("bsd,dl->bsl", xf, p["w_rec"].astype(jnp.float32))
+        tail = jnp.concatenate([state.conv, raw], axis=1)[:, -(W - 1):]
+        new_state = RGLRUState(conv=tail.astype(state.conv.dtype),
+                               h=h.astype(state.h.dtype))
+    return y, new_state

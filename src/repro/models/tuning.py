@@ -1,0 +1,62 @@
+"""Performance tuning flags (the §Perf hillclimb knobs).
+
+Each flag corresponds to one hypothesis->change->measure iteration recorded
+in EXPERIMENTS.md §Perf; the dry-run lowers baseline and optimized variants
+by flipping these (launch.dryrun --opt/--no-opt, tags in the artifacts).
+
+  moe_capacity_sharded  shard the MoE (E, C, d) expert batches over the
+                        batch axes as well as the expert axis.  OFF means
+                        the paper-faithful-naive layout where only experts
+                        shard — every data-row replicates all expert compute
+                        (found via the roofline: 16x per-device FLOP
+                        inflation on qwen3-moe).
+  cache_write_constraint constrain prefill k/v to the cache's (batch,
+                        kv_time) layout BEFORE the cache insert, avoiding
+                        GSPMD's involuntary full-replication resharding.
+  reduce_bf16           perform the LBP layer aggregation (the contraction-
+                        sharded matmul partial sums: attention out-proj,
+                        FFN down-proj, MoE down-proj) in bfloat16 instead of
+                        f32 — halves the dominant all-reduce bytes at the
+                        cost of bf16 summation across p partial layers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class Tuning:
+    moe_capacity_sharded: bool = True
+    cache_write_constraint: bool = True
+    reduce_bf16: bool = False   # paper-faithful default: exact f32 layer sum
+    # explicit shard_map LBP with psum_scatter for the row-parallel matmuls
+    # (deferred aggregation; pairs with the train_sp/prefill_sp profiles)
+    explicit_lbp_scatter: bool = False
+    # per-data-row MoE dispatch (no cross-row token gather).  Measured
+    # REFUTED with GSPMD (it cannot prove the combine scatter-add local and
+    # inserts full activation all-reduces) — kept for the record + the
+    # future shard_map dispatch; see EXPERIMENTS §Perf.
+    moe_row_local: bool = False
+    # the shard_map version of the same idea: fully-manual EP dispatch —
+    # local token selection per (data-row x expert-shard), expert-weight
+    # FSDP gather inside, one bf16 psum over the model axis to combine.
+    # Default ON after §Perf Cell A iter 4: −59% step bound on qwen3-moe
+    # train (parity- and grad-tested on a real mesh).
+    moe_ep_shard_map: bool = True
+
+
+TUNING = Tuning()
+
+
+def set_tuning(**kw) -> Tuning:
+    for k, v in kw.items():
+        assert hasattr(TUNING, k), k
+        setattr(TUNING, k, v)
+    return TUNING
+
+
+def reduce_pref_dtype(x_dtype):
+    """preferred_element_type for the row-parallel (layer-sum) matmuls."""
+    import jax.numpy as jnp
+    return jnp.bfloat16 if TUNING.reduce_bf16 else None

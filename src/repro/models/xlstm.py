@@ -1,0 +1,191 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM + sequential sLSTM (arXiv:2405.04517).
+
+mLSTM (matrix memory, per head):
+    C_t = f_t C_{t-1} + i_t k_t v_t^T      (hd x hd state)
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = C_t^T q_t / max(|n_t^T q_t|, 1)
+computed in the chunkwise-parallel form: within a chunk everything is
+matmuls against a decay matrix D[t,s] = (prod_{r=s+1..t} f_r) i_s — i.e.
+the chunk dimension provides the contraction that the paper's layer
+partition splits (DESIGN §Arch-applicability: LBP applies to the chunkwise
+matmuls and projections; the sLSTM scalar recurrence does not).
+
+sLSTM (scalar memory, per head, with per-head recurrent R matrices):
+    z = tanh(Wz x + Rz h),  i/f/o = sigma(W. x + R. h)
+    c_t = f c + i z;  n_t = f n + i;  h_t = o * c_t / n_t
+inherently sequential -> lax.scan (6 of 48 blocks; documented).
+
+Gates are sigmoid (the exponential-gate stabilizer of the original is
+simplified away; DESIGN §assumption-changes).
+
+Sharding: value/output head_dim shards over the model axis (head counts are
+tiny — 4 — so head sharding would waste 4x; the hd_v=512 dim splits
+cleanly; contraction over it in the out-projection is again LBP).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.rules import Rules, shard
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array   # (B, H, hd, hd)
+    n: jax.Array   # (B, H, hd)
+    lf_acc: jax.Array  # (B, H) accumulated log-f within current position (decode unused)
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, H, hd)
+    n: jax.Array   # (B, H, hd)
+    h: jax.Array   # (B, H, hd)
+
+
+def _qkv_gates(x, p, H, hd):
+    B, S, d = x.shape
+    xf = x.astype(jnp.float32)
+    q = jnp.einsum("bsd,dk->bsk", xf, p["w_q"].astype(jnp.float32)).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,dk->bsk", xf, p["w_k"].astype(jnp.float32)).reshape(B, S, H, hd)
+    v = jnp.einsum("bsd,dk->bsk", xf, p["w_v"].astype(jnp.float32)).reshape(B, S, H, hd)
+    i_gate = jax.nn.sigmoid(jnp.einsum("bsd,dh->bsh", xf, p["w_i"].astype(jnp.float32)))
+    f_gate = jax.nn.sigmoid(jnp.einsum("bsd,dh->bsh", xf, p["w_f"].astype(jnp.float32)) + 1.0)
+    return q, k, v, i_gate, f_gate
+
+
+def mlstm_block(
+    x: jax.Array,              # (B, S, d)
+    p,
+    rules: Rules,
+    *,
+    n_heads: int,
+    head_dim: int,
+    chunk: int = 64,
+    state: Optional[MLSTMState] = None,
+) -> Tuple[jax.Array, Optional[MLSTMState]]:
+    B, S, d = x.shape
+    H, hd = n_heads, head_dim
+    q, k, v, ig, fg = _qkv_gates(x, p, H, hd)
+    q = q * (float(hd) ** -0.5)
+    v = shard(v, rules, "batch", None, None, "ff")
+
+    if S == 1 and state is not None:
+        # decode: recurrent single step
+        C, n = state.C, state.n
+        f1 = fg[:, 0, :, None, None]
+        C = f1 * C + ig[:, 0, :, None, None] * jnp.einsum(
+            "bhk,bhv->bhkv", k[:, 0], v[:, 0])
+        n = fg[:, 0, :, None] * n + ig[:, 0, :, None] * k[:, 0]
+        num = jnp.einsum("bhkv,bhk->bhv", C, q[:, 0])
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, q[:, 0]))
+        h = num / jnp.maximum(den, 1.0)[..., None]
+        hs = h[:, None]                                     # (B,1,H,hd)
+        new_state = MLSTMState(C=C, n=n, lf_acc=state.lf_acc)
+    else:
+        c = min(chunk, S)
+        while S % c:
+            c -= 1
+        nc = S // c
+        qc = q.reshape(B, nc, c, H, hd)
+        kc = k.reshape(B, nc, c, H, hd)
+        vc = v.reshape(B, nc, c, H, hd)
+        igc = ig.reshape(B, nc, c, H)
+        lfc = jnp.log(jnp.maximum(fg, 1e-9)).reshape(B, nc, c, H)
+
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+
+        def step(carry, inp):
+            C, n = carry
+            qi, ki, vi, ii, lfi = inp                       # (B,c,H,*)
+            cum = jnp.cumsum(lfi, axis=1)                   # (B,c,H)
+            total = cum[:, -1]                              # (B,H)
+            # D[t,s] = exp(cum_t - cum_s) * i_s   (t >= s)
+            Dlog = cum[:, :, None] - cum[:, None, :]        # (B,c,c,H)
+            tri = jnp.tril(jnp.ones((c, c), bool))
+            D = jnp.where(tri[None, :, :, None], jnp.exp(Dlog) *
+                          ii[:, None, :, :], 0.0)
+            scores = jnp.einsum("bthd,bshd->btsh", qi, ki) * D
+            intra = jnp.einsum("btsh,bshv->bthv", scores, vi)
+            inter = jnp.einsum("bhkv,bthk->bthv", C,
+                               qi * jnp.exp(cum)[..., None])
+            den_intra = jnp.einsum("btsh,bshk,bthk->bth", D, ki, qi)
+            den_inter = jnp.einsum("bhk,bthk->bth", n,
+                                   qi * jnp.exp(cum)[..., None])
+            den = jnp.abs(den_intra + den_inter)
+            h = (intra + inter) / jnp.maximum(den, 1.0)[..., None]
+            # state update
+            decay_s = jnp.exp(total[:, None] - cum) * ii    # (B,c,H)
+            C = jnp.exp(total)[:, :, None, None] * C + jnp.einsum(
+                "bshk,bshv,bsh->bhkv", ki, vi, decay_s)
+            n = jnp.exp(total)[..., None] * n + jnp.einsum(
+                "bshk,bsh->bhk", ki, decay_s)
+            return (C, n), h
+
+        (C, n), hs = jax.lax.scan(
+            step, (C0, n0),
+            (qc.swapaxes(0, 1), kc.swapaxes(0, 1), vc.swapaxes(0, 1),
+             igc.swapaxes(0, 1), lfc.swapaxes(0, 1)))
+        hs = hs.swapaxes(0, 1).reshape(B, S, H, hd)
+        new_state = None
+        if state is not None:
+            new_state = MLSTMState(C=C, n=n, lf_acc=jnp.zeros((B, H), jnp.float32))
+
+    o = jax.nn.sigmoid(jnp.einsum("bsd,dk->bsk", x.astype(jnp.float32),
+                                  p["w_o"].astype(jnp.float32)))
+    hflat = hs.reshape(B, hs.shape[1], H * hd) * o
+    hflat = shard(hflat, rules, "batch", None, "ff")
+    y = jnp.einsum("bsk,kd->bsd", hflat, p["w_out"].astype(jnp.float32))
+    return shard(y.astype(x.dtype), rules, "batch", "seq", None), new_state
+
+
+def slstm_block(
+    x: jax.Array,
+    p,
+    rules: Rules,
+    *,
+    n_heads: int,
+    head_dim: int,
+    state: Optional[SLSTMState] = None,
+) -> Tuple[jax.Array, Optional[SLSTMState]]:
+    B, S, d = x.shape
+    H, hd = n_heads, head_dim
+    xf = x.astype(jnp.float32)
+    pre = {g: jnp.einsum("bsd,dk->bsk", xf, p[f"w_{g}"].astype(jnp.float32)
+                         ).reshape(B, S, H, hd) for g in ("z", "i", "f", "o")}
+    R = {g: p[f"r_{g}"].astype(jnp.float32) for g in ("z", "i", "f", "o")}
+
+    if state is None:
+        zeros = jnp.zeros((B, H, hd), jnp.float32)
+        st = SLSTMState(c=zeros, n=zeros, h=zeros)
+    else:
+        st = SLSTMState(*(s.astype(jnp.float32) for s in state))
+
+    def step(carry, inp):
+        c, n, h = carry
+        pz, pi, pf, po = inp
+        rec = {g: jnp.einsum("bhk,hkv->bhv", h, R[g]) for g in ("z", "i", "f", "o")}
+        z = jnp.tanh(pz + rec["z"])
+        i = jax.nn.sigmoid(pi + rec["i"])
+        f = jax.nn.sigmoid(pf + rec["f"] + 1.0)
+        o = jax.nn.sigmoid(po + rec["o"])
+        c = f * c + i * z
+        n = f * n + i
+        h = o * c / jnp.maximum(n, 1e-6)
+        return (c, n, h), h
+
+    seq = tuple(pre[g].swapaxes(0, 1) for g in ("z", "i", "f", "o"))
+    (c, n, h), hs = jax.lax.scan(step, (st.c, st.n, st.h), seq)
+    hs = hs.swapaxes(0, 1).reshape(B, S, H * hd)
+
+    y = jnp.einsum("bsk,kd->bsd", hs, p["w_out"].astype(jnp.float32))
+    y = shard(y.astype(x.dtype), rules, "batch", "seq", None)
+    new_state = None
+    if state is not None:
+        new_state = SLSTMState(c=c.astype(state.c.dtype),
+                               n=n.astype(state.n.dtype),
+                               h=h.astype(state.h.dtype))
+    return y, new_state

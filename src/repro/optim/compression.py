@@ -1,0 +1,67 @@
+"""Int8 gradient compression with error feedback for the slow (DCN) axis.
+
+At multi-pod scale the cross-pod gradient reduction crosses data-center
+network links ~an order of magnitude slower than ICI.  ``compressed_psum``
+performs the cross-pod all-reduce as: int8-quantize (per-tensor absmax
+scale) -> all_gather(int8 + f32 scale) -> dequantize-sum.  Ring bytes drop
+to ~1/4 of a bf16 all-reduce ((p-1)/p * 1B vs 2(p-1)/p * 2B).
+
+Quantization error is returned so the caller can keep an error-feedback
+buffer (add the residual into the next step's gradients) — standard EF-SGD;
+tests verify convergence against the uncompressed path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def _psum_int8_local(x: jax.Array, axis: str) -> jax.Array:
+    """Inside shard_map: mean over `axis` via int8 all_gather + local sum."""
+    q, s = quantize_int8(x)
+    qg = jax.lax.all_gather(q, axis)          # (p, ...) int8 on the wire
+    sg = jax.lax.all_gather(s, axis)          # (p,) f32 scales
+    deq = qg.astype(jnp.float32) * sg.reshape((-1,) + (1,) * x.ndim)
+    return deq.sum(axis=0) / qg.shape[0]
+
+
+def compressed_pmean(tree, mesh: Mesh, axis: str = "pod", specs=None):
+    """Mean-reduce a pytree across `axis` with int8 wire format.
+
+    ``specs``: PartitionSpec pytree describing each leaf's sharding over the
+    OTHER mesh axes (e.g. the FSDP/TP param specs); the `axis` dim must not
+    appear in them (values differ across `axis` — that is what gets
+    reduced).  Returns (reduced_tree, error_tree) where error = input -
+    quantized(input) for error feedback into the next step.
+    """
+    flat, tdef = jax.tree.flatten(tree)
+    if specs is None:
+        flat_specs = [P(*([None] * x.ndim)) for x in flat]
+    else:
+        flat_specs = jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))
+    outs = []
+    for x, spec in zip(flat, flat_specs):
+        fn = shard_map(functools.partial(_psum_int8_local, axis=axis),
+                       mesh=mesh, in_specs=spec, out_specs=spec,
+                       check_vma=False)
+        reduced = fn(x)
+        q, s = quantize_int8(x)
+        err = x - dequantize_int8(q, s)
+        outs.append((reduced, err))
+    return tdef.unflatten([o[0] for o in outs]), tdef.unflatten([o[1] for o in outs])

@@ -1,0 +1,2 @@
+from .rebalance import plan_rebalance, measure_speeds  # noqa: F401
+from .trainer import Trainer, TrainerConfig  # noqa: F401

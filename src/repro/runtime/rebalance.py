@@ -1,0 +1,72 @@
+"""Straggler mitigation + elastic rescale: the paper's solvers as the
+scheduling brain of the runtime.
+
+On real fleets devices are heterogeneous in practice (thermal throttling,
+SDC-quarantined hosts, DCN sharing).  The runtime:
+
+  1. measures per-device effective rates (here: injected or timed),
+  2. converts them to the paper's star-network model (w_i = 1/rate;
+     z_i = link class: ICI near-zero, DCN per-pod),
+  3. solves the §4 equality-based split (PCSS for compute-bound, PCCS when
+     link costs matter) + §4.5 integer adjustment with quantum=128
+     (MXU-aligned shards),
+  4. re-packs the LBP matmul's ragged shards (core.lbp_matmul.pad_ragged).
+
+Elastic rescale (node loss/join) is the same path with a different device
+set, plus checkpoint restore-with-reshard (checkpoint.store).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from ..core.network import SpeedProfile, StarNetwork
+from ..core.partition import LayerAssignment
+
+
+@dataclasses.dataclass
+class RebalancePlan:
+    assignment: LayerAssignment
+    speeds: np.ndarray
+    predicted_speedup: float     # vs even split, compute-bound model
+
+
+def measure_speeds(step_times: Sequence[float]) -> np.ndarray:
+    """Per-device relative rate from measured per-device step times."""
+    t = np.asarray(step_times, dtype=np.float64)
+    assert np.all(t > 0)
+    rate = 1.0 / t
+    return rate / rate.mean()
+
+
+def plan_rebalance(K: int, speeds: Sequence[float], *, quantum: int = 128,
+                   mode: str = "PCSS",
+                   net: Optional[StarNetwork] = None) -> RebalancePlan:
+    """Split contraction dim K over devices proportional to measured rates.
+
+    Falls back to quantum=1 if K is too small to quantize by 128 (reduced
+    smoke configs)."""
+    speeds = np.asarray(speeds, dtype=np.float64)
+    p = len(speeds)
+    if K % (quantum) != 0 or K < quantum * p:
+        quantum = 1
+    assign = LayerAssignment.from_speeds(K, speeds, quantum=quantum,
+                                         mode=mode, net=net)
+    # compute-bound finish time model: t = max_i k_i / speed_i
+    even = np.full(p, K / p)
+    t_even = float(np.max(even / speeds))
+    t_new = float(np.max(np.where(assign.k > 0, assign.k / speeds, 0.0)))
+    return RebalancePlan(assignment=assign, speeds=speeds,
+                         predicted_speedup=t_even / max(t_new, 1e-12))
+
+
+def drop_devices(assign: LayerAssignment, dead: Sequence[int],
+                 speeds: Sequence[float], quantum: int = 128
+                 ) -> RebalancePlan:
+    """Node failure: re-solve the split over the surviving device set."""
+    alive = [i for i in range(assign.p) if i not in set(dead)]
+    s = np.asarray(speeds, dtype=np.float64)[alive]
+    return plan_rebalance(assign.K, s, quantum=quantum)

@@ -1,0 +1,51 @@
+"""Serving steps: batched prefill and single-token decode.
+
+``decode_32k`` / ``long_500k`` dry-run cells lower ``decode_step`` (one new
+token against a seq_len cache); ``prefill_32k`` lowers ``prefill``.
+Caches shard their time axis over the model dim (LBP on the sequence
+contraction — see models/transformer.cache_specs).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer as T
+from ..models.config import ModelConfig
+from ..sharding.rules import Rules
+
+
+def make_prefill_step(cfg: ModelConfig, rules: Rules):
+    def step(params, tokens, cache, prefix_embeds=None):
+        return T.prefill(params, cfg, rules, tokens, cache,
+                         prefix_embeds=prefix_embeds)
+    return step
+
+
+def make_decode_step(cfg: ModelConfig, rules: Rules):
+    def step(params, token, pos, cache):
+        logits, cache = T.decode_step(params, cfg, rules, token, pos, cache)
+        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_token, logits, cache
+    return step
+
+
+def greedy_generate(params, cfg: ModelConfig, rules: Rules, prompt,
+                    max_new: int = 16):
+    """Reference generation loop (examples/tests; small models only)."""
+    B, S = prompt.shape
+    cache = T.init_cache(cfg, B, S + max_new)
+    cache, logits = T.prefill(params, cfg, rules, prompt, cache)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    out = [tok]
+    pos = jnp.full((B,), S, jnp.int32)
+    step = jax.jit(make_decode_step(cfg, rules))
+    for _ in range(max_new - 1):
+        nxt, _, cache = step(params, tok, pos, cache)
+        tok = nxt[:, None]
+        out.append(tok)
+        pos = pos + 1
+    return jnp.concatenate(out, axis=1)

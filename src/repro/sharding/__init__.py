@@ -1,0 +1,1 @@
+from .rules import Rules, shard  # noqa: F401

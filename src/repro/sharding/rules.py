@@ -1,0 +1,116 @@
+"""Logical-axis sharding rules: one table drives every constraint in the zoo.
+
+Models never name mesh axes directly; they call ``shard(x, "batch", "seq",
+"embed")`` and the active ``Rules`` maps logical names to mesh axes (or None
+for replication).  Smoke tests pass ``Rules.null()`` (single device, every
+constraint a no-op); the dry-run/launcher installs a per-shape profile from
+``sharding.profiles``.
+
+Logical axes:
+  batch     global batch                      (train/prefill: ("pod","data"))
+  seq       sequence                          (sequence-parallel regions)
+  embed     d_model                           (FSDP param shard dim)
+  heads     attention heads / q features      (TP)
+  kv_heads  KV heads                          (TP for caches)
+  ff        FFN hidden                        (TP; LBP contraction on down-proj)
+  vocab     vocabulary                        (TP'd embedding/logits)
+  expert    MoE experts                       (EP)
+  kv_time   KV-cache time axis                (serving: LBP over the sequence
+                                               contraction = flash-decoding)
+  layers    stacked-layer leading dim         (never sharded; pipeline reserve)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+AxisName = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    batch: AxisName = None
+    seq: AxisName = None
+    embed: AxisName = None
+    heads: AxisName = None
+    kv_heads: AxisName = None
+    ff: AxisName = None
+    vocab: AxisName = None
+    expert: AxisName = None
+    kv_time: AxisName = None
+    layers: AxisName = None
+    # the concrete mesh (for explicit shard_map sub-blocks; None in smoke)
+    mesh: object = dataclasses.field(default=None, compare=False, hash=False)
+
+    @staticmethod
+    def null() -> "Rules":
+        """All-replicated (single-device smoke tests)."""
+        return Rules()
+
+    def spec(self, *logical: Optional[str]) -> P:
+        """PartitionSpec for a tensor whose dims carry these logical names."""
+        return P(*(getattr(self, n) if n is not None else None
+                   for n in logical))
+
+
+def shard(x: jax.Array, rules: Rules, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint under the active rules (no-op for null)."""
+    assert len(logical) == x.ndim, (logical, x.shape)
+    spec = rules.spec(*logical)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Per-shape profiles (DESIGN.md §5).  "pod" exists only on the multi-pod mesh;
+# make_rules() drops axis names that are absent from the active mesh.
+# ---------------------------------------------------------------------------
+
+def _filter(axis: AxisName, present) -> AxisName:
+    if axis is None:
+        return None
+    if isinstance(axis, str):
+        return axis if axis in present else None
+    kept = tuple(a for a in axis if a in present)
+    return kept if kept else None
+
+
+def make_rules(profile: str, mesh) -> Rules:
+    """profile in {"train", "prefill", "decode", "long"}."""
+    present = set(mesh.axis_names)
+    if profile == "train":
+        r = Rules(batch=("pod", "data"), embed="data", heads="model",
+                  kv_heads="model", ff="model", vocab="model", expert="model")
+    elif profile == "train_sp":
+        # beyond-paper: sequence parallelism — deferred aggregation
+        # (reduce-scatter) between blocks instead of eager all-reduce.
+        r = Rules(batch=("pod", "data"), seq="model", embed="data",
+                  heads="model", kv_heads="model", ff="model", vocab="model",
+                  expert="model")
+    elif profile == "prefill":
+        r = Rules(batch=("pod", "data"), embed="data", heads="model",
+                  kv_heads="model", ff="model", vocab="model", expert="model",
+                  kv_time="model")
+    elif profile == "prefill_sp":
+        # beyond-paper: deferred aggregation between blocks during prefill
+        r = Rules(batch=("pod", "data"), seq="model", embed="data",
+                  heads="model", kv_heads="model", ff="model", vocab="model",
+                  expert="model", kv_time="model")
+    elif profile == "decode":
+        r = Rules(batch=("pod", "data"), heads="model", kv_heads="model",
+                  ff="model", vocab="model", expert="model", kv_time="model")
+    elif profile == "long":
+        # batch=1: nothing to shard on data; spread state over model.
+        r = Rules(batch=None, heads="model", kv_heads="model", ff="model",
+                  vocab="model", expert="model", embed="data",
+                  kv_time="model")
+    else:
+        raise ValueError(profile)
+    filtered = {f.name: _filter(getattr(r, f.name), present)
+                for f in dataclasses.fields(r) if f.name != "mesh"}
+    return Rules(mesh=mesh, **filtered)

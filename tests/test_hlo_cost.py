@@ -1,0 +1,73 @@
+"""Loop-aware HLO cost parser: known-flops programs as ground truth."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.hlo_cost import analyze_hlo
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops():
+    M, K, N = 64, 128, 32
+    x = jnp.zeros((M, K), jnp.float32)
+    w = jnp.zeros((K, N), jnp.float32)
+    res = analyze_hlo(_compile(lambda a, b: a @ b, x, w))
+    assert res["flops"] == pytest.approx(2 * M * K * N, rel=1e-6)
+
+
+def test_scan_multiplies_flops():
+    """A matmul inside an 8-step scan must count 8x."""
+    M = 32
+    x = jnp.zeros((M, M), jnp.float32)
+    w = jnp.zeros((8, M, M), jnp.float32)
+
+    def fn(x, w):
+        def body(c, wi):
+            return wi @ c, None
+        out, _ = jax.lax.scan(body, x, w)
+        return out
+
+    res = analyze_hlo(_compile(fn, x, w))
+    assert res["flops"] == pytest.approx(8 * 2 * M ** 3, rel=1e-6)
+    assert res["collectives"]["n_while_loops"] == 1
+    assert 8 in res["collectives"]["trip_counts"]
+
+
+def test_nested_scan_multiplies():
+    M = 16
+    x = jnp.zeros((M, M), jnp.float32)
+    w = jnp.zeros((3, 4, M, M), jnp.float32)
+
+    def fn(x, w):
+        def outer(c, wo):
+            def inner(ci, wi):
+                return wi @ ci, None
+            c2, _ = jax.lax.scan(inner, c, wo)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, w)
+        return out
+
+    res = analyze_hlo(_compile(fn, x, w))
+    assert res["flops"] == pytest.approx(12 * 2 * M ** 3, rel=1e-6)
+
+
+def test_bytes_reasonable_for_elementwise():
+    x = jnp.zeros((1024, 1024), jnp.float32)
+    res = analyze_hlo(_compile(lambda a: a * 2.0 + 1.0, x))
+    # one fused read + one write = 8 MiB (allow copies/layout slack)
+    assert 0.5 * 8e6 <= res["hbm_bytes"] <= 4 * 8e6
+
+
+def test_dynamic_slice_counts_window_not_operand():
+    big = jnp.zeros((4096, 256), jnp.float32)
+
+    def fn(a, i):
+        return jax.lax.dynamic_slice_in_dim(a, i, 16, 0) * 1.0
+
+    res = analyze_hlo(_compile(fn, big, jnp.asarray(2)))
+    # window = 16*256*4 = 16 KiB; full operand would be 4 MiB
+    assert res["hbm_bytes"] < 1e6

@@ -1,0 +1,65 @@
+"""Paper §6.2: SUMMA / Pipeline / Modified Pipeline simulators + orderings."""
+
+import numpy as np
+import pytest
+
+from repro.core.network import random_mesh
+from repro.core.mesh_baselines import (simulate_modified_pipeline,
+                                       simulate_pipeline, simulate_summa)
+from repro.core.pmft import pmft_lbp
+from repro.core.heuristic import mft_lbp_heuristic
+
+
+@pytest.mark.parametrize("dim,seed", [(5, 0), (7, 1)])
+def test_volume_formulas(dim, seed):
+    net = random_mesh(dim, dim, seed=seed)
+    N = 800
+    s = simulate_summa(net, N)
+    p = simulate_pipeline(net, N)
+    m = simulate_modified_pipeline(net, N)
+    # SUMMA: (X-1) N^2 of A + (Y-1) N^2 of B relayed
+    assert s.comm_volume == pytest.approx((dim - 1) * 2 * N * N, rel=1e-9)
+    # Pipeline floods every edge with the full 2N^2
+    E = len(net.edges())
+    assert p.comm_volume == pytest.approx(2 * N * N * E, rel=1e-9)
+    # Modified Pipeline: one copy per non-source node
+    assert m.comm_volume == pytest.approx(2 * N * N * (net.p - 1), rel=1e-9)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_paper_orderings(seed):
+    """Fig 7/8 orderings: LBP ~ SUMMA << ModPipe << Pipe on volume;
+    LBP fastest, heuristic ~ LBP on finish time."""
+    net = random_mesh(5, 5, seed=seed)
+    N = 1200
+    lbp = pmft_lbp(net, N)
+    heur = mft_lbp_heuristic(net, N)
+    s = simulate_summa(net, N)
+    p = simulate_pipeline(net, N)
+    m = simulate_modified_pipeline(net, N)
+
+    # volume: LBP and SUMMA near-optimal, pipelines far above
+    assert lbp.comm_volume < 0.5 * m.comm_volume
+    assert m.comm_volume < p.comm_volume
+    assert abs(lbp.comm_volume - s.comm_volume) < 0.5 * s.comm_volume
+
+    # time: LBP no slower than any baseline; heuristic within 2%
+    assert lbp.t_finish <= s.finish_time * (1 + 1e-9)
+    assert lbp.t_finish <= m.finish_time * (1 + 1e-9)
+    assert lbp.t_finish <= p.finish_time * (1 + 1e-9)
+    assert heur.t_finish <= lbp.t_finish * 1.02
+
+
+def test_volume_reduction_reproduces_paper_magnitude():
+    """Paper: 81% reduction vs ModPipe, 90% vs Pipeline (5x5..9x9)."""
+    reductions_m, reductions_p = [], []
+    for seed in range(3):
+        net = random_mesh(5, 5, seed=seed)
+        N = 1500
+        lbp = mft_lbp_heuristic(net, N)
+        m = simulate_modified_pipeline(net, N)
+        p = simulate_pipeline(net, N)
+        reductions_m.append(1 - lbp.comm_volume / m.comm_volume)
+        reductions_p.append(1 - lbp.comm_volume / p.comm_volume)
+    assert np.mean(reductions_m) > 0.70   # paper: 0.81
+    assert np.mean(reductions_p) > 0.85   # paper: 0.90

@@ -1,0 +1,96 @@
+"""Paper §5: MFT-LBP linear program, PMFT-LBP, and the heuristic."""
+
+import numpy as np
+import pytest
+
+from repro.core.network import random_mesh
+from repro.core.mesh_lp import solve_fixed_k, solve_relaxed
+from repro.core.pmft import fifs, pmft_lbp
+from repro.core.heuristic import mft_lbp_heuristic
+
+
+@pytest.mark.parametrize("dim,seed", [(3, 0), (5, 1), (5, 2)])
+def test_relaxed_lp_valid(dim, seed):
+    net = random_mesh(dim, dim, seed=seed)
+    N = 300
+    r = solve_relaxed(net, N)
+    assert r.k.sum() == pytest.approx(N, rel=1e-6)
+    assert r.k[net.source] == pytest.approx(0.0, abs=1e-9)
+    assert np.all(r.k >= -1e-7)
+    # flow conservation (54): inflow - outflow == 2 k_i N
+    for i in range(net.p):
+        if i == net.source:
+            continue
+        infl = sum(r.phi[e] for e in net.in_edges(i))
+        outf = sum(r.phi[e] for e in net.out_edges(i))
+        assert infl - outf == pytest.approx(2 * r.k[i] * N, rel=1e-5, abs=1e-3)
+    # (53): source emits both matrices, each entry once
+    out_s = sum(r.phi[e] for e in net.out_edges(net.source))
+    assert out_s == pytest.approx(2 * N * N, rel=1e-9)
+    # (61): makespan covers every node
+    assert r.t_finish >= r.t_finish_nodes.max() - 1e-6
+
+
+def test_fixed_k_matches_relaxed_at_optimum():
+    net = random_mesh(4, 4, seed=3)
+    N = 200
+    r = solve_relaxed(net, N)
+    f = solve_fixed_k(net, N, r.k)
+    assert f.t_finish == pytest.approx(r.t_finish, rel=1e-6)
+
+
+def test_pmft_integer_and_bounded_by_relaxation():
+    net = random_mesh(5, 5, seed=7)
+    N = 400
+    r = solve_relaxed(net, N)
+    s = pmft_lbp(net, N)
+    assert s.k.sum() == N
+    assert np.all(s.k >= 0)
+    assert s.k[net.source] == 0
+    # integer schedule can never beat the LP relaxation
+    assert s.t_finish >= r.t_finish - 1e-6
+    # ... and rounding N units costs at most a few units of work
+    unit = N * N * net.w.max() * net.t_cp
+    assert s.t_finish <= r.t_finish + 5 * unit
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_heuristic_close_to_pmft(seed):
+    """Paper §6.2.3: heuristic within a fraction of a percent of PMFT-LBP
+    (0.03%-0.18% in the paper; we allow 2% over random instances)."""
+    net = random_mesh(5, 5, seed=seed)
+    N = 300
+    a = pmft_lbp(net, N)
+    b = mft_lbp_heuristic(net, N)
+    assert b.t_finish <= a.t_finish * 1.02 + 1e-9
+    # heuristic must not use more LP solves than PMFT-LBP
+    assert b.lp_solves <= a.lp_solves
+
+
+def test_fifs_repairs_sum():
+    net = random_mesh(5, 5, seed=11)
+    N = 777   # odd N forces rounding repair
+    r = solve_relaxed(net, N)
+    k, res, solves, iters = fifs(net, N, r)
+    assert k.sum() == N
+    assert np.all(k >= 0)
+    assert iters >= 0 and solves >= 1
+
+
+def test_storage_constraint_respected():
+    net = random_mesh(3, 3, seed=5, storage=2.0 * 300 * 300)
+    N = 300
+    # D_i = 2 N^2 => k_i <= (D_i - N^2) / (2N) = N/2
+    r = solve_relaxed(net, N)
+    cap = (2.0 * N * N - N * N) / (2.0 * N)
+    assert np.all(r.k <= cap + 1e-6)
+    s = pmft_lbp(net, N)
+    assert np.all(s.k <= cap + 1)
+
+
+def test_comm_volume_reported():
+    net = random_mesh(4, 4, seed=9)
+    N = 256
+    s = pmft_lbp(net, N)
+    # hop-by-hop volume is at least the source emission 2N^2
+    assert s.comm_volume >= 2 * N * N - 1e-6

@@ -1,0 +1,145 @@
+"""Per-arch reduced-config smoke: one forward/train step on CPU, shapes +
+no NaNs; serving (prefill + decode) consistent with the full forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.models import transformer as T
+from repro.sharding.rules import Rules
+
+RULES = Rules.null()
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=24):
+    b = {"tokens": jax.random.randint(KEY, (B, S - cfg.prefix_len), 0,
+                                      cfg.vocab_size)}
+    if cfg.prefix_len:
+        b["prefix_embeds"] = jax.random.normal(
+            KEY, (B, cfg.prefix_len, cfg.d_model), jnp.bfloat16) * 0.02
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg = get_reduced(arch)
+    params = T.init_params(cfg, KEY)
+    batch = _batch(cfg)
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: T.loss_fn(p, cfg, RULES, batch)))(params)
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0
+    for path, g in jax.tree_util.tree_flatten_with_path(grads)[0]:
+        assert np.all(np.isfinite(np.asarray(g))), path
+    # shapes preserved
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_flatten_with_path(params)[0],
+            jax.tree_util.tree_flatten_with_path(grads)[0]):
+        assert a.shape == b.shape, pa
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_reduced(arch)
+    params = T.init_params(cfg, KEY)
+    B, S = 2, 16
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    hid, aux = T.forward_hidden(params, cfg, RULES, toks, remat=False)
+    assert hid.shape == (B, S, cfg.d_model)
+    assert np.all(np.isfinite(np.asarray(hid, np.float32)))
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_serving_consistency(arch):
+    """prefill(S-1) + decode(1) logits == full-forward logits at last pos.
+
+    f32 cache isolates path-consistency from cache-storage precision (the
+    production bf16 cache trades ~1e-2 logit precision for half the HBM)."""
+    cfg = get_reduced(arch)
+    params = T.init_params(cfg, KEY)
+    B, S = 2, 12
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+
+    cache = T.init_cache(cfg, B, S, dtype=jnp.float32)
+    cache, _ = T.prefill(params, cfg, RULES, toks[:, :S - 1], cache)
+    pos = jnp.full((B,), S - 1, jnp.int32)
+    dec_logits, _ = T.decode_step(params, cfg, RULES, toks[:, S - 1:S], pos,
+                                  cache)
+
+    hid, _ = T.forward_hidden(params, cfg, RULES, toks, remat=False)
+    from repro.models.layers import rms_norm
+    hN = rms_norm(hid, params["final_norm"], cfg.norm_eps)
+    ref = jnp.einsum("bd,vd->bv", hN[:, -1].astype(jnp.float32),
+                     params["embed"].astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(dec_logits[:, 0]), np.asarray(ref),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_serving_bf16_cache_close():
+    """Production bf16 cache: decode logits within bf16-rounding tolerance
+    of the f32-cache path (storage precision is the only difference)."""
+    cfg = get_reduced("llama3_2_3b")
+    params = T.init_params(cfg, KEY)
+    B, S = 2, 12
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    outs = {}
+    for dt in (jnp.float32, jnp.bfloat16):
+        cache = T.init_cache(cfg, B, S, dtype=dt)
+        cache, _ = T.prefill(params, cfg, RULES, toks[:, :S - 1], cache)
+        pos = jnp.full((B,), S - 1, jnp.int32)
+        logits, _ = T.decode_step(params, cfg, RULES, toks[:, S - 1:S], pos,
+                                  cache)
+        outs[dt] = np.asarray(logits)
+    np.testing.assert_allclose(outs[jnp.float32], outs[jnp.bfloat16],
+                               rtol=0.1, atol=0.1)
+
+
+def test_full_configs_param_counts():
+    """Full configs land near published sizes (sanity on the registry)."""
+    expected = {
+        "llama3_2_3b": 3.2e9, "mistral_large_123b": 122e9,
+        "granite_8b": 8.1e9, "qwen3_14b": 14e9, "olmoe_1b_7b": 6.9e9,
+        "qwen3_moe_235b_a22b": 235e9, "pixtral_12b": 11.6e9,
+        "recurrentgemma_9b": 8.5e9, "xlstm_1_3b": 1.1e9,
+        "musicgen_medium": 1.8e9,
+    }
+    for arch, want in expected.items():
+        got = get_config(arch).n_params()
+        assert abs(got - want) / want < 0.15, (arch, got, want)
+
+
+def test_moe_active_params():
+    cfg = get_config("qwen3_moe_235b_a22b")
+    act = cfg.n_active_params()
+    assert 18e9 < act < 26e9  # "A22B"
+    cfg2 = get_config("olmoe_1b_7b")
+    assert 0.9e9 < cfg2.n_active_params() < 1.6e9  # "1B active"
+
+
+def test_windowed_ring_cache_long_decode():
+    """recurrentgemma: decode far beyond the window with a ring cache
+    matches a full-cache run (the long_500k mechanism)."""
+    cfg = get_reduced("recurrentgemma_9b")
+    params = T.init_params(cfg, KEY)
+    B, S = 1, 40   # window is 16 in reduced config
+    toks = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab_size)
+
+    # run 1: ring cache sized to the window
+    cache = T.init_cache(cfg, B, S, dtype=jnp.float32)  # -> min(S, window)=16
+    cache, _ = T.prefill(params, cfg, RULES, toks[:, :S], cache)
+    pos = jnp.full((B,), S, jnp.int32)
+    ring_logits, _ = T.decode_step(params, cfg, RULES, toks[:, S:S + 1], pos,
+                                   cache)
+
+    # run 2: full forward reference
+    hid, _ = T.forward_hidden(params, cfg, RULES, toks, remat=False)
+    from repro.models.layers import rms_norm
+    hN = rms_norm(hid, params["final_norm"], cfg.norm_eps)
+    ref = jnp.einsum("bd,vd->bv", hN[:, -1].astype(jnp.float32),
+                     params["embed"].astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(ring_logits[:, 0]),
+                               np.asarray(ref), rtol=5e-3, atol=5e-3)

@@ -1,0 +1,93 @@
+"""Hypothesis property tests on system invariants beyond the paper core."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import LayerAssignment
+from repro.models.moe import moe_ffn
+from repro.sharding.rules import Rules
+from repro.data.pipeline import SyntheticTokens
+
+RULES = Rules.null()
+
+
+@settings(max_examples=25, deadline=None)
+@given(K=st.integers(8, 2048), p=st.integers(2, 16),
+       seed=st.integers(0, 10_000))
+def test_layer_assignment_split_invariants(K, p, seed):
+    rng = np.random.default_rng(seed)
+    speeds = rng.uniform(0.25, 4.0, p)
+    a = LayerAssignment.from_speeds(K, speeds)
+    assert a.K == K
+    assert np.all(a.k >= 0)
+    assert a.offsets[-1] + a.k[-1] == K
+    # monotone: strictly faster device never gets strictly less work
+    order = np.argsort(speeds)
+    k_sorted = a.k[order]
+    # allow rounding slack of 1 unit
+    assert np.all(np.diff(k_sorted) >= -max(1, K // p)), (speeds, a.k)
+    # Theorem 1: volume is always the lower bound
+    assert a.comm_volume == 2 * K * K
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), T=st.sampled_from([8, 16]),
+       E=st.sampled_from([4, 8]), K=st.sampled_from([1, 2]))
+def test_moe_combine_weight_conservation(seed, T, E, K):
+    """Per token, combine weights sum to <= 1 (== 1 without drops), so the
+    MoE output norm is bounded by the max expert output norm."""
+    d, ff = 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    router = jax.random.normal(ks[0], (d, E)) * 0.1
+    wg = jax.random.normal(ks[1], (E, d, ff)) * 0.05
+    wu = jax.random.normal(ks[2], (E, d, ff)) * 0.05
+    wd = jax.random.normal(ks[3], (E, ff, d)) * 0.05
+    x = jax.random.normal(ks[4], (1, T, d))
+    out, aux = moe_ffn(x, router, wg, wu, wd, RULES, experts_per_token=K,
+                       capacity_factor=8.0)
+    assert np.all(np.isfinite(np.asarray(out)))
+    assert np.isfinite(float(aux)) and float(aux) >= 1.0 - 1e-5  # >= balanced
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), step=st.integers(0, 100))
+def test_pipeline_random_access_consistency(seed, step):
+    """iterating k steps == random access at k (exact resume invariant)."""
+    ds = SyntheticTokens(vocab_size=32, global_batch=2, seq_len=8, seed=seed)
+    it = iter(ds)
+    for _ in range(step % 5):
+        next(it)
+    via_iter = next(it)
+    via_ra = ds.batch_at(step % 5)
+    np.testing.assert_array_equal(via_iter["tokens"], via_ra["tokens"])
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_star_modes_ordering(seed):
+    """PCSS (full overlap) is never slower than PCCS (no overlap); SCSS
+    never slower than SCCS (same communication order, overlap added)."""
+    from repro.core.network import random_star
+    from repro.core.star import solve
+    net = random_star(8, seed=seed)
+    N = 300
+    assert solve(net, N, "PCSS").finish_time <= \
+        solve(net, N, "PCCS").finish_time + 1e-9
+    assert solve(net, N, "SCSS").finish_time <= \
+        solve(net, N, "SCCS").finish_time + 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 5000), n=st.sampled_from([128, 400]))
+def test_mesh_lp_lower_bounds_integer(seed, n):
+    """LP relaxation lower-bounds every integer schedule (weak duality)."""
+    from repro.core.network import random_mesh
+    from repro.core.mesh_lp import solve_relaxed
+    from repro.core.heuristic import mft_lbp_heuristic
+    net = random_mesh(3, 3, seed=seed)
+    relax = solve_relaxed(net, n)
+    integer = mft_lbp_heuristic(net, n)
+    assert integer.t_finish >= relax.t_finish - 1e-6

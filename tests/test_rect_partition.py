@@ -1,0 +1,83 @@
+"""Paper §3 + §6.1: rectangular baselines, bounds, Theorem 1 / Lemma 2."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.network import random_star
+from repro.core.rect_partition import (even_col, lbp_volume, nrrp, peri_sum,
+                                       rect_lower_bound_volume, recursive,
+                                       speed_proportional_areas,
+                                       star_finish_time)
+
+
+def _areas(seed, p):
+    rng = np.random.default_rng(seed)
+    f = rng.uniform(0.5, 2.0, p)
+    return f / f.sum()
+
+
+@pytest.mark.parametrize("algo", [peri_sum, recursive, nrrp])
+@pytest.mark.parametrize("seed,p", [(0, 4), (1, 16), (2, 9), (3, 25)])
+def test_area_conservation(algo, seed, p):
+    f = _areas(seed, p)
+    part = algo(f)
+    got = part.areas(p)
+    assert np.allclose(np.sort(got), np.sort(f), atol=1e-9)
+    assert got.sum() == pytest.approx(1.0)
+
+
+def test_even_col_cost():
+    p = 16
+    part = even_col(p)
+    assert part.cost_unit() == pytest.approx(p * (1.0 / p) + p * 1.0)
+
+
+@pytest.mark.parametrize("seed,p", [(0, 16), (5, 8), (9, 25)])
+def test_rect_beats_nothing_below_lower_bound(seed, p):
+    """Lemma 2: every rectangular partition exceeds the global 2N^2 bound;
+    and each algo respects its approximation guarantee vs the rect LB."""
+    f = _areas(seed, p)
+    N = 1000
+    lb = rect_lower_bound_volume(f, N)
+    lbp = lbp_volume(N)
+    assert lbp < lb   # Lemma 2: 2N^2 < 2N sum(sqrt(s_i)) for p > 1
+    for algo, ratio in [(peri_sum, 1.75), (recursive, 1.35), (nrrp, 1.35)]:
+        v = algo(f).comm_volume(N)
+        assert v >= lb - 1e-6, algo.__name__
+        assert v <= ratio * lb + 1e-6, algo.__name__
+
+
+def test_nrrp_no_worse_than_recursive():
+    for seed in range(6):
+        f = _areas(seed, 2)  # square-corner case is a 2-proc leaf
+        assert nrrp(f).cost_unit() <= recursive(f).cost_unit() + 1e-9
+
+
+def test_square_corner_beats_guillotine_when_skewed():
+    """DeFlumere: one small processor -> corner square wins."""
+    f = np.array([0.95, 0.05])
+    v_n = nrrp(f).cost_unit()
+    v_r = recursive(f).cost_unit()
+    assert v_n < v_r
+    # cost = (w+h of square) + (full rows+cols) = 2*sqrt(0.05) + 2
+    assert v_n == pytest.approx(2 * np.sqrt(0.05) + 2.0, rel=1e-9)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), p=st.integers(2, 32))
+def test_property_lemma2(seed, p):
+    """C_REC > 2 N^2 for every algorithm and every area vector (p > 1)."""
+    f = _areas(seed, p)
+    for algo in (peri_sum, recursive, nrrp):
+        assert algo(f).cost_unit() > 2.0
+
+
+def test_star_finish_time_balance():
+    """Speed-proportional areas balance rect finish times vs Even-Col."""
+    net = random_star(16, seed=4)
+    N = 500
+    f = speed_proportional_areas(net)
+    t_bal = star_finish_time(peri_sum(f), net, N)
+    t_even = star_finish_time(even_col(16), net, N)
+    assert t_bal < t_even

@@ -1,0 +1,52 @@
+"""Straggler rebalance + elastic rescale planning (paper solvers as brain)."""
+
+import numpy as np
+import pytest
+
+from repro.core.partition import LayerAssignment
+from repro.runtime.rebalance import drop_devices, measure_speeds, plan_rebalance
+
+
+def test_measure_speeds():
+    s = measure_speeds([1.0, 2.0, 1.0, 0.5])   # device 3 is 2x fast, 1 slow
+    assert s[3] == s.max()
+    assert s[1] == s.min()
+    assert s.mean() == pytest.approx(1.0)
+
+
+def test_plan_rebalance_proportional():
+    K = 4096
+    plan = plan_rebalance(K, [1.0, 1.0, 2.0, 4.0], quantum=128)
+    k = plan.assignment.k
+    assert k.sum() == K
+    assert np.all(k % 128 == 0)
+    assert k[3] > k[2] > k[0]
+    assert plan.predicted_speedup > 1.0
+
+
+def test_plan_rebalance_small_K_falls_back():
+    plan = plan_rebalance(16, [1.0, 2.0], quantum=128)
+    assert plan.assignment.k.sum() == 16
+
+
+def test_straggler_gets_less():
+    plan = plan_rebalance(2048, [1.0] * 7 + [0.25], quantum=128)
+    k = plan.assignment.k
+    assert k[-1] <= k[:-1].min()
+    assert plan.predicted_speedup > 1.5   # even split is gated by straggler
+
+
+def test_drop_devices_resolves():
+    base = LayerAssignment.even(4096, 8, quantum=128)
+    plan = drop_devices(base, dead=[2, 5], speeds=[1.0] * 8, quantum=128)
+    assert plan.assignment.p == 6
+    assert plan.assignment.K == 4096
+    assert np.all(plan.assignment.k % 128 == 0)
+
+
+def test_layer_assignment_invariants():
+    a = LayerAssignment.from_speeds(1024, [1, 2, 3, 4], quantum=1)
+    assert a.K == 1024
+    assert a.offsets[0] == 0
+    assert a.offsets[-1] + a.k[-1] == 1024
+    assert a.comm_volume == 2 * 1024 * 1024   # Theorem 1

@@ -1,0 +1,83 @@
+"""Sharding rules + spec/pytree structural consistency for all 10 archs.
+
+These catch the class of bug that would only explode on a real pod: a
+PartitionSpec tree that does not match the parameter tree, or a spec whose
+rank disagrees with its leaf.
+"""
+
+import dataclasses
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import transformer as T
+from repro.sharding.rules import Rules, make_rules
+
+
+class _FakeMesh:
+    axis_names = ("pod", "data", "model")
+
+
+class _FakeMeshSingle:
+    axis_names = ("data", "model")
+
+
+def test_make_rules_filters_absent_axes():
+    r = make_rules("train", _FakeMeshSingle())
+    assert r.batch == ("data",)        # "pod" dropped
+    assert r.heads == "model"
+    r2 = make_rules("train", _FakeMesh())
+    assert r2.batch == ("pod", "data")
+
+
+def test_null_rules_noop():
+    r = Rules.null()
+    for f in dataclasses.fields(r):
+        assert getattr(r, f.name) is None
+    assert r.spec("batch", None) == P(None, None)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_match_param_tree(arch):
+    cfg = get_config(arch)
+    rules = make_rules("train", _FakeMesh())
+    shapes = jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = T.param_specs(cfg, rules)
+    # identical structure
+    jax.tree.structure(shapes) == jax.tree.structure(
+        jax.tree.map(lambda s: 0, specs, is_leaf=lambda s: isinstance(s, P)))
+    flat_sh = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    flat_sp = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda s: isinstance(s, P))[0]
+    assert len(flat_sh) == len(flat_sp)
+    for (pa, leaf), (pb, spec) in zip(flat_sh, flat_sp):
+        assert pa == pb
+        assert len(spec) <= leaf.ndim, (pa, spec, leaf.shape)
+        # every sharded dim must divide by 16 (one pod axis width)
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if ax is not None:
+                assert dim % 16 == 0, (pa, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("profile", ["decode", "long"])
+def test_cache_specs_match_cache_tree(arch, profile):
+    cfg = get_config(arch)
+    rules = make_rules(profile, _FakeMesh())
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, 16, 2048))
+    specs = T.cache_specs(cfg, rules)
+    flat_c = jax.tree_util.tree_flatten_with_path(cache)[0]
+    flat_s = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda s: isinstance(s, P))[0]
+    assert len(flat_c) == len(flat_s)
+    for (pa, leaf), (pb, spec) in zip(flat_c, flat_s):
+        assert pa == pb, (pa, pb)
+        assert len(spec) <= leaf.ndim
+
+
+def test_spec_lookup():
+    r = Rules(batch=("pod", "data"), heads="model")
+    assert r.spec("batch", None, "heads", None) == \
+        P(("pod", "data"), None, "model", None)

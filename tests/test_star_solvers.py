@@ -1,0 +1,100 @@
+"""Paper §4: closed-form star-network solvers + §4.5 integer adjustment."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.network import StarNetwork, random_star
+from repro.core.star import (SOLVERS, finish_time_for_split,
+                             per_processor_finish, solve)
+from repro.core.integer_adjust import adjust_integer, solve_integer
+
+MODES = ["SCSS", "SCCS", "PCCS", "PCSS"]
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_equal_finish_time(mode, seed):
+    """Theorem 2: optimal split => all processors finish simultaneously."""
+    net = random_star(16, seed=seed)
+    N = 700
+    s = solve(net, N, mode)
+    assert s.k.sum() == pytest.approx(N, rel=1e-9)
+    assert np.all(s.k >= 0)
+    tf = per_processor_finish(net, N, s.k, mode)
+    live = s.k > 1e-9
+    assert tf[live].max() - tf[live].min() < 1e-6 * tf.max()
+    assert s.finish_time == pytest.approx(tf.max(), rel=1e-9)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_comm_volume_is_2N2(mode):
+    """Theorem 1: LBP total communication volume == 2 N^2 (the bound)."""
+    net = random_star(16, seed=7)
+    N = 512
+    s = solve(net, N, mode)
+    assert s.comm_volume == pytest.approx(2 * N * N, rel=1e-9)
+
+
+def test_pcss_proportional_to_speed():
+    """Eqs (31)-(33): PCSS k_i proportional to 1/w_i."""
+    net = random_star(8, seed=3)
+    s = solve(net, 400, "PCSS")
+    ratio = s.k * net.w
+    assert np.allclose(ratio, ratio[0], rtol=1e-9)
+
+
+def test_any_other_split_is_worse():
+    """Perturbing the optimal split cannot reduce the makespan."""
+    net = random_star(12, seed=5)
+    N = 600
+    rng = np.random.default_rng(0)
+    for mode in MODES:
+        s = solve(net, N, mode)
+        for _ in range(20):
+            delta = rng.normal(0, 0.5, net.p)
+            delta -= delta.mean()
+            k2 = np.maximum(s.k + delta, 0)
+            k2 *= N / k2.sum()
+            assert finish_time_for_split(net, N, k2, mode) >= s.finish_time - 1e-9
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("quantum", [1, 4])
+def test_integer_adjustment(mode, quantum):
+    net = random_star(16, seed=11)
+    N = 512
+    s = solve(net, N, mode)
+    k_int = adjust_integer(net, N, s.k, mode, quantum=quantum)
+    assert k_int.sum() == N
+    assert np.all(k_int >= 0)
+    assert np.all(k_int % quantum == 0)
+    # rounding costs little: within one quantum-unit of work per processor
+    tf_int = finish_time_for_split(net, N, k_int, mode)
+    unit = quantum * N * N * net.w.max() * net.t_cp
+    assert tf_int <= s.finish_time + 2 * unit
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(64, 1024),
+       p=st.integers(2, 24))
+def test_property_solvers_valid(seed, n, p):
+    net = random_star(p, seed=seed)
+    for mode in MODES:
+        s = solve(net, n, mode)
+        assert s.k.sum() == pytest.approx(n, rel=1e-6)
+        assert np.all(s.k >= -1e-9)
+        assert np.isfinite(s.finish_time)
+        ki, tfi = solve_integer(net, n, mode)
+        assert ki.sum() == n and np.all(ki >= 0)
+
+
+def test_degenerate_slow_link_scss():
+    """SCSS with a pathologically slow link: later processors get 0 load."""
+    w = np.full(4, 6e-4)
+    z = np.array([3e-4, 3e-4, 1e3, 3e-4])   # link 3 unusable
+    net = StarNetwork(w=w, z=z)
+    s = solve(net, 100, "SCSS")
+    assert s.k.sum() == pytest.approx(100)
+    assert np.all(s.k >= 0)
+    assert s.k[3] == 0.0 or s.k[3] < 1e-9

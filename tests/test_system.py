@@ -1,0 +1,76 @@
+"""End-to-end system behaviour: training loop, checkpoint/restart, failure
+recovery, data pipeline determinism."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.data.pipeline import SyntheticTokens
+from repro.runtime.trainer import Trainer, TrainerConfig
+from repro.sharding.rules import Rules
+
+
+def _trainer(tmp_path, **over):
+    cfg = get_reduced("llama3_2_3b")
+    kw = dict(total_steps=8, checkpoint_every=3,
+              checkpoint_dir=str(tmp_path / "ckpt"), grad_accum=1)
+    kw.update(over)
+    return Trainer(cfg, Rules.null(), TrainerConfig(**kw),
+                   batch_size=4, seq_len=32)
+
+
+def test_loss_decreases(tmp_path):
+    tr = _trainer(tmp_path, total_steps=12)
+    hist = tr.run()
+    assert len(hist) == 12
+    first = np.mean([h["loss"] for h in hist[:3]])
+    last = np.mean([h["loss"] for h in hist[-3:]])
+    assert last < first
+
+
+def test_failure_recovery_bitwise_identical(tmp_path):
+    """A simulated device fault + restart reproduces the uninterrupted
+    trajectory exactly (checkpoint + random-access data pipeline)."""
+    clean = _trainer(tmp_path / "a").run()
+    faulty = _trainer(tmp_path / "b", inject_failure_at=5).run()
+    assert len(faulty) >= len(clean)
+    clean_by_step = {h["step"]: h["loss"] for h in clean}
+    # after recovery the re-run steps must match bit-for-bit
+    for h in faulty:
+        assert h["loss"] == pytest.approx(clean_by_step[h["step"]],
+                                          rel=0, abs=0), h["step"]
+
+
+def test_resume_from_checkpoint_continues(tmp_path):
+    t1 = _trainer(tmp_path, total_steps=6)
+    t1.run()
+    # second trainer resumes from step 6 checkpoint and finishes to 10
+    t2 = _trainer(tmp_path, total_steps=10)
+    hist = t2.run()
+    steps = [h["step"] for h in hist]
+    assert steps[0] == 6 and steps[-1] == 9
+
+
+def test_pipeline_determinism_and_host_sharding():
+    ds = SyntheticTokens(vocab_size=64, global_batch=8, seq_len=16, seed=3)
+    a = ds.batch_at(5)
+    b = ds.batch_at(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = ds.batch_at(6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # host sharding partitions rows
+    h0 = ds.batch_at(5, host_id=0, n_hosts=2)
+    h1 = ds.batch_at(5, host_id=1, n_hosts=2)
+    assert h0["tokens"].shape == (4, 16)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_pipeline_learnable_structure():
+    """The affine-bigram stream must be predictable above chance."""
+    ds = SyntheticTokens(vocab_size=64, global_batch=4, seq_len=256, seed=0,
+                         noise=0.1)
+    x = ds.batch_at(0)["tokens"]
+    a, b = 3 + 2 * (0 % 5), 17
+    pred = (a * x[:, :-1] + b) % 64
+    acc = float(np.mean(pred == x[:, 1:]))
+    assert acc > 0.8   # 1 - noise - collisions
