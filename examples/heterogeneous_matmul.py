@@ -23,12 +23,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.hlo_cost import analyze_hlo
+from repro.compat import make_mesh
 from repro.core.lbp_matmul import lbp_matmul, lbp_matmul_heterogeneous, lbp_matmul_reference
 from repro.core.partition import LayerAssignment
 from repro.runtime.rebalance import plan_rebalance
 
-mesh = jax.make_mesh((8,), ("model",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("model",))
 
 # --- straggler-aware split from measured speeds ---------------------------
 speeds = [1.0, 1.0, 1.0, 0.5, 1.0, 2.0, 1.0, 1.0]   # device 3 slow, 5 fast

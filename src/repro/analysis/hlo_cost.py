@@ -149,25 +149,46 @@ def analyze_hlo(hlo: str) -> Dict:
                             trip = max(trip, int(c))
                     body_trips[body] = trip
                     loop_calls[name] += [body, cond]
+            im = _INSTR_RE.match(ln)
+            op_of_line = im.group(3) if im else None
             for t in re.findall(r"(?:calls|to_apply)=%?([\w\.\-]+)", ln):
-                fusion_targets.add(t)
+                if op_of_line == "call":
+                    # a plain call is an inlined sub-computation whose
+                    # memory traffic is real (the CPU backend wraps
+                    # parallelized fusions this way) — charge it with the
+                    # caller's multiplier instead of skipping it like a
+                    # fusion body / reduce subcomputation.
+                    loop_calls[name].append(t)
+                else:
+                    fusion_targets.add(t)
             for t in re.findall(r"branch_computations=\{([^}]*)\}", ln):
                 for b in t.split(","):
                     loop_calls[name].append(b.strip().lstrip("%"))
 
     called = {t for ts in loop_calls.values() for t in ts} | fusion_targets
     roots = [c for c in comps if c not in called]
-    mult: Dict[str, float] = {}
 
-    def visit(name: str, m: float):
-        if m <= mult.get(name, 0):
-            return
-        mult[name] = m
-        for t in loop_calls.get(name, []):
-            visit(t, m * body_trips.get(t, 1))
-
-    for r in roots:
-        visit(r, 1.0)
+    # Execution-count multipliers over the (acyclic) call graph.  Each
+    # call edge contributes its caller's multiplier — a computation
+    # reached from two call sites (or from the entry AND a loop body)
+    # executes the SUM, not the max.  Processed in topological order so
+    # every caller's multiplier is final before it is propagated.
+    parents: Dict[str, set] = defaultdict(set)
+    for n, ts in loop_calls.items():
+        for t in ts:
+            parents[t].add(n)
+    mult: Dict[str, float] = {r: 1.0 for r in roots}
+    remaining = {t: len(ps) for t, ps in parents.items()}
+    queue = list(roots)
+    while queue:
+        n = queue.pop()
+        m = mult.get(n, 0.0)
+        for t in loop_calls.get(n, []):           # one entry per call site
+            mult[t] = mult.get(t, 0.0) + m * body_trips.get(t, 1)
+        for t in set(loop_calls.get(n, [])):
+            remaining[t] -= 1
+            if remaining[t] == 0:
+                queue.append(t)
 
     # map each fusion computation's parameters to their slice behaviour so
     # fusion call sites can charge sliced windows instead of full operands
@@ -334,6 +355,20 @@ def analyze_hlo(hlo: str) -> Dict:
                 d["count"] += m_comp
                 d["bytes"] += nbytes * m_comp
                 d["link_bytes"] += link * m_comp
+
+    if hbm_bytes == 0.0:
+        # Some backend/fusion layouts leave every charged instruction
+        # behind call/fusion indirection the walk above cannot price;
+        # fall back to the floor every program pays: entry parameters
+        # read once + root results written once.
+        for name in roots:
+            for ln in comps.get(name, []):
+                im = _INSTR_RE.match(ln)
+                if not im:
+                    continue
+                _, result, op = im.groups()
+                if op == "parameter" or ln.startswith("ROOT"):
+                    hbm_bytes += _shape_bytes(result)
 
     return {
         "flops": flops,

@@ -1,0 +1,168 @@
+"""Registry-based dispatch for LBP layer aggregation (the paper's §1.2).
+
+Layer-based partition leaves each device holding one full-shape *layer*
+``L_i = A[:, K_i] @ B[K_i, :]``; an *aggregation mode* decides what happens
+to the partial layers.  The built-in modes:
+
+  "layers"     keep the layers distributed (the paper's 'distributed
+               storage, lazy sync-up') — zero collective bytes, output
+               grows a leading device axis.
+  "allreduce"  eager psum — replicated result, ring bytes
+               2 (p-1)/p x bytes(out).
+  "scatter"    deferred psum_scatter — each device owns 1/p of the
+               aggregated output along one dim, ring bytes (p-1)/p x
+               bytes(out): exactly half of allreduce, the paper's lazy
+               aggregation made productive.
+
+Every shard_map body in the repo combines partial layers through
+``aggregate(partial, mode, axis)`` and builds its out-spec with
+``out_spec(mode, axis, base)``, so the semantics, the PartitionSpec
+plumbing and the analytic per-device byte model live together in ONE
+registry entry per mode.  ``analysis/`` and tests query the same numbers
+the runtime executes via ``collective_bytes_per_device`` /
+``bytes_table``.  Future modes ("ring", "hierarchical" two-level
+aggregation across ICI+DCN) plug in with ``register_mode`` without
+touching any call site.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Mode = str  # registry key: "layers" | "allreduce" | "scatter" | ...
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregationMode:
+    """One way of combining per-device partial layers inside shard_map.
+
+    combine(partial, axis, scatter_dim) runs INSIDE the shard_map body and
+    returns the per-device block of the combined result.  out_spec(axis,
+    base, scatter_dim) maps the combined result's dims to mesh axes, where
+    ``base`` is the spec tuple the output would carry fully replicated
+    over ``axis`` (scatter replaces entry ``scatter_dim``; layers prepends
+    the device axis).  link_byte_factor(p) is the analytic ring-link bytes
+    each device moves, as a multiple of the combined output's byte size.
+    """
+    name: str
+    combine: Callable[[jax.Array, str, int], jax.Array]
+    out_spec: Callable[[str, Tuple, int], P]
+    link_byte_factor: Callable[[int], float]
+    adds_device_axis: bool = False
+    description: str = ""
+
+
+_REGISTRY: Dict[str, AggregationMode] = {}
+
+
+def register_mode(mode: AggregationMode, *, overwrite: bool = False) -> None:
+    if mode.name in _REGISTRY and not overwrite:
+        raise ValueError(f"aggregation mode {mode.name!r} already registered")
+    _REGISTRY[mode.name] = mode
+
+
+def unregister_mode(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+def get_mode(name: Mode) -> AggregationMode:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown aggregation mode {name!r}; "
+            f"registered: {available_modes()}") from None
+
+
+def available_modes() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# uniform API used by shard_map bodies and spec builders
+# ---------------------------------------------------------------------------
+
+def aggregate(partial: jax.Array, mode: Mode, axis: str, *,
+              scatter_dim: Optional[int] = None) -> jax.Array:
+    """Combine this device's partial layer over mesh axis ``axis``.
+
+    Must be called inside a shard_map body.  ``scatter_dim`` picks the
+    output dim scatter-mode shards (default: last).
+    """
+    if scatter_dim is None:
+        scatter_dim = partial.ndim - 1
+    return get_mode(mode).combine(partial, axis, scatter_dim)
+
+
+def out_spec(mode: Mode, axis: str, base: Sequence, *,
+             scatter_dim: Optional[int] = None) -> P:
+    """PartitionSpec of the aggregated output.
+
+    ``base``: per-dim spec entries of the combined output as if replicated
+    over ``axis`` (batch axes stay in place).  scatter overwrites entry
+    ``scatter_dim`` (default: last) with ``axis``; layers prepends the
+    device axis.
+    """
+    base = tuple(base)
+    if scatter_dim is None:
+        scatter_dim = len(base) - 1
+    return get_mode(mode).out_spec(axis, base, scatter_dim)
+
+
+def collective_bytes_per_device(out_elems: int, p: int, mode: Mode,
+                                itemsize: int = 2) -> float:
+    """Analytic ring-link bytes per device for aggregating ``out_elems``
+    output elements across ``p`` devices in ``mode``."""
+    return get_mode(mode).link_byte_factor(p) * out_elems * itemsize
+
+
+def bytes_table(out_elems: int, p: int, itemsize: int = 2) -> Dict[str, float]:
+    """Per-mode byte accounting for every registered mode (the query
+    surface ``analysis/`` uses for roofline narratives and reports)."""
+    return {name: collective_bytes_per_device(out_elems, p, name, itemsize)
+            for name in available_modes()}
+
+
+# ---------------------------------------------------------------------------
+# built-in modes
+# ---------------------------------------------------------------------------
+
+def _scatter_spec(axis: str, base: Tuple, scatter_dim: int) -> P:
+    entries = list(base)
+    if entries[scatter_dim] is not None:
+        raise ValueError(
+            f"scatter_dim {scatter_dim} already sharded over "
+            f"{entries[scatter_dim]!r} in base spec {base}")
+    entries[scatter_dim] = axis
+    return P(*entries)
+
+
+register_mode(AggregationMode(
+    name="layers",
+    combine=lambda partial, axis, _sd: partial[None],
+    out_spec=lambda axis, base, _sd: P(axis, *base),
+    link_byte_factor=lambda p: 0.0,
+    adds_device_axis=True,
+    description="no aggregation: distributed layer storage, lazy sync-up",
+))
+
+register_mode(AggregationMode(
+    name="allreduce",
+    combine=lambda partial, axis, _sd: jax.lax.psum(partial, axis),
+    out_spec=lambda axis, base, _sd: P(*base),
+    link_byte_factor=lambda p: 2.0 * (p - 1) / p,
+    description="eager psum: replicated result (paper-faithful)",
+))
+
+register_mode(AggregationMode(
+    name="scatter",
+    combine=lambda partial, axis, sd: jax.lax.psum_scatter(
+        partial, axis, scatter_dimension=sd, tiled=True),
+    out_spec=_scatter_spec,
+    link_byte_factor=lambda p: 1.0 * (p - 1) / p,
+    description="deferred psum_scatter: each device owns 1/p of the sum",
+))

@@ -34,11 +34,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
+from ..compat import shard_map
+from . import collectives
+from .collectives import Mode
 from .partition import LayerAssignment
-
-Mode = str  # "layers" | "allreduce" | "scatter"
 
 
 # ---------------------------------------------------------------------------
@@ -79,24 +79,11 @@ def lbp_matmul(
         bspec[0] = batch_axis
     x_spec = P(*bspec, axis)
     w_spec = P(axis, None)
-
-    if mode == "layers":
-        out_spec = P(axis, *bspec, None)
-    elif mode == "allreduce":
-        out_spec = P(*bspec, None)
-    elif mode == "scatter":
-        out_spec = P(*bspec, axis)
-    else:
-        raise ValueError(mode)
+    out_spec = collectives.out_spec(mode, axis, (*bspec, None))
 
     def local(xl: jax.Array, wl: jax.Array) -> jax.Array:
         layer = jnp.einsum("...k,kf->...f", xl, wl)  # this device's layer
-        if mode == "layers":
-            return layer[None]
-        if mode == "allreduce":
-            return jax.lax.psum(layer, axis)
-        return jax.lax.psum_scatter(layer, axis, scatter_dimension=layer.ndim - 1,
-                                    tiled=True)
+        return collectives.aggregate(layer, mode, axis)
 
     fn = shard_map(local, mesh=mesh, in_specs=(x_spec, w_spec),
                    out_specs=out_spec, check_vma=False)
@@ -154,24 +141,12 @@ def lbp_matmul_ragged(
 
     x_spec = P(axis, *bspec, None)
     w_spec = P(axis, None, None)
-    if mode == "layers":
-        out_spec = P(axis, *bspec, None)
-    elif mode == "allreduce":
-        out_spec = P(*bspec, None)
-    elif mode == "scatter":
-        out_spec = P(*bspec, axis)
-    else:
-        raise ValueError(mode)
+    out_spec = collectives.out_spec(mode, axis, (*bspec, None))
 
     def local(xl: jax.Array, wl: jax.Array) -> jax.Array:
         # xl: (1, ..., k_max), wl: (1, k_max, F)
         layer = jnp.einsum("...k,kf->...f", xl[0], wl[0])
-        if mode == "layers":
-            return layer[None]
-        if mode == "allreduce":
-            return jax.lax.psum(layer, axis)
-        return jax.lax.psum_scatter(layer, axis, scatter_dimension=layer.ndim - 1,
-                                    tiled=True)
+        return collectives.aggregate(layer, mode, axis)
 
     fn = shard_map(local, mesh=mesh, in_specs=(x_spec, w_spec),
                    out_specs=out_spec, check_vma=False)
@@ -199,15 +174,9 @@ def collective_bytes_per_device(out_elems: int, p: int, mode: Mode,
                                 itemsize: int = 2) -> float:
     """Analytic ICI bytes per device moved by the aggregation collective.
 
-    layers: 0 (the paper's distributed storage);
-    allreduce (ring): 2 (p-1)/p * bytes(out);
-    scatter (ring reduce-scatter): (p-1)/p * bytes(out).
+    Delegates to the ``core.collectives`` registry (layers: 0; allreduce
+    ring: 2 (p-1)/p x bytes(out); scatter ring: (p-1)/p x bytes(out));
+    kept here as a stable re-export for older call sites.
     """
-    b = out_elems * itemsize
-    if mode == "layers":
-        return 0.0
-    if mode == "allreduce":
-        return 2.0 * (p - 1) / p * b
-    if mode == "scatter":
-        return 1.0 * (p - 1) / p * b
-    raise ValueError(mode)
+    return collectives.collective_bytes_per_device(out_elems, p, mode,
+                                                   itemsize)

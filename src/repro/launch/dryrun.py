@@ -26,6 +26,7 @@ import traceback
 import jax
 
 from ..analysis.hlo_cost import analyze_hlo
+from ..compat import cost_analysis as compat_cost_analysis
 from ..configs import ARCH_IDS
 from ..configs.shapes import cells_for
 from .input_specs import make_plan
@@ -55,7 +56,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = compat_cost_analysis(compiled)
     parsed = analyze_hlo(compiled.as_text())
     coll = parsed["collectives"]
 

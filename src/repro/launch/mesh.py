@@ -11,21 +11,18 @@ jax device state (the dry-run sets XLA_FLAGS before first jax init).
 
 from __future__ import annotations
 
-import jax
+from ..compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types="auto")
 
 
 def make_smoke_mesh():
     """Single-device mesh for CPU smoke paths (no named axes used)."""
-    return jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((1,), ("data",), axis_types="auto")
 
 
 def device_count_required(multi_pod: bool) -> int:

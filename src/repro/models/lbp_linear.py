@@ -22,9 +22,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
+from ..core import collectives
 from ..sharding.rules import Rules
 
 
@@ -47,21 +47,18 @@ def lbp_row_parallel(h: jax.Array, w: jax.Array, rules: Rules) -> jax.Array:
     is set (deferred aggregation), else replicated (eager psum)."""
     model_ax = _axis_or_none(rules.ff)
     data_ax = _axis_or_none(rules.embed)
-    seq_out = rules.seq is not None
+    mode = "scatter" if rules.seq is not None else "allreduce"
 
     in_h = P(rules.batch, None, model_ax)
     in_w = P(model_ax, data_ax)
-    out = P(rules.batch, model_ax if seq_out else None, None)
+    out = collectives.out_spec(mode, model_ax, (rules.batch, None, None),
+                               scatter_dim=1)
 
     def local(hl, wl):
         if data_ax is not None:
             wl = jax.lax.all_gather(wl, data_ax, axis=1, tiled=True)
         partial = jnp.einsum("bsf,fd->bsd", hl, wl)   # this device's layer
-        if seq_out:
-            return jax.lax.psum_scatter(partial, model_ax,
-                                        scatter_dimension=1, tiled=True)
-        return jax.lax.psum(partial, model_ax)
+        return collectives.aggregate(partial, mode, model_ax, scatter_dim=1)
 
-    fn = shard_map(local, mesh=rules.mesh, in_specs=(in_h, in_w),
-                   out_specs=out, check_vma=False)
+    fn = rules.shard_map(local, in_specs=(in_h, in_w), out_specs=out)
     return fn(h, w)

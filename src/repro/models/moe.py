@@ -74,8 +74,9 @@ def moe_ffn_shard_map(x, router_w, w_gate, w_up, w_down, rules,
     activation psum (model axis) — vs GSPMD's full token all-gather
     (§Perf Cell A iter 3 post-mortem).
     """
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from ..core import collectives
 
     B, S, d = x.shape
     E = router_w.shape[1]
@@ -122,14 +123,15 @@ def moe_ffn_shard_map(x, router_w, w_gate, w_up, w_down, rules,
         contrib = ye.astype(jnp.float32) * (slot_w * slot_valid)[:, None]
         y_l = jnp.zeros((xt_l.shape[0], xt_l.shape[1]), jnp.float32
                         ).at[slot_token].add(contrib)
-        return jax.lax.psum(y_l.astype(x.dtype), model_ax)
+        return collectives.aggregate(y_l.astype(x.dtype), "allreduce",
+                                     model_ax)
 
-    fn = shard_map(
-        local, mesh=mesh,
+    fn = rules.shard_map(
+        local,
         in_specs=(P(rules.batch, None), P(rules.batch, None),
                   P(rules.batch, None), P(model_ax, data_ax, None),
                   P(model_ax, data_ax, None), P(model_ax, None, data_ax)),
-        out_specs=P(rules.batch, None), check_vma=False)
+        out_specs=P(rules.batch, None))
     yt = fn(xt, top_i, top_w, w_gate, w_up, w_down)
     return yt.reshape(B, S, d), aux
 

@@ -30,8 +30,9 @@ class Tuning:
     moe_capacity_sharded: bool = True
     cache_write_constraint: bool = True
     reduce_bf16: bool = False   # paper-faithful default: exact f32 layer sum
-    # explicit shard_map LBP with psum_scatter for the row-parallel matmuls
-    # (deferred aggregation; pairs with the train_sp/prefill_sp profiles)
+    # explicit shard_map LBP for the row-parallel matmuls, aggregated via
+    # the core.collectives registry ("scatter" under the train_sp /
+    # prefill_sp profiles, "allreduce" otherwise)
     explicit_lbp_scatter: bool = False
     # per-data-row MoE dispatch (no cross-row token gather).  Measured
     # REFUTED with GSPMD (it cannot prove the combine scatter-add local and

@@ -56,6 +56,15 @@ class Rules:
         return P(*(getattr(self, n) if n is not None else None
                    for n in logical))
 
+    def shard_map(self, fn, in_specs, out_specs):
+        """shard_map ``fn`` over this rules' mesh (via ``repro.compat`` so
+        the jax-version drift is handled in one place).  The explicit
+        sub-blocks (LBP linear, EP MoE) all go through here."""
+        from ..compat import shard_map as _shard_map
+        assert self.mesh is not None, "shard_map needs concrete mesh rules"
+        return _shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+
 
 def shard(x: jax.Array, rules: Rules, *logical: Optional[str]) -> jax.Array:
     """with_sharding_constraint under the active rules (no-op for null)."""

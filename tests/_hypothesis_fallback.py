@@ -1,0 +1,113 @@
+"""Deterministic stand-in for the `hypothesis` API surface this suite uses.
+
+Installed into ``sys.modules`` by conftest ONLY when the real package is
+missing (hermetic containers without the dev extra), so the property tests
+still execute instead of breaking collection.  It is intentionally tiny:
+``@given`` draws ``max_examples`` samples from each strategy with an RNG
+seeded from the test's qualified name (stable across runs and
+PYTHONHASHSEED), with no shrinking and no example database.  Install the
+real hypothesis (``pip install -e .[dev]``) to get full property testing.
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+import types
+import zlib
+
+__version__ = "0.0.0-repro-fallback"
+IS_FALLBACK = True
+
+_SETTINGS_ATTR = "_fallback_hyp_settings"
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw, label):
+        self._draw = draw
+        self._label = label
+
+    def draw_with(self, rng):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return f"fallback_strategy({self._label})"
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                     f"integers({min_value}, {max_value})")
+
+
+def _floats(min_value, max_value):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                     f"floats({min_value}, {max_value})")
+
+
+def _booleans():
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)), "booleans()")
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements),
+                     f"sampled_from({elements!r})")
+
+
+def _just(value):
+    return _Strategy(lambda rng: value, f"just({value!r})")
+
+
+def _lists(elem, min_size=0, max_size=10):
+    return _Strategy(
+        lambda rng: [elem.draw_with(rng)
+                     for _ in range(rng.randint(min_size, max_size))],
+        f"lists({elem!r})")
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+for _name, _fn in [("integers", _integers), ("floats", _floats),
+                   ("booleans", _booleans), ("sampled_from", _sampled_from),
+                   ("just", _just), ("lists", _lists)]:
+    setattr(strategies, _name, _fn)
+
+
+class settings:
+    def __init__(self, max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None,
+                 **_ignored):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        setattr(fn, _SETTINGS_ATTR, self)
+        return fn
+
+
+def given(*arg_strategies, **kwarg_strategies):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = (getattr(wrapper, _SETTINGS_ATTR, None)
+                   or getattr(fn, _SETTINGS_ATTR, None))
+            n = cfg.max_examples if cfg else _DEFAULT_MAX_EXAMPLES
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode("utf-8")))
+            for i in range(n):
+                drawn = tuple(s.draw_with(rng) for s in arg_strategies)
+                kdrawn = {k: s.draw_with(rng)
+                          for k, s in kwarg_strategies.items()}
+                try:
+                    fn(*args, *drawn, **kwargs, **kdrawn)
+                except Exception as e:  # surface the failing example
+                    raise AssertionError(
+                        f"fallback-hypothesis example {i + 1}/{n} failed "
+                        f"for {fn.__qualname__} with args={drawn} "
+                        f"kwargs={kdrawn}: {e}") from e
+
+        # pytest follows __wrapped__ to the original signature and would
+        # demand fixtures for the strategy-drawn params; hide it.
+        del wrapper.__wrapped__
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+
+    return decorate

@@ -66,10 +66,10 @@ def test_restore_with_different_sharding(tmp_path):
     """Reshard-on-restore: same host, different (trivial) sharding objects —
     the elastic-rescale code path."""
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.compat import make_mesh
     st = _state(2)
     save_checkpoint(tmp_path, 1, st)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     shardings = jax.tree.map(lambda x: NamedSharding(mesh, P()), st)
     target = jax.eval_shape(lambda: _state())
     _, loaded = load_checkpoint(tmp_path, 1, target, shardings=shardings)

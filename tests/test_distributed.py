@@ -29,12 +29,12 @@ def run_sub(body: str) -> str:
 def test_lbp_matmul_modes_and_ragged():
     out = run_sub("""
         import jax, numpy as np, jax.numpy as jnp
+        from repro.compat import make_mesh
         from repro.core.lbp_matmul import (lbp_matmul, lbp_matmul_reference,
                                            lbp_matmul_heterogeneous)
         from repro.core.partition import LayerAssignment
         assert len(jax.devices()) == 8
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 64))
         w = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
         ref = np.asarray(lbp_matmul_reference(x, w))
@@ -63,10 +63,10 @@ def test_scatter_mode_halves_collective_bytes():
     moves half the ring bytes of all-reduce — verified on compiled HLO."""
     out = run_sub("""
         import jax, jax.numpy as jnp
+        from repro.compat import make_mesh
         from repro.core.lbp_matmul import lbp_matmul
         from repro.analysis.hlo_cost import analyze_hlo
-        mesh = jax.make_mesh((8,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("model",))
         x = jnp.zeros((64, 512), jnp.float32)
         w = jnp.zeros((512, 256), jnp.float32)
         res = {}
@@ -87,9 +87,9 @@ def test_scatter_mode_halves_collective_bytes():
 def test_compressed_pmean():
     out = run_sub("""
         import jax, numpy as np, jax.numpy as jnp
+        from repro.compat import make_mesh
         from repro.optim.compression import compressed_pmean
-        mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("pod", "data"))
         # per-pod distinct values, replicated within pod
         g = {"w": jnp.ones((8, 16)) * 3.0}
         red, err = compressed_pmean(g, mesh, axis="pod")
@@ -144,6 +144,7 @@ def test_explicit_lbp_scatter_parity():
     produce the same loss as the default implicit path."""
     out = run_sub("""
         import jax, numpy as np, jax.numpy as jnp
+        from repro.compat import make_mesh
         from repro.configs import get_reduced
         from repro.sharding.rules import make_rules
         from repro.train.step import (init_train_state, make_train_step,
@@ -158,8 +159,7 @@ def test_explicit_lbp_scatter_parity():
         opt = AdamWConfig(warmup_steps=2, total_steps=10)
         key = jax.random.PRNGKey(0)
         batch = {"tokens": jax.random.randint(key, (8, 32), 0, cfg.vocab_size)}
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((4, 2), ("data", "model"))
 
         losses = {}
         for name, prof, flags in [
@@ -186,6 +186,7 @@ def test_train_step_small_mesh_parity():
     """2x4 mesh train_step == single-device train_step (same seeds)."""
     out = run_sub("""
         import jax, numpy as np, jax.numpy as jnp
+        from repro.compat import make_mesh
         from repro.configs import get_reduced
         from repro.sharding.rules import Rules, make_rules
         from repro.train.step import (init_train_state, make_train_step,
@@ -203,8 +204,7 @@ def test_train_step_small_mesh_parity():
         s0, m0 = jax.jit(make_train_step(cfg, r0, opt, 2))(st0, batch)
 
         # 2x4 mesh with the train profile
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         rules = make_rules("train", mesh)
         with mesh:
             st1 = init_train_state(cfg, key)

@@ -62,6 +62,37 @@ def test_bytes_reasonable_for_elementwise():
     assert 0.5 * 8e6 <= res["hbm_bytes"] <= 4 * 8e6
 
 
+def _call_module(n_calls: int) -> str:
+    body = ["ENTRY %main (a: f32[16,16]) -> f32[16,16] {",
+            "  %a = f32[16,16]{1,0} parameter(0)"]
+    prev = "a"
+    for i in range(n_calls):
+        kw = "ROOT " if i == n_calls - 1 else ""
+        body.append(f"  {kw}%c{i} = f32[16,16]{{1,0}} "
+                    f"call(f32[16,16]{{1,0}} %{prev}), to_apply=%sub")
+        prev = f"c{i}"
+    return "\n".join([
+        "HloModule m, is_scheduled=true",
+        "",
+        "%sub (p: f32[16,16]) -> f32[16,16] {",
+        "  %p = f32[16,16]{1,0} parameter(0)",
+        "  ROOT %add = f32[16,16]{1,0} add(f32[16,16]{1,0} %p, "
+        "f32[16,16]{1,0} %p)",
+        "}",
+        "",
+        *body,
+        "}"])
+
+
+def test_call_sites_sum_not_max():
+    """A computation reached from two call sites executes twice; its cost
+    must be charged per call site, not once at the max multiplier."""
+    once = analyze_hlo(_call_module(1))["hbm_bytes"]
+    twice = analyze_hlo(_call_module(2))["hbm_bytes"]
+    assert once > 0
+    assert twice == pytest.approx(2 * once)
+
+
 def test_dynamic_slice_counts_window_not_operand():
     big = jnp.zeros((4096, 256), jnp.float32)
 
