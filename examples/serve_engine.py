@@ -1,0 +1,83 @@
+"""Continuous-batching serving engine demo.
+
+    PYTHONPATH=src python examples/serve_engine.py [--arch llama3_2_3b]
+
+Serves a staggered-arrival workload of mixed-length requests through
+``repro.serve.engine``, verifies a few outputs against the
+``greedy_generate`` oracle, then shows the LBP capacity planner splitting
+traffic across heterogeneous replicas with the §4 star solvers (and
+re-planning when measured rates drift).
+"""
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_reduced
+from repro.models import transformer as T
+from repro.serve import (CapacityPlanner, EngineConfig, ServingEngine,
+                         TransformerModel, greedy_generate)
+from repro.sharding.rules import Rules
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="llama3_2_3b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    rules = Rules.null()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    from repro.serve.engine import synthetic_workload
+    workload = synthetic_workload(args.requests, cfg.vocab_size,
+                                  lens=(6, 10, 16, 24), news=(2, 4, 8, 12),
+                                  stagger=0.5)
+
+    engine = ServingEngine(TransformerModel(params, cfg, rules),
+                           EngineConfig(n_slots=args.slots,
+                                        max_prompt_len=24, max_new_cap=12,
+                                        cache_len=36))
+    for prompt, max_new, arrival in workload:
+        engine.submit(prompt, max_new, arrival=arrival)
+    rep = engine.run()
+
+    print(f"{cfg.name}: {args.requests} staggered requests on "
+          f"{args.slots} slots")
+    print(f"  {rep.tokens_per_sec:.1f} tok/s aggregate, occupancy "
+          f"{rep.occupancy:.2f}, TTFT mean {rep.ttft_mean*1e3:.0f}ms")
+    print(f"  rid arrival S  max_new  first tokens")
+    for rid, (prompt, max_new, arrival) in enumerate(workload[:6]):
+        toks = rep.completed[rid]
+        print(f"  {rid:3d} {arrival:7.1f} {len(prompt):2d} {max_new:7d}  "
+              f"{list(map(int, toks[:8]))}")
+
+    # spot-check against the reference oracle
+    for rid in (0, args.requests // 2, args.requests - 1):
+        prompt, max_new, _ = workload[rid]
+        ref = np.asarray(greedy_generate(params, cfg, rules,
+                                         np.asarray(prompt)[None],
+                                         max_new=max_new))[0]
+        assert np.array_equal(ref, rep.completed[rid]), rid
+    print("  oracle spot-check: token-identical")
+
+    # --- capacity planning across heterogeneous replicas -----------------
+    rates = [140.0, 90.0, 210.0, 60.0]   # measured tokens/sec per replica
+    planner = CapacityPlanner(rates, mode="PCCS")
+    plan = planner.plan(64)
+    print(f"\ncapacity planner (PCCS) over replicas {rates}:")
+    print(f"  shares: {plan.shares.tolist()}  (64 requests)")
+    ft = planner.finish_times(plan)
+    print(f"  per-replica finish (model units): "
+          f"{np.round(ft, 1).tolist()}  spread {ft.max() - ft.min():.1f}")
+    routed = planner.route(plan)
+    print(f"  first 16 routed: {routed[:16].tolist()}")
+    new_plan = planner.observe([140.0, 90.0, 140.0, 60.0], 64)
+    print(f"  drift re-plan (replica 2 slowed): "
+          f"{new_plan.shares.tolist() if new_plan else 'kept old plan'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,10 @@ to the partial layers.  The built-in modes:
                aggregated output along one dim, ring bytes (p-1)/p x
                bytes(out): exactly half of allreduce, the paper's lazy
                aggregation made productive.
+  "ring"       neighbour ring pass-around (ppermute relay) — replicated
+               result like allreduce but the full partial travels p-1
+               hops, (p-1) x bytes(out) per device: the sequential
+               neighbour-relay byte model of unswitched fabrics.
 
 Every shard_map body in the repo combines partial layers through
 ``aggregate(partial, mode, axis)`` and builds its out-spec with
@@ -20,9 +24,9 @@ Every shard_map body in the repo combines partial layers through
 plumbing and the analytic per-device byte model live together in ONE
 registry entry per mode.  ``analysis/`` and tests query the same numbers
 the runtime executes via ``collective_bytes_per_device`` /
-``bytes_table``.  Future modes ("ring", "hierarchical" two-level
-aggregation across ICI+DCN) plug in with ``register_mode`` without
-touching any call site.
+``bytes_table``.  Future modes ("hierarchical" two-level aggregation
+across ICI+DCN) plug in with ``register_mode`` without touching any
+call site.
 """
 
 from __future__ import annotations
@@ -165,4 +169,36 @@ register_mode(AggregationMode(
     out_spec=_scatter_spec,
     link_byte_factor=lambda p: 1.0 * (p - 1) / p,
     description="deferred psum_scatter: each device owns 1/p of the sum",
+))
+
+
+def _axis_size(axis: str) -> int:
+    """Static mesh-axis size inside a shard_map body: psum of a concrete
+    (non-tracer) value is constant-folded to ``value * axis_size``, so the
+    result stays a Python int usable for loop bounds."""
+    return int(jax.lax.psum(1, axis))
+
+
+def _ring_combine(partial: jax.Array, axis: str, _sd: int) -> jax.Array:
+    """Neighbour-ring pass-around reduce: each device forwards the full
+    partial layer around the ring p-1 times, accumulating as it goes.
+    Replicated result like allreduce, but every hop moves bytes(out) per
+    link — the paper's sequential neighbour-relay regime, and the byte
+    model CPU/edge clusters without switched fabrics actually see."""
+    p = _axis_size(axis)
+    acc, buf = partial, partial
+    perm = [(i, (i + 1) % p) for i in range(p)]
+    for _ in range(p - 1):
+        buf = jax.lax.ppermute(buf, axis, perm)
+        acc = acc + buf
+    return acc
+
+
+register_mode(AggregationMode(
+    name="ring",
+    combine=_ring_combine,
+    out_spec=lambda axis, base, _sd: P(*base),
+    link_byte_factor=lambda p: float(p - 1),
+    description="neighbour ring pass-around: full partial forwarded p-1 "
+                "hops (replicated result; p/2 x allreduce's ring bytes)",
 ))

@@ -1,47 +1,108 @@
-"""Serving launcher: batched prefill + greedy decode.
+"""Serving launcher: continuous-batching engine over the reduced configs.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_3b --demo
 
-``--demo`` serves the reduced config on local devices with a batch of
-synthetic prompts (deliverable (b): runnable serving driver).
+``--demo`` serves a batch of synthetic staggered-arrival prompts through
+``serve.engine.ServingEngine`` on local devices and reports prefill
+latency (time-to-first-token) separately from decode throughput.
+``--oracle`` additionally replays every request through the reference
+``greedy_generate`` and verifies the engine reproduced it token-for-token.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from ..configs import ARCH_IDS, get_reduced
 from ..models import transformer as T
-from ..serve.step import greedy_generate
+from ..serve import (EngineConfig, ServingEngine, TransformerModel,
+                     greedy_generate)
 from ..sharding.rules import Rules
 
 
-def main():
+def _positive_int(flag: str):
+    def parse(text: str) -> int:
+        try:
+            value = int(text)
+        except ValueError:
+            raise argparse.ArgumentTypeError(
+                f"{flag} expects an integer, got {text!r}") from None
+        if value < 1:
+            raise argparse.ArgumentTypeError(
+                f"{flag} must be >= 1, got {value} (the engine cannot "
+                f"serve an empty batch or generate zero tokens)")
+        return value
+    return parse
+
+
+def build_workload(args, vocab_size: int):
+    """Synthetic staggered trace: prompt lengths vary below --prompt-len."""
+    from ..serve.engine import synthetic_workload
+    lens = sorted({max(2, args.prompt_len // 4), max(2, args.prompt_len // 2),
+                   max(2, (3 * args.prompt_len) // 4), args.prompt_len})
+    return synthetic_workload(args.batch, vocab_size, lens=lens,
+                              news=(args.max_new,),
+                              stagger=1.0 / max(1, args.slots))
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="llama3_2_3b")
-    ap.add_argument("--demo", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--max-new", type=int, default=16)
-    args = ap.parse_args()
+    ap.add_argument("--demo", action="store_true",
+                    help="serve the synthetic staggered workload (also the "
+                         "default behaviour; kept for script compatibility)")
+    ap.add_argument("--batch", type=_positive_int("--batch"), default=4)
+    ap.add_argument("--prompt-len", type=_positive_int("--prompt-len"),
+                    default=32)
+    ap.add_argument("--max-new", type=_positive_int("--max-new"), default=16)
+    ap.add_argument("--slots", type=_positive_int("--slots"), default=4,
+                    help="continuous-batching cache slots")
+    ap.add_argument("--oracle", action="store_true",
+                    help="verify every output against greedy_generate")
+    args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch)
     rules = Rules.null()
     key = jax.random.PRNGKey(0)
     params = T.init_params(cfg, key)
-    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                cfg.vocab_size)
-    t0 = time.time()
-    out = greedy_generate(params, cfg, rules, prompt, max_new=args.max_new)
-    dt = time.time() - t0
-    print(f"arch={cfg.name}  batch={args.batch}  prompt={args.prompt_len}  "
-          f"new={args.max_new}  {dt:.2f}s "
-          f"({args.batch*args.max_new/dt:.1f} tok/s)")
-    print("generated token ids (first row):", list(map(int, out[0][:16])))
+    workload = build_workload(args, cfg.vocab_size)
+
+    model = TransformerModel(params, cfg, rules)
+    engine = ServingEngine(model, EngineConfig(
+        n_slots=args.slots, max_prompt_len=args.prompt_len,
+        max_new_cap=args.max_new,
+        cache_len=args.prompt_len + args.max_new))
+    for prompt, max_new, arrival in workload:
+        engine.submit(prompt, max_new, arrival=arrival)
+    report = engine.run()
+
+    print(f"arch={cfg.name}  requests={args.batch}  slots={args.slots}  "
+          f"max_prompt={args.prompt_len}  new={args.max_new}")
+    print(f"prefill: {report.prefill_count} prompts, "
+          f"{report.prefill_tokens} tokens in {report.prefill_wall:.2f}s  "
+          f"(TTFT mean {report.ttft_mean*1e3:.0f}ms)")
+    print(f"decode:  {report.decode_tokens} tokens in "
+          f"{report.decode_wall:.2f}s "
+          f"({report.decode_tokens_per_sec:.1f} tok/s, "
+          f"occupancy {report.occupancy:.2f})")
+    print(f"total:   {report.total_tokens} tokens in {report.wall:.2f}s "
+          f"({report.tokens_per_sec:.1f} tok/s aggregate)")
+    first = report.completed[0]
+    print("generated token ids (first request):",
+          list(map(int, first[:16])))
+
+    if args.oracle:
+        for rid, (prompt, max_new, _) in enumerate(workload):
+            ref = np.asarray(greedy_generate(
+                params, cfg, rules, np.asarray(prompt)[None],
+                max_new=max_new))[0]
+            got = report.completed[rid]
+            assert np.array_equal(ref, got), (
+                f"request {rid}: engine {got} != oracle {ref}")
+        print(f"oracle check: {len(workload)} requests token-identical")
 
 
 if __name__ == "__main__":

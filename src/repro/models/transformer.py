@@ -590,8 +590,17 @@ def cache_specs(cfg: ModelConfig, rules: Rules):
 
 
 def prefill(params, cfg: ModelConfig, rules: Rules, tokens, cache,
-            prefix_embeds=None):
-    """Run the full prompt, filling ``cache``; returns (cache, last_logits)."""
+            prefix_embeds=None, last_index=None):
+    """Run the full prompt, filling ``cache``; returns (cache, last_logits).
+
+    ``last_index`` (B,) optionally picks a per-row position for the
+    returned logits instead of the common last one — the serving engine
+    right-pads mixed-length prompts to one batch and reads each row's
+    logits at its own true last token (indices count from the start of
+    ``prefix_embeds`` when given).  Causality keeps the pad positions out
+    of every real position's attention, so row r's logits match an
+    unpadded length-``last_index[r]+1`` prefill.
+    """
     B = tokens.shape[0]
     x = embed_tokens(tokens, params["embed"], rules)
     if prefix_embeds is not None:
@@ -602,7 +611,10 @@ def prefill(params, cfg: ModelConfig, rules: Rules, tokens, cache,
     x, cache = _stack_with_cache(x, params, cfg, rules, positions, cache,
                                  pos=None)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    last = x[:, -1]
+    if last_index is None:
+        last = x[:, -1]
+    else:
+        last = x[jnp.arange(B), jnp.asarray(last_index, jnp.int32)]
     logits = jnp.einsum("bd,vd->bv", last.astype(jnp.float32),
                         params["embed"].astype(jnp.float32))
     return cache, shard(logits, rules, "batch", "vocab")

@@ -1,1 +1,5 @@
-from .step import make_decode_step, make_prefill_step  # noqa: F401
+from .step import (cached_decode_step, cached_prefill_step,  # noqa: F401
+                   greedy_generate, make_decode_step, make_prefill_step)
+from .engine import (CapacityPlanner, EngineConfig, EngineReport,  # noqa: F401
+                     ReplicaPlan, ServingEngine, TransformerModel,
+                     serve_requests)

@@ -1,0 +1,20 @@
+"""Continuous-batching serving engine with LBP capacity planning.
+
+The layer between the §4 solvers and the user-facing launcher:
+
+  queue.py       FIFO admission-controlled request queue
+  cache_pool.py  slot-based ragged KV-cache pool
+  scheduler.py   per-iteration batch former (retire / admit / decode)
+  engine.py      the engine loop + transformer model adapter
+  planner.py     star-network traffic split across heterogeneous replicas
+"""
+
+from .cache_pool import SlotCachePool, write_slot  # noqa: F401
+from .engine import (EngineConfig, EngineReport, ServingEngine,  # noqa: F401
+                     TransformerModel, serve_requests)
+from .planner import (CapacityPlanner, DCN_LINK, ICI_LINK,  # noqa: F401
+                      ReplicaPlan)
+from .queue import AdmissionError, AdmissionLimits, RequestQueue  # noqa: F401
+from .request import Request  # noqa: F401
+from .scheduler import Scheduler, StepPlan  # noqa: F401
+from .workload import synthetic_workload  # noqa: F401

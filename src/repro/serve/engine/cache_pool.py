@@ -1,0 +1,76 @@
+"""Slot-based ragged KV-cache pool.
+
+The engine's cache is one pytree with ``n_slots`` rows on the batch axis
+(axis 1 for every cache leaf in the dense/moe/hybrid families — the ssm
+family mixes batch axes and is rejected by the model adapter).  A *slot*
+is one row; a request owns exactly one slot from prefill to retirement.
+
+``SlotCachePool`` is pure bookkeeping — slot ids, a free list, and the
+conservation counters the property tests check (``n_allocated ==
+n_freed`` once drained).  The tensor side is the two functions below:
+``write_slot`` splices a freshly prefilled single-request cache into the
+pool (overwriting the whole row, so no stale bytes from the previous
+occupant survive), and the pool tree itself is threaded functionally
+through the jitted decode step.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+
+BATCH_AXIS = 1  # cache-leaf batch axis for the supported families
+
+
+class SlotCachePool:
+    def __init__(self, n_slots: int):
+        assert n_slots >= 1
+        self.n_slots = int(n_slots)
+        self._free: List[int] = list(range(n_slots))
+        self._used: set = set()
+        self.n_allocated = 0
+        self.n_freed = 0
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_count(self) -> int:
+        return len(self._used)
+
+    @property
+    def drained(self) -> bool:
+        return not self._used
+
+    def active_slots(self) -> Tuple[int, ...]:
+        return tuple(sorted(self._used))
+
+    def allocate(self) -> int:
+        if not self._free:
+            raise RuntimeError("cache pool exhausted: no free slots")
+        slot = self._free.pop(0)
+        self._used.add(slot)
+        self.n_allocated += 1
+        return slot
+
+    def free(self, slot: int) -> None:
+        if slot not in self._used:
+            raise RuntimeError(f"slot {slot} is not allocated")
+        self._used.remove(slot)
+        self._free.append(slot)
+        self._free.sort()
+        self.n_freed += 1
+
+
+def write_slot(pool_tree, request_tree, slot: int):
+    """Splice a single-request cache (batch dim 1) into pool row ``slot``.
+
+    Every leaf is written whole, including its zero tail beyond the
+    prompt, so the slot carries no state from a previous occupant.
+    """
+    return jax.tree_util.tree_map(
+        lambda pool, one: jax.lax.dynamic_update_slice_in_dim(
+            pool, one.astype(pool.dtype), slot, axis=BATCH_AXIS),
+        pool_tree, request_tree)

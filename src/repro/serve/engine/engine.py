@@ -1,0 +1,389 @@
+"""Continuous-batching serving engine.
+
+One engine iteration = (retire, admit+prefill, one slot-batched decode
+step).  Prefill runs per request at its exact prompt length (B=1, no
+padding) and the resulting cache row is spliced into the slot pool;
+decode runs once per iteration over the *whole* slot batch with per-row
+token/position vectors, so requests at different depths share the step.
+Inactive slots decode garbage rows that are simply never read — the jit
+cost of a fixed batch shape buys a single decode compilation for the
+engine's lifetime.
+
+The decode loop never syncs with the device: per-slot token/position
+state stays on device (inactive slots carry garbage that admission
+overwrites), each step's next-token vector is appended to a trace, and
+completion is detected by *count* (a request joins every decode batch
+from admission until it has max_new tokens, so its tokens are consecutive
+trace rows).  The trace is materialized once at drain — host round-trips
+per served token would otherwise dominate small-model serving.
+
+Under greedy decoding the engine is token-identical to per-request
+``serve.step.greedy_generate`` (the reference oracle): decode attention
+masks cache positions beyond each request's own depth, so neither the
+shared (longer) cache length nor the co-batched neighbours change a
+request's logits' argmax.
+
+The engine is model-agnostic: anything with ``init_pool`` / ``prefill``
+/ ``decode`` (see ``TransformerModel``) can serve, which is how the
+scheduling-invariant property tests run against a tensor-free fake.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...models import transformer as T
+from ...models.config import ModelConfig
+from ...sharding.rules import Rules
+from .cache_pool import SlotCachePool, write_slot
+from .queue import AdmissionLimits, RequestQueue
+from .request import Request
+from .scheduler import Scheduler
+
+
+class TransformerModel:
+    """Adapter binding the engine to ``models.transformer`` serving steps.
+
+    Every engine operation is ONE jitted dispatch — serving small models
+    is dispatch-bound, so prefill fuses cache init + forward + argmax +
+    slot splice + token-state update into a single call (compiled once
+    per distinct prompt length; the slot index is traced), and decode
+    fuses the position advance.  ``decode_multi`` runs k decode steps in
+    one ``lax.scan`` dispatch (compiled once per k) for the drain phase.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, rules: Rules):
+        if cfg.family == "ssm":
+            raise NotImplementedError(
+                "ssm caches mix batch axes; the slot pool assumes batch "
+                "axis 1 on every cache leaf")
+        from ..step import make_decode_step
+        self.params = params
+        self.cfg = cfg
+        self.rules = rules
+        self._decode_step = make_decode_step(cfg, rules)
+
+        def group_prefill(cache_len, params, tokens, lengths, slots, pool,
+                          tok_vec, pos_vec):
+            """Prefill B requests right-padded to one length, splice each
+            row into its slot.  Valid because causal attention keeps pad
+            positions out of real rows, and decode overwrites each pad
+            cache entry before the position mask exposes it.
+
+            ``cache_len`` is static (the pool's time length, recorded by
+            init_pool) — it cannot be sniffed from pool leaf shapes, which
+            for hybrid caches lead with the conv-state width."""
+            B = tokens.shape[0]
+            batch = T.init_cache(cfg, B, cache_len)
+            batch, logits = T.prefill(params, cfg, rules, tokens, batch,
+                                      last_index=lengths - 1)
+            firsts = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            for b in range(B):   # static unroll: B is a compile-time const
+                row = jax.tree_util.tree_map(
+                    lambda c: jax.lax.dynamic_slice_in_dim(c, b, 1, axis=1),
+                    batch)
+                pool = write_slot(pool, row, slots[b])
+                tok_vec = jax.lax.dynamic_update_slice(
+                    tok_vec, firsts[b:b + 1], (slots[b],))
+                pos_vec = jax.lax.dynamic_update_slice(
+                    pos_vec, lengths[b:b + 1], (slots[b],))
+            return pool, firsts, tok_vec, pos_vec
+
+        def decode1(params, tok, pos, cache):
+            nxt, _, cache = self._decode_step(params, tok[:, None], pos,
+                                              cache)
+            return cache, nxt, nxt, pos + 1
+
+        def decode_k(k):
+            def run(params, tok, pos, cache):
+                def body(carry, _):
+                    tok, pos, cache = carry
+                    nxt, _, cache = self._decode_step(params, tok[:, None],
+                                                      pos, cache)
+                    return (nxt, pos + 1, cache), nxt
+
+                (tok, pos, cache), stack = jax.lax.scan(
+                    body, (tok, pos, cache), None, length=k)
+                return cache, stack, tok, pos
+            return run
+
+        self._group_prefill = jax.jit(group_prefill, static_argnums=0)
+        self._cache_len = None            # recorded by init_pool
+        self._decode1 = jax.jit(decode1)
+        self._decode_k = {}
+        self._decode_k_builder = decode_k
+        # right-padded grouped prefill needs a purely causal stack: any
+        # recurrent state (hybrid/ssm) or ring-windowed cache would absorb
+        # the pad tokens, so those families prefill one request at a time.
+        self.can_group_prefill = (cfg.family in ("dense", "moe")
+                                  and cfg.window == 0)
+
+    def init_pool(self, n_slots: int, cache_len: int):
+        self._cache_len = int(cache_len)
+        return T.init_cache(self.cfg, n_slots, cache_len)
+
+    def token_state(self, n_slots: int):
+        """Initial per-slot (token, position) decode inputs (on device)."""
+        return jnp.zeros(n_slots, jnp.int32), jnp.zeros(n_slots, jnp.int32)
+
+    def prefill(self, pool, prompts, slots, tok, pos):
+        """Prefill a group of requests into their slots in ONE dispatch
+        (right-padded to the group max; compiled once per (B, max_len)).
+
+        Returns (pool, firsts (B,) device array, tok, pos) with every
+        slot's token-state entries updated — no host sync.  Families that
+        cannot pad (recurrent state) fall back to per-request calls.
+        """
+        if not self.can_group_prefill and len(prompts) > 1:
+            firsts = []
+            for prompt, slot in zip(prompts, slots):
+                pool, f, tok, pos = self.prefill(pool, [prompt], [slot],
+                                                 tok, pos)
+                firsts.append(f)
+            return pool, jnp.concatenate(firsts), tok, pos
+        assert self._cache_len is not None, "init_pool must run first"
+        B = len(prompts)
+        lengths = np.array([p.shape[0] for p in prompts], np.int32)
+        smax = int(lengths.max())
+        batch = np.zeros((B, smax), np.int32)
+        for b, p in enumerate(prompts):
+            batch[b, :p.shape[0]] = p
+        return self._group_prefill(self._cache_len, self.params,
+                                   jnp.asarray(batch), jnp.asarray(lengths),
+                                   jnp.asarray(np.asarray(slots, np.int32)),
+                                   pool, tok, pos)
+
+    def decode(self, pool, tok, pos):
+        """One decode step over the full slot batch.
+
+        Returns (pool, next (n_slots,), tok, pos) — the position advance
+        is fused; nothing syncs with the host.
+        """
+        return self._decode1(self.params, tok, pos, pool)
+
+    def decode_multi(self, pool, tok, pos, k: int):
+        """k fused decode steps in one dispatch; next tokens stacked
+        (k, n_slots).  Compiles once per distinct k (the engine buckets
+        k to powers of two)."""
+        if k == 1:
+            pool, nxt, tok, pos = self.decode(pool, tok, pos)
+            return pool, nxt[None], tok, pos
+        if k not in self._decode_k:
+            self._decode_k[k] = jax.jit(self._decode_k_builder(k))
+        return self._decode_k[k](self.params, tok, pos, pool)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    n_slots: int = 8
+    max_prompt_len: int = 64
+    max_new_cap: int = 64
+    max_queue: int = 4096
+    max_prefill_per_step: int = 2
+    cache_len: Optional[int] = None   # default: max_prompt_len + max_new_cap
+
+    @property
+    def pool_len(self) -> int:
+        return (self.cache_len if self.cache_len is not None
+                else self.max_prompt_len + self.max_new_cap)
+
+
+@dataclasses.dataclass
+class EngineReport:
+    completed: Dict[int, np.ndarray]       # rid -> generated tokens
+    steps: int
+    decode_steps: int
+    prefill_count: int
+    decode_tokens: int
+    prefill_tokens: int
+    occupancy: float                       # mean active/n_slots over decode steps
+    ttft: Dict[int, float]                 # rid -> seconds to first token
+    wall: float
+    prefill_wall: float
+    decode_wall: float
+
+    @property
+    def total_tokens(self) -> int:
+        # every completed request's first token came from its prefill
+        return self.decode_tokens + len(self.completed)
+
+    @property
+    def tokens_per_sec(self) -> float:
+        return self.total_tokens / max(self.wall, 1e-9)
+
+    @property
+    def decode_tokens_per_sec(self) -> float:
+        return self.decode_tokens / max(self.decode_wall, 1e-9)
+
+    @property
+    def ttft_mean(self) -> float:
+        return float(np.mean(list(self.ttft.values()))) if self.ttft else 0.0
+
+
+class ServingEngine:
+    def __init__(self, model, config: EngineConfig = EngineConfig()):
+        self.model = model
+        self.config = config
+        self.queue = RequestQueue(AdmissionLimits(
+            max_prompt_len=config.max_prompt_len,
+            max_new_cap=config.max_new_cap,
+            max_queue=config.max_queue,
+            max_total_len=config.pool_len))
+        self.pool = SlotCachePool(config.n_slots)
+        self.scheduler = Scheduler(self.queue, self.pool,
+                                   config.max_prefill_per_step)
+        self.cache = model.init_pool(config.n_slots, config.pool_len)
+        self._tok, self._pos = model.token_state(config.n_slots)
+        self._trace = []                  # (k_i, n_slots) next-token blocks
+        self._rows = 0                    # total trace rows so far
+        self.completed: Dict[int, Request] = {}
+        self.clock = 0.0
+        self._stats = dict(decode_steps=0, prefill_count=0, decode_tokens=0,
+                           prefill_tokens=0, occupancy_sum=0.0,
+                           prefill_wall=0.0, decode_wall=0.0)
+
+    def submit(self, prompt, max_new: int, arrival: float = 0.0) -> int:
+        return self.queue.submit(prompt, max_new, arrival).rid
+
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """One engine iteration; returns False when fully drained."""
+        if not self.scheduler.has_work:
+            return False
+        now, wall = self.clock, time.perf_counter()
+        self.queue.mark_eligible(now, wall)
+        plan = self.scheduler.plan(now)
+        if not (plan.retired or plan.admit or self.scheduler.active):
+            # nothing in flight and nothing eligible: fast-forward the
+            # clock to the next arrival instead of spinning no-op steps
+            nxt = self.queue.next_arrival()
+            if nxt is not None and nxt > self.clock:
+                self.clock = float(nxt)
+                return True
+        for r in plan.retired:
+            r.finish_wall = r.finish_wall or wall
+            self.completed[r.rid] = r
+
+        if plan.admit:
+            t0 = time.perf_counter()
+            self.cache, firsts, self._tok, self._pos = self.model.prefill(
+                self.cache, [r.prompt for r in plan.admit],
+                [r.slot for r in plan.admit], self._tok, self._pos)
+            if hasattr(firsts, "block_until_ready"):
+                firsts.block_until_ready()  # TTFT is a real latency metric
+            t1 = time.perf_counter()
+            for b, r in enumerate(plan.admit):
+                r.first_token = (firsts, b)   # sliced lazily at drain
+                r.n_generated = 1
+                r.trace_start = self._rows
+                r.trace_slot = r.slot
+                r.eligible_wall = (t0 if r.eligible_wall is None
+                                   else r.eligible_wall)
+                r.first_token_wall = t1
+                self._stats["prefill_tokens"] += r.prompt_len
+            self._stats["prefill_count"] += len(plan.admit)
+            self._stats["prefill_wall"] += t1 - t0
+
+        if plan.decode:
+            # decode fusion: when nothing was admitted this step AND no
+            # admission can happen before the next retirement (queue empty,
+            # or every slot busy), the next k iterations are pure decode —
+            # run them as ONE dispatch.  k is the smallest remaining budget
+            # among in-flight requests (nobody overshoots and the next
+            # retirement lands exactly at the call boundary), bucketed to
+            # a power of two to bound compilations.
+            k = 1
+            if not plan.admit and (len(self.queue) == 0
+                                   or self.pool.free_count == 0):
+                k = min(r.max_new - r.n_generated for r in plan.decode)
+                k = 1 << max(0, k.bit_length() - 1)
+            t0 = time.perf_counter()
+            self.cache, rows, self._tok, self._pos = self.model.decode_multi(
+                self.cache, self._tok, self._pos, k)
+            self._trace.append(rows)       # (k, n_slots)
+            self._rows += k
+            for r in plan.decode:
+                r.n_generated += k
+            t1 = time.perf_counter()
+            self._stats["decode_steps"] += k
+            self._stats["decode_tokens"] += k * len(plan.decode)
+            self._stats["occupancy_sum"] += (k * len(plan.decode)
+                                             / self.config.n_slots)
+            self._stats["decode_wall"] += t1 - t0
+        self.clock += float(max(k, 1) if plan.decode else 1)
+        return True
+
+    def _materialize(self) -> Dict[int, np.ndarray]:
+        """Pull the step trace from device once and slice per request."""
+        trace = (np.asarray(jax.device_get(jnp.concatenate(self._trace)))
+                 if self._trace else np.zeros((0, self.config.n_slots),
+                                              np.int32))
+        out: Dict[int, np.ndarray] = {}
+        fetched: Dict[int, np.ndarray] = {}   # one transfer per admit group
+        for rid, r in self.completed.items():
+            firsts, b = r.first_token
+            group = fetched.get(id(firsts))
+            if group is None:
+                group = fetched[id(firsts)] = np.asarray(
+                    jax.device_get(firsts))
+            first = group[b:b + 1]
+            dec = trace[r.trace_start:r.trace_start + r.max_new - 1,
+                        r.trace_slot]
+            assert dec.shape[0] == r.max_new - 1, (rid, dec.shape, r.max_new)
+            r.tokens = np.concatenate([first, dec]).astype(np.int32)
+            out[rid] = r.tokens
+        return out
+
+    def run(self, max_steps: Optional[int] = None) -> EngineReport:
+        """Drive until drained; returns the report for this run."""
+        t_start = time.perf_counter()
+        n = 0
+        while self.step():
+            n += 1
+            if max_steps is not None and n >= max_steps:
+                break
+        completed = self._materialize()   # blocks on all in-flight work
+        wall = time.perf_counter() - t_start
+        if max_steps is None:
+            assert self.pool.drained, "drained engine still holds slots"
+            assert self.pool.n_allocated == self.pool.n_freed, (
+                self.pool.n_allocated, self.pool.n_freed)
+        s = self._stats
+        ttft = {r.rid: (r.first_token_wall - r.eligible_wall)
+                for r in self.completed.values()
+                if r.first_token_wall is not None
+                and r.eligible_wall is not None}
+        occ = (s["occupancy_sum"] / s["decode_steps"]
+               if s["decode_steps"] else 0.0)
+        return EngineReport(
+            completed=completed,
+            steps=n, decode_steps=s["decode_steps"],
+            prefill_count=s["prefill_count"],
+            decode_tokens=s["decode_tokens"],
+            prefill_tokens=s["prefill_tokens"],
+            occupancy=occ, ttft=ttft, wall=wall,
+            prefill_wall=s["prefill_wall"], decode_wall=s["decode_wall"])
+
+
+def serve_requests(params, cfg: ModelConfig, rules: Rules, requests,
+                   n_slots: int = 8, max_prefill_per_step: int = 2
+                   ) -> EngineReport:
+    """Convenience one-shot: serve [(prompt, max_new, arrival), ...]."""
+    reqs = [(np.asarray(p, np.int32).reshape(-1), int(m), float(a))
+            for p, m, a in requests]
+    max_len = max(p.shape[0] + m for p, m, _ in reqs)
+    ec = EngineConfig(n_slots=n_slots,
+                      max_prompt_len=max(p.shape[0] for p, _, _ in reqs),
+                      max_new_cap=max(m for _, m, _ in reqs),
+                      cache_len=max_len,
+                      max_prefill_per_step=max_prefill_per_step)
+    eng = ServingEngine(TransformerModel(params, cfg, rules), ec)
+    for p, m, a in reqs:
+        eng.submit(p, m, arrival=a)
+    return eng.run()

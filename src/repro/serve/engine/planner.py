@@ -1,0 +1,148 @@
+"""LBP capacity planner: split serving traffic across heterogeneous replicas.
+
+Dynamic request scheduling on heterogeneous workers is the serving-time
+analogue of the paper's static layer split.  Each serving replica i is a
+child of a star network (§4): ``w_i = 1 / measured tokens-per-sec`` and
+``z_i`` its link class (ICI near-zero, DCN per-pod).  A batch of N
+incoming requests is the divisible load; the §4 equality-based solvers
+give the real-valued split with the equal-finish-time property, and §4.5
+integer adjustment (``core.integer_adjust``) turns it into whole-request
+shares (quantum > 1 models replicas that only accept full micro-batches).
+
+Rate drift (thermal throttling, noisy neighbours) is handled the same way
+``runtime/rebalance.py`` handles stragglers: re-measure, and re-solve when
+the measured rates have moved past a threshold.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from ...core.integer_adjust import adjust_integer
+from ...core.network import StarNetwork
+from ...core.star import SOLVERS, StarSchedule, per_processor_finish
+from ...runtime.rebalance import measure_speeds
+
+ICI_LINK = 1e-9    # near-zero: in-pod replicas, solver balances compute only
+DCN_LINK = 1e-3    # cross-pod link class
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaPlan:
+    schedule: StarSchedule      # real-valued §4 solution (k sums to N)
+    shares: np.ndarray          # (p,) integer requests per replica
+    mode: str
+    rates: np.ndarray           # tokens/sec the plan was solved against
+
+    @property
+    def p(self) -> int:
+        return int(self.shares.shape[0])
+
+    @property
+    def n_requests(self) -> int:
+        return int(self.shares.sum())
+
+    def fractions(self) -> np.ndarray:
+        return self.shares / max(self.n_requests, 1)
+
+
+class CapacityPlanner:
+    """Traffic splitter over p replicas with measured token rates."""
+
+    def __init__(self, rates: Sequence[float],
+                 link_class: Optional[Sequence[float]] = None,
+                 mode: str = "PCCS", quantum: int = 1,
+                 drift_threshold: float = 0.2):
+        self.rates = np.asarray(rates, dtype=np.float64)
+        assert np.all(self.rates > 0)
+        self.link = (np.full_like(self.rates, ICI_LINK)
+                     if link_class is None
+                     else np.asarray(link_class, dtype=np.float64))
+        assert self.link.shape == self.rates.shape
+        self.mode = mode
+        self.quantum = int(quantum)
+        self.drift_threshold = float(drift_threshold)
+
+    @property
+    def p(self) -> int:
+        return int(self.rates.shape[0])
+
+    def network(self) -> StarNetwork:
+        return StarNetwork(w=1.0 / self.rates, z=self.link.copy())
+
+    def plan(self, n_requests: int) -> ReplicaPlan:
+        assert n_requests >= 1
+        if self.quantum > 1 and n_requests % self.quantum:
+            raise ValueError(
+                f"n_requests={n_requests} must be a multiple of the "
+                f"micro-batch quantum {self.quantum} (pad the batch)")
+        net = self.network()
+        sched = SOLVERS[self.mode](net, n_requests)
+        shares = adjust_integer(net, n_requests, sched.k, self.mode,
+                                quantum=self.quantum)
+        return ReplicaPlan(schedule=sched, shares=shares, mode=self.mode,
+                           rates=self.rates.copy())
+
+    # ------------------------------------------------------------------
+    def drift(self, new_rates: Sequence[float]) -> float:
+        """Largest relative per-replica rate change vs the current model."""
+        new = np.asarray(new_rates, dtype=np.float64)
+        return float(np.max(np.abs(new - self.rates) / self.rates))
+
+    def observe(self, new_rates: Sequence[float],
+                n_requests: int) -> Optional[ReplicaPlan]:
+        """Adopt new measurements; returns a fresh plan iff they drifted
+        past the threshold (else None — keep routing on the old plan)."""
+        new = np.asarray(new_rates, dtype=np.float64)
+        if new.shape != self.rates.shape or not np.all(new > 0):
+            # a 0/negative rate (dead replica) would poison w = 1/rate and
+            # every later drift() with inf/NaN — the caller must shrink
+            # the replica set instead (cf. runtime.rebalance.drop_devices)
+            raise ValueError(
+                f"measured rates must be positive for all {self.p} "
+                f"replicas (got {new!r}); drop dead replicas and build a "
+                f"new planner instead")
+        if self.drift(new) <= self.drift_threshold:
+            return None
+        self.rates = new
+        return self.plan(n_requests)
+
+    def observe_step_times(self, step_times: Sequence[float],
+                           n_requests: int,
+                           tokens_per_step: float = 1.0
+                           ) -> Optional[ReplicaPlan]:
+        """Re-plan from measured per-replica step times (the
+        ``runtime.rebalance.measure_speeds`` path): rate_i =
+        relative_speed_i scaled back to tokens/sec by the mean rate."""
+        rel = measure_speeds(step_times)          # mean-1 relative rates
+        mean_rate = tokens_per_step * float(np.mean(
+            1.0 / np.asarray(step_times, dtype=np.float64)))
+        return self.observe(rel * mean_rate, n_requests)
+
+    # ------------------------------------------------------------------
+    def route(self, plan: ReplicaPlan) -> np.ndarray:
+        """Deterministic request->replica assignment interleaved by share
+        (smooth weighted round-robin), so replicas fill evenly in time
+        rather than in contiguous blocks."""
+        n, shares = plan.n_requests, plan.shares.astype(np.float64)
+        total = shares.sum()
+        credit = np.zeros(plan.p)
+        out = np.empty(n, dtype=np.int64)
+        remaining = plan.shares.astype(np.int64).copy()
+        for j in range(n):
+            credit += shares
+            credit[remaining == 0] = -np.inf
+            i = int(np.argmax(credit))
+            credit[i] -= total
+            remaining[i] -= 1
+            out[j] = i
+        return out
+
+    def finish_times(self, plan: ReplicaPlan) -> np.ndarray:
+        """Per-replica finish times of the integer shares under the §4
+        timing model (for the equal-finish-time check)."""
+        return per_processor_finish(self.network(), plan.n_requests,
+                                    plan.shares, plan.mode)

@@ -1,0 +1,98 @@
+"""FIFO request queue with admission control.
+
+Admission control rejects malformed work at submit time — prompt/max-new
+budgets and a queue-depth cap — so shape failures can never reach the
+jitted serving steps.  The queue is FIFO *among eligible requests*: order
+is (arrival, rid), and ``pop_ready(now)`` only releases requests whose
+arrival time has passed, which is how benchmarks replay staggered traces.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from .request import QUEUED, Request
+
+
+class AdmissionError(ValueError):
+    """Request rejected at submit time (budget or capacity violation)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionLimits:
+    max_prompt_len: int = 1024
+    max_new_cap: int = 1024
+    max_queue: int = 4096
+    # per-request total budget: a cache slot's time axis must hold
+    # prompt + all generated tokens (None: max_prompt_len + max_new_cap)
+    max_total_len: Optional[int] = None
+
+
+class RequestQueue:
+    def __init__(self, limits: AdmissionLimits = AdmissionLimits()):
+        self.limits = limits
+        self._pending: List[Request] = []   # kept sorted by (arrival, rid)
+        self._next_rid = 0
+        self.n_submitted = 0
+        self.n_rejected = 0
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def submit(self, prompt, max_new: int, arrival: float = 0.0) -> Request:
+        prompt = np.asarray(prompt, dtype=np.int32).reshape(-1)
+        lim = self.limits
+        try:
+            if prompt.shape[0] < 1:
+                raise AdmissionError("prompt must contain at least 1 token")
+            if prompt.shape[0] > lim.max_prompt_len:
+                raise AdmissionError(
+                    f"prompt length {prompt.shape[0]} exceeds the admission "
+                    f"budget max_prompt_len={lim.max_prompt_len}")
+            if max_new < 1:
+                raise AdmissionError(f"max_new must be >= 1, got {max_new}")
+            if max_new > lim.max_new_cap:
+                raise AdmissionError(
+                    f"max_new {max_new} exceeds the admission budget "
+                    f"max_new_cap={lim.max_new_cap}")
+            total_cap = (lim.max_total_len if lim.max_total_len is not None
+                         else lim.max_prompt_len + lim.max_new_cap)
+            if prompt.shape[0] + max_new > total_cap:
+                raise AdmissionError(
+                    f"prompt_len + max_new = {prompt.shape[0] + max_new} "
+                    f"exceeds the cache slot length {total_cap}")
+            if len(self._pending) >= lim.max_queue:
+                raise AdmissionError(
+                    f"queue full ({lim.max_queue} pending requests)")
+        except AdmissionError:
+            self.n_rejected += 1
+            raise
+        req = Request(rid=self._next_rid, prompt=prompt, max_new=int(max_new),
+                      arrival=float(arrival), state=QUEUED)
+        self._next_rid += 1
+        bisect.insort(self._pending, req,
+                      key=lambda r: (r.arrival, r.rid))
+        self.n_submitted += 1
+        return req
+
+    def pop_ready(self, now: float) -> Optional[Request]:
+        """Oldest request whose arrival time has passed, or None."""
+        if self._pending and self._pending[0].arrival <= now:
+            return self._pending.pop(0)
+        return None
+
+    def mark_eligible(self, now: float, wall: float) -> None:
+        """Stamp the wall-clock moment each request became servable (for
+        time-to-first-token accounting that includes queueing delay)."""
+        for r in self._pending:
+            if r.arrival > now:
+                break
+            if r.eligible_wall is None:
+                r.eligible_wall = wall
+
+    def next_arrival(self) -> Optional[float]:
+        return self._pending[0].arrival if self._pending else None

@@ -1,0 +1,59 @@
+"""Request lifecycle datatypes for the continuous-batching serving engine.
+
+A ``Request`` moves QUEUED -> PREFILL -> DECODE -> FINISHED.  The first
+generated token comes out of the prefill logits (so a ``max_new == 1``
+request never enters decode); the remaining ``max_new - 1`` come from the
+slot-batched decode step, one per engine iteration.
+
+Arrival times are in *engine-clock* units (one unit per engine iteration):
+a request is eligible for admission once ``clock >= arrival``.  Wall-clock
+timestamps (for time-to-first-token reporting) are tracked separately by
+the engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import numpy as np
+
+QUEUED = "QUEUED"
+PREFILL = "PREFILL"
+DECODE = "DECODE"
+FINISHED = "FINISHED"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (S,) int32 token ids
+    max_new: int                 # tokens to generate (>= 1)
+    arrival: float = 0.0         # engine-clock units
+    state: str = QUEUED
+    slot: Optional[int] = None   # cache-pool slot while in flight
+    n_generated: int = 0
+    # async decode bookkeeping: tokens live on device until drain.  The
+    # first token is the prefill argmax; decode tokens are rows
+    # [trace_start, trace_start + max_new - 1) of the engine's step trace
+    # at column ``trace_slot`` (a request joins every decode batch from
+    # admission to completion, so its rows are consecutive).
+    first_token: Optional[Any] = None       # (group_array, row) pair
+    trace_start: Optional[int] = None
+    trace_slot: Optional[int] = None
+    tokens: Optional[np.ndarray] = None     # materialized at drain
+    # wall-clock bookkeeping (engine-owned)
+    eligible_wall: Optional[float] = None   # first moment clock >= arrival
+    first_token_wall: Optional[float] = None
+    finish_wall: Optional[float] = None
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, dtype=np.int32).reshape(-1)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def done(self) -> bool:
+        return self.n_generated >= self.max_new

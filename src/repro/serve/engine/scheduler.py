@@ -1,0 +1,78 @@
+"""Iteration-batch former: retire, admit (capped), continue decodes.
+
+Policy (prefill/decode interleaving):
+
+  1. *Retire* finished requests first, freeing their cache slots for this
+     very iteration's admissions.
+  2. *Admit* up to ``max_prefill_per_step`` eligible requests into free
+     slots.  Capping prefills per iteration is what keeps decode from
+     starving: a burst of long prompts is spread over several iterations
+     while the in-flight decodes keep producing a token each step.
+  3. *Decode* every in-flight request (including ones admitted this very
+     step, whose first token already came from prefill logits).
+
+Starvation-freedom is structural: every admitted request appears in every
+subsequent decode batch until it has its ``max_new`` tokens, so it
+finishes after exactly ``max_new - 1`` decode steps; and FIFO admission
+plus retire-before-admit means every queued request is eventually
+admitted whenever the engine keeps stepping.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from .cache_pool import SlotCachePool
+from .queue import RequestQueue
+from .request import DECODE, FINISHED, PREFILL, Request
+
+
+@dataclasses.dataclass
+class StepPlan:
+    retired: List[Request]
+    admit: List[Request]     # slot already assigned; need prefill this step
+    decode: List[Request]    # the iteration's decode batch
+
+
+class Scheduler:
+    def __init__(self, queue: RequestQueue, pool: SlotCachePool,
+                 max_prefill_per_step: int = 2):
+        assert max_prefill_per_step >= 1
+        self.queue = queue
+        self.pool = pool
+        self.max_prefill_per_step = int(max_prefill_per_step)
+        self.active: Dict[int, Request] = {}
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.active) or len(self.queue) > 0
+
+    def plan(self, now: float) -> StepPlan:
+        retired: List[Request] = []
+        for rid in list(self.active):
+            r = self.active[rid]
+            if r.done:
+                self.pool.free(r.slot)
+                r.slot = None
+                r.state = FINISHED
+                retired.append(self.active.pop(rid))
+
+        admit: List[Request] = []
+        while (self.pool.free_count > 0
+               and len(admit) < self.max_prefill_per_step):
+            r = self.queue.pop_ready(now)
+            if r is None:
+                break
+            r.slot = self.pool.allocate()
+            r.state = PREFILL
+            self.active[r.rid] = r
+            admit.append(r)
+
+        decode: List[Request] = []
+        for rid in sorted(self.active):
+            r = self.active[rid]
+            if not r.done:       # max_new==1 requests finish at prefill
+                r.state = DECODE
+                decode.append(r)
+        return StepPlan(retired=retired, admit=admit, decode=decode)

@@ -4,6 +4,13 @@
 token against a seq_len cache); ``prefill_32k`` lowers ``prefill``.
 Caches shard their time axis over the model dim (LBP on the sequence
 contraction — see models/transformer.cache_specs).
+
+The continuous-batching engine (``serve.engine``) consumes these step
+builders through the jit caches below — one decode compilation per
+(config, rules) no matter how many requests are served.
+``greedy_generate`` is the engine's reference oracle: under greedy
+decoding the engine must reproduce its outputs token-for-token
+(tests/test_serve_engine.py enforces this).
 """
 
 from __future__ import annotations
@@ -33,16 +40,44 @@ def make_decode_step(cfg: ModelConfig, rules: Rules):
     return step
 
 
+# ---------------------------------------------------------------------------
+# jit caches: Rules hashes by its axis table (mesh is excluded from hash),
+# so the cache key includes id(mesh) to keep two meshes with identical axis
+# names from sharing a compiled step.
+# ---------------------------------------------------------------------------
+
+_STEP_CACHE: Dict[Tuple[str, ModelConfig, Rules, int], Any] = {}
+
+
+def _cached(kind: str, cfg: ModelConfig, rules: Rules, builder):
+    key = (kind, cfg, rules, id(rules.mesh))
+    if key not in _STEP_CACHE:
+        _STEP_CACHE[key] = jax.jit(builder(cfg, rules))
+    return _STEP_CACHE[key]
+
+
+def cached_prefill_step(cfg: ModelConfig, rules: Rules):
+    return _cached("prefill", cfg, rules, make_prefill_step)
+
+
+def cached_decode_step(cfg: ModelConfig, rules: Rules):
+    return _cached("decode", cfg, rules, make_decode_step)
+
+
 def greedy_generate(params, cfg: ModelConfig, rules: Rules, prompt,
                     max_new: int = 16):
-    """Reference generation loop (examples/tests; small models only)."""
+    """Reference generation loop (examples/tests; small models only).
+
+    This is the oracle the serving engine is checked against: one request,
+    exact-length cache, greedy argmax at every step.
+    """
     B, S = prompt.shape
     cache = T.init_cache(cfg, B, S + max_new)
-    cache, logits = T.prefill(params, cfg, rules, prompt, cache)
+    cache, logits = cached_prefill_step(cfg, rules)(params, prompt, cache)
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
     out = [tok]
     pos = jnp.full((B,), S, jnp.int32)
-    step = jax.jit(make_decode_step(cfg, rules))
+    step = cached_decode_step(cfg, rules)
     for _ in range(max_new - 1):
         nxt, _, cache = step(params, tok, pos, cache)
         tok = nxt[:, None]

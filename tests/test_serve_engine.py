@@ -1,0 +1,257 @@
+"""Serving-engine invariants: admission control, slot conservation,
+starvation-freedom, and token-identity against the greedy oracle.
+
+Scheduling invariants run against a tensor-light fake model (hypothesis
+properties over random workloads); the oracle-identity checks run the
+real transformer on the reduced llama3_2_3b config, including the
+acceptance workload of 32 staggered-arrival mixed-length requests.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_reduced
+from repro.models import transformer as T
+from repro.serve import (EngineConfig, ServingEngine, TransformerModel,
+                         greedy_generate, serve_requests)
+from repro.serve.engine import (AdmissionError, AdmissionLimits,
+                                RequestQueue, SlotCachePool)
+from repro.sharding.rules import Rules
+
+RULES = Rules.null()
+
+
+# ---------------------------------------------------------------------------
+# fake model: same adapter surface, trivial tensors
+# ---------------------------------------------------------------------------
+
+class FakeModel:
+    """Deterministic next-token model: next = (prev * 31 + pos) % V."""
+
+    V = 97
+
+    def init_pool(self, n_slots, cache_len):
+        return {"state": jnp.zeros((1, n_slots, cache_len), jnp.int32)}
+
+    def token_state(self, n_slots):
+        return jnp.zeros(n_slots, jnp.int32), jnp.zeros(n_slots, jnp.int32)
+
+    def first_token(self, prompt):
+        return int(np.sum(prompt) % self.V)
+
+    def prefill(self, pool, prompts, slots, tok, pos):
+        firsts = []
+        for prompt, slot in zip(prompts, slots):
+            first = self.first_token(prompt)
+            firsts.append(first)
+            tok = tok.at[slot].set(first)
+            pos = pos.at[slot].set(prompt.shape[0])
+        return pool, jnp.asarray(firsts, jnp.int32), tok, pos
+
+    def decode_multi(self, pool, tok, pos, k):
+        rows = []
+        for _ in range(k):
+            tok = (tok * 31 + pos) % self.V
+            pos = pos + 1
+            rows.append(tok)
+        return pool, jnp.stack(rows), tok, pos
+
+    def decode(self, pool, tok, pos):
+        pool, rows, tok, pos = self.decode_multi(pool, tok, pos, 1)
+        return pool, rows[0], tok, pos
+
+    def oracle(self, prompt, max_new):
+        """Per-request reference for the fake dynamics."""
+        out = [self.first_token(prompt)]
+        tok, pos = out[0], prompt.shape[0]
+        for _ in range(max_new - 1):
+            tok = (tok * 31 + pos) % self.V
+            pos += 1
+            out.append(tok)
+        return np.asarray(out, np.int32)
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+def test_queue_admission_budgets():
+    q = RequestQueue(AdmissionLimits(max_prompt_len=8, max_new_cap=4,
+                                     max_queue=2))
+    q.submit(np.arange(5), 2)
+    with pytest.raises(AdmissionError, match="max_prompt_len"):
+        q.submit(np.arange(9), 2)
+    with pytest.raises(AdmissionError, match="max_new"):
+        q.submit(np.arange(3), 0)
+    with pytest.raises(AdmissionError, match="max_new"):
+        q.submit(np.arange(3), 5)
+    with pytest.raises(AdmissionError, match="at least 1 token"):
+        q.submit(np.array([], np.int32), 2)
+    q.submit(np.arange(3), 2)
+    with pytest.raises(AdmissionError, match="queue full"):
+        q.submit(np.arange(3), 2)
+    assert q.n_submitted == 2 and q.n_rejected == 5
+
+
+def test_queue_fifo_among_eligible():
+    q = RequestQueue()
+    a = q.submit(np.arange(3), 1, arrival=2.0)
+    b = q.submit(np.arange(3), 1, arrival=0.0)
+    assert q.pop_ready(0.0).rid == b.rid
+    assert q.pop_ready(0.0) is None          # a not yet arrived
+    assert q.pop_ready(2.0).rid == a.rid
+
+
+def test_engine_rejects_over_budget_total():
+    eng = ServingEngine(FakeModel(), EngineConfig(
+        n_slots=2, max_prompt_len=8, max_new_cap=8, cache_len=10))
+    with pytest.raises(AdmissionError, match="cache slot length"):
+        eng.submit(np.arange(8), 8)          # 16 > 10
+    assert eng.queue.n_rejected == 1         # counted by admission control
+
+
+# ---------------------------------------------------------------------------
+# slot pool conservation
+# ---------------------------------------------------------------------------
+
+def test_pool_alloc_free_conservation():
+    pool = SlotCachePool(2)
+    a = pool.allocate()
+    b = pool.allocate()
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.allocate()
+    pool.free(a)
+    with pytest.raises(RuntimeError, match="not allocated"):
+        pool.free(a)
+    c = pool.allocate()
+    pool.free(b)
+    pool.free(c)
+    assert pool.drained and pool.n_allocated == pool.n_freed == 3
+
+
+# ---------------------------------------------------------------------------
+# scheduling invariants over random workloads (fake model)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 20),
+       slots=st.integers(1, 4), cap=st.integers(1, 3))
+def test_engine_conservation_and_no_starvation(seed, n, slots, cap):
+    rng = np.random.default_rng(seed)
+    eng = ServingEngine(FakeModel(), EngineConfig(
+        n_slots=slots, max_prompt_len=12, max_new_cap=6,
+        max_prefill_per_step=cap))
+    want = {}
+    for _ in range(n):
+        prompt = rng.integers(0, 50, rng.integers(1, 13))
+        max_new = int(rng.integers(1, 7))
+        arrival = float(rng.integers(0, 10))
+        rid = eng.submit(prompt, max_new, arrival=arrival)
+        want[rid] = (prompt, max_new)
+    rep = eng.run()
+    # no starvation: every admitted request finished
+    assert set(rep.completed) == set(want)
+    # slot conservation: allocated == freed at drain, pool empty
+    assert eng.pool.drained
+    assert eng.pool.n_allocated == eng.pool.n_freed == n
+    # each request got exactly its budget, matching the fake dynamics
+    fake = FakeModel()
+    for rid, (prompt, max_new) in want.items():
+        got = rep.completed[rid]
+        assert got.shape == (max_new,)
+        np.testing.assert_array_equal(got, fake.oracle(
+            np.asarray(prompt, np.int32), max_new))
+    # occupancy is a valid fraction
+    assert 0.0 <= rep.occupancy <= 1.0
+
+
+def test_idle_engine_fast_forwards_to_arrival():
+    """A far-future arrival must not spin one step per clock unit."""
+    eng = ServingEngine(FakeModel(), EngineConfig(
+        n_slots=2, max_prompt_len=8, max_new_cap=4))
+    eng.submit(np.arange(4), 2, arrival=1_000_000.0)
+    rep = eng.run(max_steps=50)
+    assert len(rep.completed) == 1
+    assert rep.steps < 10
+
+
+# ---------------------------------------------------------------------------
+# oracle identity on the real model
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = get_reduced("llama3_2_3b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _mixed_workload(n, vocab, seed=0, lens=(5, 8, 12, 16),
+                    news=(1, 3, 6, 9), stagger=0.5):
+    from repro.serve.engine import synthetic_workload
+    return synthetic_workload(n, vocab, lens=lens, news=news,
+                              stagger=stagger, seed=seed)
+
+
+def test_engine_matches_greedy_oracle_acceptance(small_lm):
+    """The acceptance workload: >= 32 staggered-arrival mixed-length
+    requests, token-identical to per-request greedy_generate."""
+    cfg, params = small_lm
+    workload = _mixed_workload(32, cfg.vocab_size)
+    rep = serve_requests(params, cfg, RULES, workload, n_slots=8,
+                         max_prefill_per_step=4)
+    assert len(rep.completed) == 32
+    for rid, (prompt, max_new, _) in enumerate(workload):
+        ref = np.asarray(greedy_generate(
+            params, cfg, RULES, np.asarray(prompt)[None],
+            max_new=max_new))[0]
+        np.testing.assert_array_equal(rep.completed[rid], ref, err_msg=str(rid))
+    assert rep.occupancy > 0.5          # continuous batching actually packs
+
+
+def test_engine_single_slot_sequential(small_lm):
+    """n_slots=1 degenerates to sequential serving, still oracle-exact."""
+    cfg, params = small_lm
+    workload = _mixed_workload(3, cfg.vocab_size, seed=7, news=(2, 4))
+    rep = serve_requests(params, cfg, RULES, workload, n_slots=1)
+    for rid, (prompt, max_new, _) in enumerate(workload):
+        ref = np.asarray(greedy_generate(
+            params, cfg, RULES, np.asarray(prompt)[None],
+            max_new=max_new))[0]
+        np.testing.assert_array_equal(rep.completed[rid], ref)
+
+
+def test_engine_hybrid_family_oracle():
+    """Regression: hybrid caches lead with the conv-state width, so the
+    pool time length must come from init_pool, not leaf-shape sniffing —
+    getting it wrong silently truncated the prefill cache."""
+    cfg = get_reduced("recurrentgemma_9b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    workload = _mixed_workload(4, cfg.vocab_size, seed=3, lens=(5, 9, 12),
+                               news=(2, 4, 6), stagger=1.0)
+    rep = serve_requests(params, cfg, RULES, workload, n_slots=2)
+    for rid, (prompt, max_new, _) in enumerate(workload):
+        ref = np.asarray(greedy_generate(
+            params, cfg, RULES, np.asarray(prompt)[None],
+            max_new=max_new))[0]
+        np.testing.assert_array_equal(rep.completed[rid], ref, err_msg=str(rid))
+
+
+def test_grouped_prefill_gated_for_recurrent(small_lm):
+    """Hybrid (recurrent-state) families must not use padded grouped
+    prefill; the adapter flags it and falls back per-request."""
+    cfg, params = small_lm
+    assert TransformerModel(params, cfg, RULES).can_group_prefill
+    rg = get_reduced("recurrentgemma_9b")
+    rg_params = T.init_params(rg, jax.random.PRNGKey(1))
+    assert not TransformerModel(rg_params, rg, RULES).can_group_prefill
+
+
+def test_engine_ssm_rejected():
+    cfg = get_reduced("xlstm_1_3b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError, match="ssm"):
+        TransformerModel(params, cfg, RULES)

@@ -1,0 +1,98 @@
+"""LBP capacity planner: §4 equal-finish-time traffic splits + drift."""
+
+import numpy as np
+import pytest
+
+from repro.core.star import StarSchedule, per_processor_finish
+from repro.serve import CapacityPlanner
+from repro.serve.engine import ReplicaPlan
+
+
+def _per_unit_cost(planner, n):
+    """Finish-time cost of one extra request on the costliest replica."""
+    net = planner.network()
+    return float(np.max(n * net.w * net.t_cp + 2.0 * net.z * net.t_cm)) * n
+
+
+def test_plan_shares_sum_and_schedule():
+    pl = CapacityPlanner([120.0, 60.0, 180.0, 45.0], mode="PCCS")
+    plan = pl.plan(64)
+    assert isinstance(plan, ReplicaPlan)
+    assert isinstance(plan.schedule, StarSchedule)
+    assert plan.shares.sum() == 64
+    assert np.all(plan.shares >= 0)
+    assert plan.schedule.k.sum() == pytest.approx(64)
+    # faster replica gets at least as much traffic
+    order = np.argsort(pl.rates)
+    assert np.all(np.diff(plan.shares[order]) >= 0)
+
+
+@pytest.mark.parametrize("mode", ["PCSS", "PCCS", "SCSS", "SCCS"])
+def test_equal_finish_time_property(mode):
+    """§4 Theorem 2: the real-valued split equalizes replica finish times;
+    the integer shares stay within one adjustment quantum of equal."""
+    rng = np.random.default_rng(3)
+    rates = rng.uniform(40.0, 250.0, 6)
+    pl = CapacityPlanner(rates, mode=mode, quantum=1)
+    n = 96
+    plan = pl.plan(n)
+    # real-valued: equal finish for every replica with load
+    real_ft = per_processor_finish(pl.network(), n, plan.schedule.k, mode)
+    loaded = plan.schedule.k > 1e-9
+    spread = real_ft[loaded].max() - real_ft[loaded].min()
+    assert spread <= 1e-6 * max(real_ft.max(), 1.0)
+    # integer: within the cost of one quantum on the costliest replica
+    int_ft = pl.finish_times(plan)
+    assert int_ft.max() - int_ft.min() <= _per_unit_cost(pl, n) + 1e-9
+
+
+def test_quantum_micro_batches():
+    pl = CapacityPlanner([100.0, 50.0, 25.0], quantum=4, mode="PCSS")
+    plan = pl.plan(32)
+    assert plan.shares.sum() == 32
+    assert np.all(plan.shares % 4 == 0)
+    with pytest.raises(ValueError, match="quantum"):
+        pl.plan(30)
+
+
+def test_route_interleaves_by_share():
+    pl = CapacityPlanner([100.0, 50.0, 50.0])
+    plan = pl.plan(20)
+    routed = pl.route(plan)
+    assert routed.shape == (20,)
+    np.testing.assert_array_equal(np.bincount(routed, minlength=3),
+                                  plan.shares)
+    # smooth round-robin: the heavy replica never waits long — every
+    # window of 3 consecutive requests touches it at least once
+    heavy = int(np.argmax(plan.shares))
+    for j in range(len(routed) - 2):
+        assert heavy in routed[j:j + 3]
+
+
+def test_drift_replan_threshold():
+    pl = CapacityPlanner([100.0, 100.0], drift_threshold=0.2)
+    assert pl.observe([105.0, 100.0], 16) is None       # 5% drift: keep
+    assert pl.rates[0] == 100.0
+    plan = pl.observe([50.0, 100.0], 16)                # 50% drift: re-plan
+    assert plan is not None
+    assert pl.rates[0] == 50.0
+    assert plan.shares[1] > plan.shares[0]
+
+
+def test_observe_rejects_dead_replica():
+    """A 0 tok/s measurement must not poison w = 1/rate with inf."""
+    pl = CapacityPlanner([100.0, 100.0])
+    with pytest.raises(ValueError, match="positive"):
+        pl.observe([100.0, 0.0], 16)
+    with pytest.raises(ValueError, match="positive"):
+        pl.observe([100.0], 16)             # shrunk set needs a new planner
+    assert np.all(pl.rates == 100.0)        # state untouched after reject
+
+
+def test_replan_from_step_times():
+    """The runtime.rebalance measurement path feeds the planner."""
+    pl = CapacityPlanner([100.0, 100.0], drift_threshold=0.1)
+    plan = pl.observe_step_times([0.02, 0.01], 16, tokens_per_step=1.0)
+    assert plan is not None
+    # replica 1 is twice as fast: about twice the traffic under PCCS
+    assert plan.shares[1] >= 2 * plan.shares[0] - 2
