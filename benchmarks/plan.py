@@ -1,0 +1,121 @@
+"""Planning quality + latency: flat star vs two-level hierarchical on the
+production multi-pod shape (pod=2, data=16, model=16 — 512 devices).
+
+  PYTHONPATH=src python -m benchmarks.plan [--smoke] [--out BENCH_plan.json]
+
+The flat single-level star is the model every consumer hand-built before
+``repro.plan``: it gives each remote device a *private* DCN channel, when
+physically the pod shares one trunk.  Both plans are priced on the true
+shared-trunk topology (``repro.plan.evaluate_split``), so the numbers are
+the cost of the modeling error, not of the solver: predicted finish time,
+DCN-crossing distribution volume, and the execution-plane aggregation
+bytes per trunk (``core.collectives.hierarchical_byte_breakdown``).
+
+Emits ``BENCH_plan.json`` for the perf trajectory (CI runs ``--smoke``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict
+
+import numpy as np
+
+
+def time_best(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(argv=None) -> Dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small load + few reps for CI")
+    ap.add_argument("--load", type=int, default=8192,
+                    help="divisible units to split (layers / requests)")
+    ap.add_argument("--quantum", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--reps", type=int, default=5,
+                    help="latency reps; best per side is kept")
+    ap.add_argument("--out", default="BENCH_plan.json")
+    args = ap.parse_args(argv)
+
+    from repro.core.collectives import hierarchical_byte_breakdown
+    from repro.plan import (compare_flat_hierarchical, plan,
+                            production_shape, production_topology)
+
+    load, reps = (2048, 3) if args.smoke else (args.load, args.reps)
+    topo = production_topology(multi_pod=True, seed=args.seed)
+    shape = production_shape(True)
+
+    lat_hier = time_best(
+        lambda: plan(topo, load, quantum=args.quantum, objective="PCCS"),
+        reps)
+    flat_topo = topo.flatten()
+    lat_flat = time_best(
+        lambda: plan(flat_topo, load, quantum=args.quantum,
+                     objective="PCCS"), reps)
+
+    cmp = compare_flat_hierarchical(topo, load, quantum=args.quantum,
+                                    objective="PCCS")
+    hier, flat = cmp["hierarchical"], cmp["flat"]
+    flat_comm = cmp["flat_comm_on_topology"]
+
+    # execution-plane aggregation: bytes through each pod's DCN trunk for
+    # one aggregated bf16 output layer of load x load
+    agg = hierarchical_byte_breakdown(load * load, n_pods=shape[0],
+                                      pod_size=int(np.prod(shape[1:])))
+
+    result = {
+        "workload": {"shape": list(shape), "p": topo.p, "load": load,
+                     "quantum": args.quantum, "seed": args.seed,
+                     "smoke": bool(args.smoke)},
+        "flat": {
+            "plan_latency_s": lat_flat,
+            "finish_naive_model": flat.finish_time,
+            "finish_on_topology": cmp["flat_finish_on_topology"],
+            "comm_total": flat_comm.total,
+            "comm_dcn": flat_comm.dcn,
+        },
+        "hierarchical": {
+            "plan_latency_s": lat_hier,
+            "finish": hier.finish_time,
+            "comm_total": hier.comm.total,
+            "comm_dcn": hier.comm.dcn,
+            "pod_shares": hier.meta["pod_shares"],
+            "solver": hier.solver,
+        },
+        "finish_speedup": cmp["finish_speedup"],
+        "dcn_reduction": cmp["dcn_reduction"],
+        "aggregation_dcn_per_pod": {
+            "hierarchical_bytes": agg["dcn_per_pod"],
+            "flat_allreduce_bytes": agg["flat_allreduce_dcn_per_pod"],
+        },
+    }
+
+    print(f"\nplatform: {shape} = {topo.p} devices, load {load}, "
+          f"quantum {args.quantum}")
+    print(f"flat star:     finish(true) {cmp['flat_finish_on_topology']:11.1f}  "
+          f"dcn {flat_comm.dcn/1e6:8.3f}M entries  "
+          f"plan {lat_flat*1e3:6.1f}ms")
+    print(f"hierarchical:  finish       {hier.finish_time:11.1f}  "
+          f"dcn {hier.comm.dcn/1e6:8.3f}M entries  "
+          f"plan {lat_hier*1e3:6.1f}ms  shares {hier.meta['pod_shares']}")
+    print(f"finish speedup {cmp['finish_speedup']:.2f}x   "
+          f"dcn reduction {cmp['dcn_reduction']*100:.1f}%   "
+          f"agg trunk bytes {agg['dcn_per_pod']/1e6:.1f}MB vs "
+          f"{agg['flat_allreduce_dcn_per_pod']/1e6:.1f}MB flat")
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {args.out}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

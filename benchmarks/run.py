@@ -33,6 +33,17 @@ def main() -> None:
     rows += mesh.report(out)
     out(f"[mesh benchmarks {time.time()-t0:.1f}s]")
 
+    # planning subsystem: flat star vs two-level hierarchy on the
+    # production multi-pod shape (details land in BENCH_plan.json)
+    t0 = time.time()
+    from . import plan as plan_bench
+    pr = plan_bench.main(["--smoke", "--out", "/tmp/BENCH_plan_run.json"])
+    rows.append(("plan.hier_finish_speedup_x", pr["finish_speedup"],
+                 "flat star priced on the true shared trunks"))
+    rows.append(("plan.hier_dcn_reduction_pct", pr["dcn_reduction"] * 100,
+                 "distribution volume on DCN trunks"))
+    out(f"[plan benchmarks {time.time()-t0:.1f}s]")
+
     # scheduler-plane wall time (the runtime re-solves these on rebalance)
     import numpy as _np
     from repro.core.network import random_mesh, random_star

@@ -17,6 +17,10 @@ to the partial layers.  The built-in modes:
                result like allreduce but the full partial travels p-1
                hops, (p-1) x bytes(out) per device: the sequential
                neighbour-relay byte model of unswitched fabrics.
+  "hierarchical"  two-level ICI+DCN aggregation matching ``repro.plan``'s
+               HierarchicalTopology plans: reduce-scatter within the pod,
+               all-reduce the 1/m shard across pods (all the DCN traffic),
+               all-gather within the pod.  axis=(pod_axis, inner_axis).
 
 Every shard_map body in the repo combines partial layers through
 ``aggregate(partial, mode, axis)`` and builds its out-spec with
@@ -24,9 +28,8 @@ Every shard_map body in the repo combines partial layers through
 plumbing and the analytic per-device byte model live together in ONE
 registry entry per mode.  ``analysis/`` and tests query the same numbers
 the runtime executes via ``collective_bytes_per_device`` /
-``bytes_table``.  Future modes ("hierarchical" two-level aggregation
-across ICI+DCN) plug in with ``register_mode`` without touching any
-call site.
+``bytes_table``.  Further modes plug in with ``register_mode`` without
+touching any call site.
 """
 
 from __future__ import annotations
@@ -201,4 +204,70 @@ register_mode(AggregationMode(
     link_byte_factor=lambda p: float(p - 1),
     description="neighbour ring pass-around: full partial forwarded p-1 "
                 "hops (replicated result; p/2 x allreduce's ring bytes)",
+))
+
+
+def _hier_combine(partial: jax.Array, axis, sd: int) -> jax.Array:
+    """Two-level aggregation matching ``repro.plan``'s HierarchicalTopology:
+    reduce-scatter within the pod (ICI), all-reduce the 1/m shard across
+    pods (the only traffic on the DCN trunks), then all-gather within the
+    pod (ICI).  Replicated result, numerically identical to psum; each
+    pod's trunk carries 2(P-1)/P x bytes(out) total vs a flat ring's
+    2(p-1)/p — halved for the 2-pod production shape (per *device* the
+    cross-pod shard is 1/m-sized, but m flows share the trunk).
+    ``axis`` must be a (pod_axis, inner_axis) pair."""
+    if not isinstance(axis, (tuple, list)) or len(axis) != 2:
+        raise ValueError(
+            "hierarchical aggregation needs axis=(pod_axis, inner_axis), "
+            f"got {axis!r}")
+    pod_axis, inner = axis
+    shard = jax.lax.psum_scatter(partial, inner, scatter_dimension=sd,
+                                 tiled=True)
+    shard = jax.lax.psum(shard, pod_axis)            # DCN: V/m per device
+    return jax.lax.all_gather(shard, inner, axis=sd, tiled=True)
+
+
+def _hier_out_spec(axis, base: Tuple, _sd: int) -> P:
+    return P(*base)
+
+
+def hierarchical_byte_breakdown(out_elems: int, n_pods: int, pod_size: int,
+                                itemsize: int = 2) -> Dict[str, float]:
+    """Per-device link bytes of the two-level aggregation, per link class,
+    next to what a FLAT ring all-reduce over the same p devices pushes
+    through each pod's DCN trunk (the flat ring enters and leaves every
+    pod, so the trunk carries the full ring traffic).
+
+    This is the execution-plane counterpart of the plan IR's per-class
+    comm accounting: the number the hierarchical PartitionPlan promises is
+    the number the collective moves.
+    """
+    P_, m = int(n_pods), int(pod_size)
+    v = float(out_elems) * itemsize
+    ici = 2.0 * (m - 1) / m * v if m > 1 else 0.0       # RS + AG within pod
+    dcn_dev = 2.0 * (P_ - 1) / P_ * v / m if P_ > 1 else 0.0
+    p = P_ * m
+    flat_ring_link = 2.0 * (p - 1) / p * v if p > 1 else 0.0
+    return {
+        "ici_per_device": ici,
+        "dcn_per_device": dcn_dev,                     # shard-sized
+        "dcn_per_pod": dcn_dev * m,                    # trunk egress
+        "flat_allreduce_dcn_per_pod": flat_ring_link,  # trunk egress, flat
+        "total_per_device": ici + dcn_dev,
+    }
+
+
+register_mode(AggregationMode(
+    name="hierarchical",
+    combine=_hier_combine,
+    out_spec=_hier_out_spec,
+    # generic-table factor: worst-device total bytes under the canonical
+    # 2-pod production split (pods of m = p/2); exact per-class accounting
+    # is hierarchical_byte_breakdown().
+    link_byte_factor=lambda p: (
+        0.0 if p < 2 else
+        2.0 * (p / 2 - 1) / (p / 2) + 2.0 / p),
+    description="two-level ICI+DCN: reduce-scatter in pod, shard all-reduce "
+                "across pods, all-gather in pod (replicated result; per-pod "
+                "trunk bytes 2(P-1)/P x out vs the flat ring's 2(p-1)/p)",
 ))

@@ -89,7 +89,8 @@ def mft_lbp_heuristic(net: MeshNetwork, N: int, quantum: int = 1,
             k, res = kk, r
 
     return MeshSchedule(k=k.astype(np.int64), result=res,
-                        lp_solves=solves, simplex_iters=iters)
+                        lp_solves=solves, simplex_iters=iters,
+                        k_relaxed=relaxed.k)
 
 
 def _storage_cap_arr(net: MeshNetwork, N: int) -> np.ndarray:

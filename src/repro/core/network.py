@@ -18,6 +18,7 @@ For an N x N x N matmul, processor i holding ``k_i`` layers:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Tuple
 
 import numpy as np
@@ -81,15 +82,34 @@ class MeshNetwork:
     def coords(self, i: int) -> Tuple[int, int]:
         return i % self.X, i // self.X
 
-    def edges(self) -> List[Tuple[int, int]]:
-        """Directed edges (i -> j), flowing away from the source corner."""
+    @functools.cached_property
+    def _adjacency(self) -> Tuple[Tuple[Tuple[Tuple[int, int], ...], ...],
+                                  Tuple[Tuple[Tuple[int, int], ...], ...]]:
+        """(in_edges, out_edges) per node, built once.  The LP builder asks
+        for the neighbourhood of every node; re-sorting and scanning the
+        full edge dict per call made it O(p*E) — this is O(E log E) total.
+        (cached_property writes the instance __dict__ directly, which a
+        frozen dataclass permits.)"""
+        ins: List[List[Tuple[int, int]]] = [[] for _ in range(self.p)]
+        outs: List[List[Tuple[int, int]]] = [[] for _ in range(self.p)]
+        for e in sorted(self.z.keys()):
+            outs[e[0]].append(e)
+            ins[e[1]].append(e)
+        return (tuple(tuple(x) for x in ins), tuple(tuple(x) for x in outs))
+
+    @functools.cached_property
+    def _sorted_edges(self) -> List[Tuple[int, int]]:
         return sorted(self.z.keys())
 
+    def edges(self) -> List[Tuple[int, int]]:
+        """Directed edges (i -> j), flowing away from the source corner."""
+        return list(self._sorted_edges)
+
     def in_edges(self, j: int) -> List[Tuple[int, int]]:
-        return [e for e in self.edges() if e[1] == j]
+        return list(self._adjacency[0][j])
 
     def out_edges(self, i: int) -> List[Tuple[int, int]]:
-        return [e for e in self.edges() if e[0] == i]
+        return list(self._adjacency[1][i])
 
     def validate(self) -> None:
         assert self.w.shape[0] == self.p
@@ -129,6 +149,11 @@ class SpeedProfile:
 
     ``relative_speed[i]`` ~ 1.0 nominal; a straggler at 0.5 computes half as
     fast.  Converted to the paper's ``w`` (inverse speed) for the solvers.
+
+    NOTE: production planning goes through ``repro.plan`` — use
+    ``repro.plan.StarTopology.from_speeds`` (same lowering) so the split
+    comes back as a full ``PartitionPlan``; this class remains the paper's
+    §6 measurement-to-model shim.
     """
 
     relative_speed: np.ndarray

@@ -16,9 +16,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from .integer_adjust import adjust_integer
-from .network import SpeedProfile, StarNetwork
-from .star import SOLVERS
+from .network import StarNetwork
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,14 +72,17 @@ class LayerAssignment:
         mode: str = "PCSS",
         net: Optional[StarNetwork] = None,
     ) -> "LayerAssignment":
-        """Heterogeneity-aware split via the paper's star solvers (§4).
+        """Heterogeneity-aware split — a thin wrapper over ``repro.plan``.
 
-        ``speeds`` are relative compute rates (1.0 = nominal); PCSS balances
-        pure compute (eq. 31-33); pass a full ``StarNetwork`` + mode for
-        link-aware splits (SCSS/SCCS/PCCS).
+        ``speeds`` are relative compute rates (1.0 = nominal) and become a
+        flat-star ``Topology`` (near-zero ICI links); pass a full
+        ``StarNetwork`` + mode for link-aware splits (SCSS/SCCS/PCCS).
+        All solving, §4.5 integer adjustment and cost accounting live in
+        ``repro.plan.plan()`` — use it directly when you also need the
+        predicted finish times / comm volumes of the split.
         """
-        if net is None:
-            net = SpeedProfile(np.asarray(speeds, dtype=np.float64)).to_star()
-        sched = SOLVERS[mode](net, K)
-        k = adjust_integer(net, K, sched.k, mode, quantum=quantum)
-        return LayerAssignment(k, quantum)
+        from ..plan import StarTopology, plan  # lazy: plan imports core
+        topo = (StarTopology.from_network(net) if net is not None
+                else StarTopology.from_speeds(speeds))
+        pp = plan(topo, K, quantum=quantum, objective=mode)
+        return LayerAssignment(pp.k, quantum)

@@ -27,6 +27,7 @@ class MeshSchedule:
     result: LPResult         # fixed-k LP at the final schedule
     lp_solves: int           # number of LP solves
     simplex_iters: int       # total simplex iterations (paper Fig. 9 metric)
+    k_relaxed: np.ndarray | None = None  # phase-I LP optimum (provenance)
 
     @property
     def t_finish(self) -> float:
@@ -146,4 +147,5 @@ def pmft_lbp(net: MeshNetwork, N: int, quantum: int = 1,
                 break
             k, cur = kk, r
 
-    return MeshSchedule(k=k, result=cur, lp_solves=solves, simplex_iters=iters)
+    return MeshSchedule(k=k, result=cur, lp_solves=solves, simplex_iters=iters,
+                        k_relaxed=relaxed.k)

@@ -2,20 +2,25 @@
 
 Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
 Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the "pod" axis is the
-outer data-parallel dim crossing DCN (slower links — the scheduler plane
-models it with a larger z, see core/network.SpeedProfile).
+outer data-parallel dim crossing DCN.  The shape tuples live in
+``repro.plan.topology.production_shape`` — the planning subsystem's
+``production_topology()`` describes the same platform to the schedulers
+(per-pod DCN trunks, near-zero ICI within), so the mesh the launcher
+builds and the topology the planners solve can never drift apart.
 
 Functions, not module constants: importing this module must never touch
-jax device state (the dry-run sets XLA_FLAGS before first jax init).
+jax device state (the dry-run sets XLA_FLAGS before first jax init;
+``repro.plan`` is numpy/scipy-only).
 """
 
 from __future__ import annotations
 
 from ..compat import make_mesh
+from ..plan.topology import production_shape
 
 
 def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
+    shape = production_shape(multi_pod)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return make_mesh(shape, axes, axis_types="auto")
 
@@ -26,4 +31,8 @@ def make_smoke_mesh():
 
 
 def device_count_required(multi_pod: bool) -> int:
-    return 512 if multi_pod else 256
+    shape = production_shape(multi_pod)
+    n = 1
+    for d in shape:
+        n *= d
+    return n

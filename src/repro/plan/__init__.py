@@ -1,0 +1,28 @@
+"""Topology-aware planning subsystem: one PartitionPlan IR for everybody.
+
+The paper's point is a *single* scheduling model; this package is its
+architectural seam.  Describe the platform once as a ``Topology``
+(flat star from measured speeds, §5 mesh, or the two-level pod
+hierarchy of the production multi-pod mesh), then
+
+    pp = plan(topology, load, quantum=..., objective=...)
+
+returns a ``PartitionPlan``: quantum-aligned integer shares, the solver's
+real-valued optimum, predicted per-node finish times, per-link-class comm
+volume, and solver provenance.  Every consumer routes through here —
+``core.partition.LayerAssignment.from_speeds`` (training splits),
+``runtime.rebalance`` (straggler mitigation / elastic rescale) and the
+serving ``CapacityPlanner`` — so the cost model lives in ONE place.
+
+Solvers are a registry keyed by topology kind (``register_planner``);
+the matching execution-plane aggregation for two-level plans is the
+"hierarchical" mode in ``core.collectives``.
+"""
+
+from .ir import CommVolume, PartitionPlan  # noqa: F401
+from .solvers import (POD_MODE, available_planners,  # noqa: F401
+                      compare_flat_hierarchical, comm_for_split,
+                      evaluate_split, plan, register_planner)
+from .topology import (DCN_CLASS_Z, DCN_LINK, ICI_LINK,  # noqa: F401
+                       HierarchicalTopology, MeshTopology, StarTopology,
+                       Topology, production_shape, production_topology)

@@ -1,0 +1,94 @@
+"""PartitionPlan: the one IR every planning consumer receives.
+
+A plan is the complete answer to "how should ``load`` divisible units be
+split across this platform": the solver's real-valued optimum, the
+quantum-aligned integer shares actually executed, the predicted per-node
+finish times of those integer shares, comm-volume accounting per link
+class, and solver provenance — so training rebalance, serving capacity
+split and the benchmarks all read the same structure instead of each
+re-deriving pieces from raw solver outputs.
+
+Comm-volume semantics match ``mesh_lp.LPResult.comm_volume``: entries are
+counted once per link traversal, so a hierarchical plan's total includes
+both the trunk hop and the intra-pod hop (the DCN/ICI split is what the
+multi-pod comparisons care about).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CommVolume:
+    """Entries moved during input distribution, split by link class."""
+
+    total: float    # sum over links of traffic (multi-hop counted per hop)
+    dcn: float      # subset crossing DCN-class links (the scarce resource)
+    ici: float      # subset crossing ICI-class links
+
+    def __post_init__(self):
+        assert self.total >= 0 and self.dcn >= 0 and self.ici >= 0
+        assert abs(self.total - (self.dcn + self.ici)) <= 1e-6 * max(
+            self.total, 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionPlan:
+    """Integer split of ``load`` units over ``p`` nodes + predictions."""
+
+    k: np.ndarray             # (p,) int64 shares, quantum-aligned, sum==load
+    k_real: np.ndarray        # (p,) the solver's real-valued optimum
+    load: int
+    quantum: int
+    finish_times: np.ndarray  # (p,) predicted T_f(i) of the integer shares
+    comm: CommVolume
+    solver: str               # provenance: "star:PCCS", "hierarchical:PCCS+PCSS", "mesh:heuristic", ...
+    topology_kind: str        # "star" | "mesh" | "hierarchical"
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        k = np.asarray(self.k, dtype=np.int64)
+        object.__setattr__(self, "k", k)
+        object.__setattr__(self, "k_real",
+                           np.asarray(self.k_real, dtype=np.float64))
+        object.__setattr__(self, "finish_times",
+                           np.asarray(self.finish_times, dtype=np.float64))
+        assert k.shape == self.k_real.shape == self.finish_times.shape
+        assert np.all(k >= 0) and int(k.sum()) == int(self.load)
+        if self.quantum > 1:
+            assert np.all(k % self.quantum == 0), \
+                "plan shares must be quantum-aligned"
+
+    @property
+    def p(self) -> int:
+        return int(self.k.shape[0])
+
+    @property
+    def finish_time(self) -> float:
+        """Predicted makespan: slowest node that actually holds load."""
+        loaded = self.k > 0
+        if not loaded.any():
+            return 0.0
+        return float(self.finish_times[loaded].max())
+
+    def fractions(self) -> np.ndarray:
+        return self.k / max(int(self.load), 1)
+
+    def summary(self) -> Dict[str, Any]:
+        """JSON-friendly digest for benchmarks and reports."""
+        return {
+            "solver": self.solver,
+            "topology": self.topology_kind,
+            "p": self.p,
+            "load": int(self.load),
+            "quantum": int(self.quantum),
+            "finish_time": self.finish_time,
+            "comm_total": self.comm.total,
+            "comm_dcn": self.comm.dcn,
+            "comm_ici": self.comm.ici,
+            "nonzero_shares": int(np.count_nonzero(self.k)),
+        }

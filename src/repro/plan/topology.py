@@ -1,0 +1,303 @@
+"""Platform topologies: describe the hardware once, lower it to solver models.
+
+The paper's solvers consume *network models* (``core.network.StarNetwork``,
+``core.network.MeshNetwork``); production code should never hand-build
+those.  A ``Topology`` is the planning subsystem's description of the
+platform — measured speeds plus link structure — and each concrete kind
+knows how to lower itself to the model(s) its solvers need:
+
+  StarTopology          flat single-level star (§4): every device hangs off
+                        the source on its own link.  The in-pod TPU case is
+                        z ~ 0 (ICI_LINK): the solver balances compute only.
+  MeshTopology          §5 X x Y grid, wraps ``core.network.MeshNetwork``.
+  HierarchicalTopology  two-level pod hierarchy: a DCN trunk per pod
+                        (shared by the pod's devices) and near-zero ICI
+                        within — the production multi-pod shape of
+                        ``launch/mesh.py`` ((pod=2, data=16, model=16)),
+                        whose "pod" axis crosses DCN.
+
+The flat star model of a multi-pod platform is *wrong* in a specific way:
+it gives every remote device a private DCN channel, when physically the
+pod shares one trunk.  ``HierarchicalTopology.flatten()`` returns exactly
+that naive view so planners/benchmarks can quantify the error (Beaumont &
+Marchal, arXiv:1404.3913: the platform model, not the splitter, decides
+schedule quality).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..core.network import MeshNetwork, StarNetwork, W_TCP_RANGE
+
+# Link classes of the runtime plane (inverse link speeds, paper's z).
+ICI_LINK = 1e-9    # near-zero: in-pod interconnect, solver balances compute
+DCN_LINK = 1e-3    # cross-pod data-center network trunk
+
+# Any z at or above this counts as DCN-class for comm-volume accounting
+# (geometric midpoint of the two classes).
+DCN_CLASS_Z = 1e-6
+
+# Production mesh shapes — the single source of truth; ``launch/mesh.py``
+# builds its jax meshes from these same tuples.
+_PRODUCTION_SHAPES = {False: (16, 16), True: (2, 16, 16)}
+
+
+def production_shape(multi_pod: bool = False) -> Tuple[int, ...]:
+    """(data, model) single pod / (pod, data, model) multi-pod chip grid."""
+    return _PRODUCTION_SHAPES[bool(multi_pod)]
+
+
+@dataclasses.dataclass(frozen=True)
+class StarTopology:
+    """Flat star: p devices, each on its own link from the source."""
+
+    kind: ClassVar[str] = "star"
+
+    w: np.ndarray          # (p,) inverse compute speed per device
+    z: np.ndarray          # (p,) inverse link speed source->device
+    t_cp: float = 1.0
+    t_cm: float = 1.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "w", np.asarray(self.w, dtype=np.float64))
+        object.__setattr__(self, "z", np.asarray(self.z, dtype=np.float64))
+        assert self.w.shape == self.z.shape and self.w.ndim == 1
+        assert np.all(self.w > 0) and np.all(self.z > 0)
+
+    @property
+    def p(self) -> int:
+        return int(self.w.shape[0])
+
+    def to_network(self) -> StarNetwork:
+        return StarNetwork(w=self.w, z=self.z, t_cp=self.t_cp, t_cm=self.t_cm)
+
+    def dcn_mask(self) -> np.ndarray:
+        """(p,) True where the device's link is DCN-class."""
+        return self.z >= DCN_CLASS_Z
+
+    def restrict(self, alive: Sequence[int]) -> "StarTopology":
+        """The topology of a surviving subset (elastic rescale / node loss)."""
+        idx = np.asarray(list(alive), dtype=np.int64)
+        return StarTopology(w=self.w[idx], z=self.z[idx],
+                            t_cp=self.t_cp, t_cm=self.t_cm)
+
+    def with_rates(self, rates: Sequence[float]) -> "StarTopology":
+        """Same links, fresh speed measurements (drift re-planning)."""
+        rates = np.asarray(rates, dtype=np.float64)
+        assert rates.shape == self.w.shape and np.all(rates > 0)
+        return StarTopology(w=1.0 / rates, z=self.z,
+                            t_cp=self.t_cp, t_cm=self.t_cm)
+
+    @staticmethod
+    def from_speeds(speeds: Sequence[float],
+                    link_cost: float = ICI_LINK) -> "StarTopology":
+        """Relative compute rates (1.0 = nominal) inside one pod: w = 1/rate,
+        near-zero z so the solvers balance compute (the PCSS limit)."""
+        w = 1.0 / np.asarray(speeds, dtype=np.float64)
+        return StarTopology(w=w, z=np.full_like(w, link_cost))
+
+    @staticmethod
+    def from_rates(rates: Sequence[float],
+                   link: Optional[Sequence[float]] = None) -> "StarTopology":
+        """Measured absolute rates (e.g. tokens/sec per serving replica):
+        w = 1/rate, per-device link class (default: all ICI)."""
+        rates = np.asarray(rates, dtype=np.float64)
+        assert np.all(rates > 0)
+        w = 1.0 / rates
+        z = (np.full_like(w, ICI_LINK) if link is None
+             else np.asarray(link, dtype=np.float64))
+        return StarTopology(w=w, z=z)
+
+    @staticmethod
+    def from_network(net: StarNetwork) -> "StarTopology":
+        return StarTopology(w=net.w, z=net.z, t_cp=net.t_cp, t_cm=net.t_cm)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshTopology:
+    """§5 multi-neighbor grid; wraps the paper's MeshNetwork model."""
+
+    kind: ClassVar[str] = "mesh"
+
+    network: MeshNetwork
+
+    @property
+    def p(self) -> int:
+        return self.network.p
+
+    def to_network(self) -> MeshNetwork:
+        return self.network
+
+    @staticmethod
+    def from_network(net: MeshNetwork) -> "MeshTopology":
+        return MeshTopology(network=net)
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchicalTopology:
+    """Two-level pod hierarchy: one shared trunk per pod, ICI within.
+
+    The source sits in pod 0 by convention (its trunk is ICI-class); every
+    other pod is reached over its DCN trunk, *shared* by the pod's devices
+    — the physical constraint the flat star misses.  Lowerings:
+
+      top_star()   pods as super-children: the within-pod PCSS split makes
+                   pod j behave exactly like one processor with
+                   w_pod = 1/sum(1/w_i) (k_i w_i is constant inside the
+                   pod), so the §4 machinery applies unchanged at the top.
+      pod_star(j)  the within-pod star over ICI links.
+      flatten()    the naive single-level view (per-device private trunk
+                   links) — for quantifying the flat model's error.
+    """
+
+    kind: ClassVar[str] = "hierarchical"
+
+    pod_w: Tuple[np.ndarray, ...]   # per-pod (m_j,) inverse device speeds
+    trunk_z: np.ndarray             # (n_pods,) inverse trunk link speed
+    ici_z: float = ICI_LINK
+    t_cp: float = 1.0
+    t_cm: float = 1.0
+
+    def __post_init__(self):
+        pods = tuple(np.asarray(w, dtype=np.float64) for w in self.pod_w)
+        object.__setattr__(self, "pod_w", pods)
+        object.__setattr__(self, "trunk_z",
+                           np.asarray(self.trunk_z, dtype=np.float64))
+        assert len(pods) == self.trunk_z.shape[0] and len(pods) >= 1
+        assert all(w.ndim == 1 and w.size > 0 and np.all(w > 0) for w in pods)
+        assert np.all(self.trunk_z > 0) and self.ici_z > 0
+
+    # -- structure ---------------------------------------------------------
+    @property
+    def n_pods(self) -> int:
+        return len(self.pod_w)
+
+    @property
+    def pod_sizes(self) -> Tuple[int, ...]:
+        return tuple(int(w.shape[0]) for w in self.pod_w)
+
+    @property
+    def p(self) -> int:
+        return int(sum(self.pod_sizes))
+
+    @property
+    def w(self) -> np.ndarray:
+        """(p,) flattened per-device inverse speeds (pod-major order)."""
+        return np.concatenate(self.pod_w)
+
+    def pod_slices(self) -> Tuple[slice, ...]:
+        offs = np.concatenate([[0], np.cumsum(self.pod_sizes)])
+        return tuple(slice(int(offs[j]), int(offs[j + 1]))
+                     for j in range(self.n_pods))
+
+    def device_pod(self) -> np.ndarray:
+        """(p,) pod index of each flattened device."""
+        return np.repeat(np.arange(self.n_pods), self.pod_sizes)
+
+    def dcn_trunks(self) -> np.ndarray:
+        """(n_pods,) True where the pod's trunk is DCN-class."""
+        return self.trunk_z >= DCN_CLASS_Z
+
+    # -- lowerings ---------------------------------------------------------
+    def pod_rate(self) -> np.ndarray:
+        """(n_pods,) aggregate compute rate of each pod = sum(1/w_i)."""
+        return np.array([float(np.sum(1.0 / w)) for w in self.pod_w])
+
+    def top_star(self) -> StarNetwork:
+        """Pods as super-children: w_pod = 1/sum(1/w_i), z = trunk."""
+        return StarNetwork(w=1.0 / self.pod_rate(), z=self.trunk_z,
+                           t_cp=self.t_cp, t_cm=self.t_cm)
+
+    def pod_star(self, j: int) -> StarNetwork:
+        w = self.pod_w[j]
+        return StarNetwork(w=w, z=np.full_like(w, self.ici_z),
+                           t_cp=self.t_cp, t_cm=self.t_cm)
+
+    def flatten(self) -> StarTopology:
+        """The naive single-level model: every device gets a *private* link
+        of its pod's trunk class (over-provisioning DCN bandwidth m-fold)."""
+        z = np.concatenate([np.full(m, self.trunk_z[j])
+                            for j, m in enumerate(self.pod_sizes)])
+        return StarTopology(w=self.w, z=z, t_cp=self.t_cp, t_cm=self.t_cm)
+
+    # -- elasticity --------------------------------------------------------
+    def restrict(self, alive: Sequence[int]) -> "HierarchicalTopology":
+        """Drop dead devices (flattened indices); empty pods disappear."""
+        alive = set(int(i) for i in alive)
+        pods, trunks = [], []
+        for j, sl in enumerate(self.pod_slices()):
+            keep = [i - sl.start for i in range(sl.start, sl.stop)
+                    if i in alive]
+            if keep:
+                pods.append(self.pod_w[j][keep])
+                trunks.append(self.trunk_z[j])
+        assert pods, "cannot restrict to an empty device set"
+        return HierarchicalTopology(pod_w=tuple(pods),
+                                    trunk_z=np.asarray(trunks),
+                                    ici_z=self.ici_z,
+                                    t_cp=self.t_cp, t_cm=self.t_cm)
+
+    def with_rates(self, rates: Sequence[float]) -> "HierarchicalTopology":
+        rates = np.asarray(rates, dtype=np.float64)
+        assert rates.shape == (self.p,) and np.all(rates > 0)
+        pods = tuple(1.0 / rates[sl] for sl in self.pod_slices())
+        return HierarchicalTopology(pod_w=pods, trunk_z=self.trunk_z,
+                                    ici_z=self.ici_z,
+                                    t_cp=self.t_cp, t_cm=self.t_cm)
+
+    @staticmethod
+    def from_pod_speeds(speeds_by_pod: Sequence[Sequence[float]], *,
+                        ici: float = ICI_LINK,
+                        dcn: float = DCN_LINK,
+                        trunk_z: Optional[Sequence[float]] = None,
+                        ) -> "HierarchicalTopology":
+        """Relative device rates grouped by pod.  Pod 0 hosts the source
+        (ICI trunk); the rest cross DCN — override with ``trunk_z``."""
+        pods = tuple(1.0 / np.asarray(s, dtype=np.float64)
+                     for s in speeds_by_pod)
+        if trunk_z is None:
+            trunk_z = np.full(len(pods), dcn)
+            trunk_z[0] = ici
+        return HierarchicalTopology(pod_w=pods,
+                                    trunk_z=np.asarray(trunk_z),
+                                    ici_z=ici)
+
+
+Topology = Union[StarTopology, MeshTopology, HierarchicalTopology]
+
+
+def production_topology(*, multi_pod: bool = True,
+                        seed: int = 0,
+                        relative_speed: Optional[Sequence[float]] = None,
+                        ) -> Topology:
+    """Scheduler-plane topology of the production mesh (``launch/mesh.py``).
+
+    Multi-pod: (pod=2, data=16, model=16) — 2 pods of 256 devices behind
+    DCN trunks (pod 0 local).  Single pod: a 256-device ICI star.  Device
+    heterogeneity defaults to the paper's §6.1 w*Tcp range, seeded;
+    pass ``relative_speed`` (p,) to use measured rates instead.
+    """
+    shape = production_shape(multi_pod)
+    if multi_pod:
+        n_pods, per_pod = shape[0], int(np.prod(shape[1:]))
+    else:
+        n_pods, per_pod = 1, int(np.prod(shape))
+    p = n_pods * per_pod
+    if relative_speed is not None:
+        w = np.mean(W_TCP_RANGE) / np.asarray(relative_speed,
+                                              dtype=np.float64)
+        assert w.shape == (p,)
+    else:
+        rng = np.random.default_rng(seed)
+        w = rng.uniform(*W_TCP_RANGE, size=p)
+    if not multi_pod:
+        return StarTopology(w=w, z=np.full(p, ICI_LINK))
+    trunk = np.full(n_pods, DCN_LINK)
+    trunk[0] = ICI_LINK
+    return HierarchicalTopology(
+        pod_w=tuple(w[j * per_pod:(j + 1) * per_pod] for j in range(n_pods)),
+        trunk_z=trunk)

@@ -1,19 +1,20 @@
-"""Straggler mitigation + elastic rescale: the paper's solvers as the
+"""Straggler mitigation + elastic rescale: ``repro.plan`` as the
 scheduling brain of the runtime.
 
 On real fleets devices are heterogeneous in practice (thermal throttling,
 SDC-quarantined hosts, DCN sharing).  The runtime:
 
   1. measures per-device effective rates (here: injected or timed),
-  2. converts them to the paper's star-network model (w_i = 1/rate;
-     z_i = link class: ICI near-zero, DCN per-pod),
-  3. solves the §4 equality-based split (PCSS for compute-bound, PCCS when
-     link costs matter) + §4.5 integer adjustment with quantum=128
-     (MXU-aligned shards),
+  2. describes the platform as a ``repro.plan`` Topology — a flat ICI star
+     from the measured speeds by default, or any caller-provided topology
+     (e.g. the two-level multi-pod ``HierarchicalTopology``),
+  3. calls ``repro.plan.plan()`` (§4 equality solve / two-level recursion
+     + §4.5 integer adjustment, quantum=128 for MXU-aligned shards),
   4. re-packs the LBP matmul's ragged shards (core.lbp_matmul.pad_ragged).
 
-Elastic rescale (node loss/join) is the same path with a different device
-set, plus checkpoint restore-with-reshard (checkpoint.store).
+Elastic rescale (node loss/join) is the same path with the topology
+restricted to the surviving device set, plus checkpoint
+restore-with-reshard (checkpoint.store).
 """
 
 from __future__ import annotations
@@ -23,8 +24,9 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from ..core.network import SpeedProfile, StarNetwork
+from ..core.network import StarNetwork
 from ..core.partition import LayerAssignment
+from ..plan import PartitionPlan, StarTopology, Topology, plan as plan_split
 
 
 @dataclasses.dataclass
@@ -32,6 +34,7 @@ class RebalancePlan:
     assignment: LayerAssignment
     speeds: np.ndarray
     predicted_speedup: float     # vs even split, compute-bound model
+    plan: Optional[PartitionPlan] = None   # full IR (finish times, comm, provenance)
 
 
 def measure_speeds(step_times: Sequence[float]) -> np.ndarray:
@@ -42,31 +45,65 @@ def measure_speeds(step_times: Sequence[float]) -> np.ndarray:
     return rate / rate.mean()
 
 
-def plan_rebalance(K: int, speeds: Sequence[float], *, quantum: int = 128,
-                   mode: str = "PCSS",
-                   net: Optional[StarNetwork] = None) -> RebalancePlan:
+def _as_topology(speeds, net: Optional[StarNetwork],
+                 topology: Optional[Topology]) -> Topology:
+    """Precedence: explicit topology > legacy StarNetwork > measured speeds."""
+    if topology is not None:
+        return topology
+    if net is not None:
+        return StarTopology.from_network(net)
+    if speeds is None:
+        raise ValueError("pass speeds=, net= or topology= — there is "
+                         "nothing to describe the fleet from")
+    return StarTopology.from_speeds(np.asarray(speeds, dtype=np.float64))
+
+
+def plan_rebalance(K: int, speeds: Optional[Sequence[float]] = None, *,
+                   quantum: int = 128, mode: str = "PCSS",
+                   net: Optional[StarNetwork] = None,
+                   topology: Optional[Topology] = None) -> RebalancePlan:
     """Split contraction dim K over devices proportional to measured rates.
 
-    Falls back to quantum=1 if K is too small to quantize by 128 (reduced
-    smoke configs)."""
-    speeds = np.asarray(speeds, dtype=np.float64)
-    p = len(speeds)
-    if K % (quantum) != 0 or K < quantum * p:
+    Routes through ``repro.plan.plan()``; the returned ``RebalancePlan``
+    carries the full ``PartitionPlan`` IR.  Falls back to quantum=1 if K
+    is too small to quantize by 128 (reduced smoke configs)."""
+    topo = _as_topology(speeds, net, topology)
+    if speeds is None and not hasattr(topo, "w"):
+        raise ValueError(
+            f"pass speeds= alongside a {topo.kind!r} topology (it has no "
+            f"per-device speed view to derive them from)")
+    speeds = (np.asarray(speeds, dtype=np.float64) if speeds is not None
+              else 1.0 / topo.w)
+    p = topo.p
+    assert speeds.shape == (p,)
+    if K % quantum != 0 or K < quantum * p:
         quantum = 1
-    assign = LayerAssignment.from_speeds(K, speeds, quantum=quantum,
-                                         mode=mode, net=net)
+    pp = plan_split(topo, K, quantum=quantum, objective=mode)
+    assign = LayerAssignment(pp.k, quantum)
     # compute-bound finish time model: t = max_i k_i / speed_i
     even = np.full(p, K / p)
     t_even = float(np.max(even / speeds))
     t_new = float(np.max(np.where(assign.k > 0, assign.k / speeds, 0.0)))
     return RebalancePlan(assignment=assign, speeds=speeds,
-                         predicted_speedup=t_even / max(t_new, 1e-12))
+                         predicted_speedup=t_even / max(t_new, 1e-12),
+                         plan=pp)
 
 
 def drop_devices(assign: LayerAssignment, dead: Sequence[int],
-                 speeds: Sequence[float], quantum: int = 128
-                 ) -> RebalancePlan:
-    """Node failure: re-solve the split over the surviving device set."""
+                 speeds: Sequence[float], quantum: int = 128, *,
+                 mode: str = "PCSS",
+                 net: Optional[StarNetwork] = None,
+                 topology: Optional[Topology] = None) -> RebalancePlan:
+    """Node failure: re-solve the split over the surviving device set,
+    under the SAME mode and link model the caller planned with (the
+    topology/network is shrunk to the alive devices)."""
     alive = [i for i in range(assign.p) if i not in set(dead)]
     s = np.asarray(speeds, dtype=np.float64)[alive]
-    return plan_rebalance(assign.K, s, quantum=quantum)
+    topo = _as_topology(speeds, net, topology)
+    if not hasattr(topo, "restrict"):
+        raise ValueError(
+            f"cannot shrink a {topo.kind!r} topology to the survivors; "
+            f"rebuild it for the new fleet and call plan_rebalance")
+    assert topo.p == assign.p, "topology must describe the pre-failure fleet"
+    return plan_rebalance(assign.K, s, quantum=quantum, mode=mode,
+                          topology=topo.restrict(alive))

@@ -1,13 +1,13 @@
 """LBP capacity planner: split serving traffic across heterogeneous replicas.
 
 Dynamic request scheduling on heterogeneous workers is the serving-time
-analogue of the paper's static layer split.  Each serving replica i is a
-child of a star network (§4): ``w_i = 1 / measured tokens-per-sec`` and
-``z_i`` its link class (ICI near-zero, DCN per-pod).  A batch of N
-incoming requests is the divisible load; the §4 equality-based solvers
-give the real-valued split with the equal-finish-time property, and §4.5
-integer adjustment (``core.integer_adjust``) turns it into whole-request
-shares (quantum > 1 models replicas that only accept full micro-batches).
+analogue of the paper's static layer split, and it routes through the
+``repro.plan`` subsystem: the replica fleet is described ONCE as a
+Topology — a flat star (``w_i = 1 / measured tokens-per-sec``, ``z_i`` the
+link class) or the two-level ``HierarchicalTopology`` when replicas span
+pods behind shared DCN trunks — and ``repro.plan.plan()`` returns the
+``PartitionPlan`` (equal-finish-time shares, §4.5 integer adjustment;
+quantum > 1 models replicas that only accept full micro-batches).
 
 Rate drift (thermal throttling, noisy neighbours) is handled the same way
 ``runtime/rebalance.py`` handles stragglers: re-measure, and re-solve when
@@ -21,21 +21,21 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from ...core.integer_adjust import adjust_integer
-from ...core.network import StarNetwork
-from ...core.star import SOLVERS, StarSchedule, per_processor_finish
+from ...core.star import StarSchedule
+from ...plan import (DCN_LINK, ICI_LINK, PartitionPlan, StarTopology,
+                     Topology, plan as plan_split)
 from ...runtime.rebalance import measure_speeds
 
-ICI_LINK = 1e-9    # near-zero: in-pod replicas, solver balances compute only
-DCN_LINK = 1e-3    # cross-pod link class
+__all__ = ["CapacityPlanner", "ReplicaPlan", "ICI_LINK", "DCN_LINK"]
 
 
 @dataclasses.dataclass(frozen=True)
 class ReplicaPlan:
-    schedule: StarSchedule      # real-valued §4 solution (k sums to N)
+    schedule: StarSchedule      # real-valued §4-style solution (k sums to N)
     shares: np.ndarray          # (p,) integer requests per replica
     mode: str
     rates: np.ndarray           # tokens/sec the plan was solved against
+    partition: Optional[PartitionPlan] = None  # the full repro.plan IR
 
     @property
     def p(self) -> int:
@@ -50,18 +50,42 @@ class ReplicaPlan:
 
 
 class CapacityPlanner:
-    """Traffic splitter over p replicas with measured token rates."""
+    """Traffic splitter over p replicas with measured token rates.
 
-    def __init__(self, rates: Sequence[float],
+    Either pass measured ``rates`` (+ optional per-replica ``link_class``)
+    for the flat-star fleet, or a full ``repro.plan`` Topology (e.g.
+    ``HierarchicalTopology`` for multi-pod fleets) via ``topology=``.
+    """
+
+    def __init__(self, rates: Optional[Sequence[float]] = None,
                  link_class: Optional[Sequence[float]] = None,
                  mode: str = "PCCS", quantum: int = 1,
-                 drift_threshold: float = 0.2):
-        self.rates = np.asarray(rates, dtype=np.float64)
+                 drift_threshold: float = 0.2,
+                 topology: Optional[Topology] = None):
+        if topology is None:
+            assert rates is not None, "pass rates=... or topology=..."
+            topology = StarTopology.from_rates(rates, link_class)
+        if not hasattr(topology, "w"):
+            raise ValueError(
+                f"CapacityPlanner needs a per-replica topology (star or "
+                f"hierarchical), got {topology.kind!r}")
+        self.topology = topology
+        if rates is not None:
+            self.rates = np.asarray(rates, dtype=np.float64)
+            if self.rates.shape != (topology.p,):
+                raise ValueError(
+                    f"rates describe {self.rates.shape[0]} replicas but the "
+                    f"topology has {topology.p}; pass consistent views of "
+                    f"the fleet (or only topology=)")
+            if not np.allclose(1.0 / self.rates, topology.w):
+                raise ValueError(
+                    "rates disagree with topology.w — the solver would use "
+                    "the topology while ReplicaPlan.rates records something "
+                    "else; build the topology from the measured rates "
+                    "(StarTopology.from_rates / with_rates)")
+        else:
+            self.rates = 1.0 / topology.w
         assert np.all(self.rates > 0)
-        self.link = (np.full_like(self.rates, ICI_LINK)
-                     if link_class is None
-                     else np.asarray(link_class, dtype=np.float64))
-        assert self.link.shape == self.rates.shape
         self.mode = mode
         self.quantum = int(quantum)
         self.drift_threshold = float(drift_threshold)
@@ -70,8 +94,13 @@ class CapacityPlanner:
     def p(self) -> int:
         return int(self.rates.shape[0])
 
-    def network(self) -> StarNetwork:
-        return StarNetwork(w=1.0 / self.rates, z=self.link.copy())
+    def network(self):
+        """Single-level StarNetwork view of the fleet (hierarchical
+        topologies are flattened — use ``self.topology`` for the truth)."""
+        topo = self.topology
+        if not isinstance(topo, StarTopology):
+            topo = topo.flatten()
+        return topo.to_network()
 
     def plan(self, n_requests: int) -> ReplicaPlan:
         assert n_requests >= 1
@@ -79,12 +108,14 @@ class CapacityPlanner:
             raise ValueError(
                 f"n_requests={n_requests} must be a multiple of the "
                 f"micro-batch quantum {self.quantum} (pad the batch)")
-        net = self.network()
-        sched = SOLVERS[self.mode](net, n_requests)
-        shares = adjust_integer(net, n_requests, sched.k, self.mode,
-                                quantum=self.quantum)
-        return ReplicaPlan(schedule=sched, shares=shares, mode=self.mode,
-                           rates=self.rates.copy())
+        pp = plan_split(self.topology, n_requests, quantum=self.quantum,
+                        objective=self.mode)
+        sched = StarSchedule(
+            mode=self.mode, k=pp.k_real,
+            finish_time=float(pp.meta.get("schedule_finish", pp.finish_time)),
+            comm_volume=2.0 * n_requests * float(pp.k_real.sum()))
+        return ReplicaPlan(schedule=sched, shares=pp.k, mode=self.mode,
+                           rates=self.rates.copy(), partition=pp)
 
     # ------------------------------------------------------------------
     def drift(self, new_rates: Sequence[float]) -> float:
@@ -108,6 +139,7 @@ class CapacityPlanner:
         if self.drift(new) <= self.drift_threshold:
             return None
         self.rates = new
+        self.topology = self.topology.with_rates(new)
         return self.plan(n_requests)
 
     def observe_step_times(self, step_times: Sequence[float],
@@ -142,7 +174,11 @@ class CapacityPlanner:
         return out
 
     def finish_times(self, plan: ReplicaPlan) -> np.ndarray:
-        """Per-replica finish times of the integer shares under the §4
-        timing model (for the equal-finish-time check)."""
+        """Per-replica predicted finish times of the integer shares (the
+        plan IR's timing model — equal-finish within one quantum)."""
+        if plan.partition is not None:
+            return plan.partition.finish_times
+        # plans built without the IR (hand-constructed / pre-PR-3 callers)
+        from ...core.star import per_processor_finish
         return per_processor_finish(self.network(), plan.n_requests,
                                     plan.shares, plan.mode)

@@ -1,0 +1,101 @@
+"""The "hierarchical" aggregation mode: ICI+DCN byte accounting + semantics.
+
+Execution-plane counterpart of the ``repro.plan`` hierarchical planner:
+reduce-scatter within the pod (ICI), all-reduce the 1/m shard across pods
+(all the DCN traffic), all-gather within the pod (ICI).  The promise the
+plan IR makes about trunk traffic is the number the collective moves:
+
+  trunk egress per pod:  hierarchical  2 (P-1)/P x bytes(out)
+                         flat ring     2 (p-1)/p x bytes(out)  (~2x for P=2)
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collectives
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_hier_mode_registered():
+    assert "hierarchical" in collectives.available_modes()
+    mode = collectives.get_mode("hierarchical")
+    assert not mode.adds_device_axis
+
+
+def test_hier_out_spec_replicated():
+    axes = ("pod", "model")
+    assert collectives.out_spec("hierarchical", axes, ("data", None, None)) \
+        == P("data", None, None)
+
+
+def test_hier_rejects_single_axis():
+    with pytest.raises(ValueError, match="pod_axis"):
+        collectives.get_mode("hierarchical").combine(None, "model", 0)
+
+
+def test_hier_byte_breakdown_beats_flat_trunk():
+    """DCN trunk egress is (P-1)/P / ((p-1)/p) of the flat ring's —
+    ~(m-fold fewer shard-bytes per device) on the scarce link class."""
+    for out_elems in (4096, 1 << 20):
+        for n_pods in (2, 4):
+            for m in (4, 16, 256):
+                bd = collectives.hierarchical_byte_breakdown(
+                    out_elems, n_pods, m)
+                p = n_pods * m
+                v = out_elems * 2.0
+                assert bd["ici_per_device"] == pytest.approx(
+                    2 * (m - 1) / m * v)
+                assert bd["dcn_per_device"] == pytest.approx(
+                    2 * (n_pods - 1) / n_pods * v / m)
+                assert bd["dcn_per_pod"] == pytest.approx(
+                    2 * (n_pods - 1) / n_pods * v)
+                assert bd["flat_allreduce_dcn_per_pod"] == pytest.approx(
+                    2 * (p - 1) / p * v)
+                # the point: the trunk carries strictly less than flat
+                assert bd["dcn_per_pod"] < bd["flat_allreduce_dcn_per_pod"]
+    # degenerate single pod: pure ICI, no trunk traffic
+    bd = collectives.hierarchical_byte_breakdown(100, 1, 8)
+    assert bd["dcn_per_pod"] == 0.0
+
+
+def test_hier_generic_factor_monotone():
+    """The registry's worst-device factor (canonical 2-pod split) sits
+    between scatter's and ring's for every even p."""
+    for p in (4, 8, 64, 512):
+        hier = collectives.collective_bytes_per_device(1000, p, "hierarchical")
+        ar = collectives.collective_bytes_per_device(1000, p, "allreduce")
+        ring = collectives.collective_bytes_per_device(1000, p, "ring")
+        assert 0 < hier <= ar * 1.5     # ~allreduce-class total bytes
+        assert hier < ring
+
+
+def test_hier_matches_allreduce_multi_device():
+    """RS(inner) + psum(pod) + AG(inner) == psum on a real (2,4) mesh
+    (subprocess, same isolation pattern as tests/test_distributed.py)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    code = textwrap.dedent("""
+        import jax, numpy as np
+        from repro.compat import make_mesh
+        from repro.core.lbp_matmul import lbp_matmul, lbp_matmul_reference
+        assert len(jax.devices()) == 8
+        mesh = make_mesh((2, 4), ("pod", "model"))
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 64))
+        w = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+        ref = np.asarray(lbp_matmul_reference(x, w))
+        hier = jax.jit(lambda x, w: lbp_matmul(
+            x, w, mesh, axis=("pod", "model"), mode="hierarchical"))(x, w)
+        assert np.abs(np.asarray(hier) - ref).max() < 1e-4
+        print("HIER-OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "HIER-OK" in r.stdout
