@@ -1,0 +1,231 @@
+"""Overlapped layer-streaming plane vs blocking collectives.
+
+  PYTHONPATH=src python -m benchmarks.overlap [--smoke] [--out BENCH_overlap.json]
+  (re-executes itself with 8 host devices)
+
+Three sections, emitted to ``BENCH_overlap.json`` (CI runs ``--smoke``):
+
+  structure   the lowered overlapped ``lbp_row_parallel`` contains ZERO
+              monolithic all-gathers and exactly p-1 collective-permutes
+              whose link bytes equal the ``core.collectives`` registry's
+              analytic table for the stream_* modes (verified via
+              ``analysis.hlo_collectives.collective_summary``).
+  identity    streamed outputs == blocking outputs on the miniature
+              (pod=2, data=2, model=2) production mesh; wall time of both
+              planes (best-of-reps; CPU hosts have no async collectives,
+              so this is a dispatch-cost check, not the TPU win).
+  prediction  the §4 "overlap" objective vs serial PCCS on the production
+              2x16x16 shape — finish governed by max(comm, compute)
+              rather than the sum — plus the ICI-vs-DCN roofline split of
+              the aggregation bytes (``serial_vs_overlap``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+DEFAULT_OUT = str(REPO_ROOT / "BENCH_overlap.json")
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, str(REPO_ROOT))
+    from benchmarks._util import ensure_host_devices, time_best
+    ensure_host_devices(8)
+else:
+    from ._util import ensure_host_devices, time_best  # noqa: F401
+
+
+def _structure_section(n_dev: int) -> Dict:
+    """HLO of the overlapped plane: no all-gather, p-1 ppermutes, exact
+    byte match with the registry."""
+    import jax
+    from repro.analysis.hlo_collectives import collective_summary
+    from repro.compat import make_mesh
+    from repro.core import collectives, overlap
+    from repro.models import lbp_linear
+    from repro.models.tuning import set_tuning
+    from repro.sharding.rules import Rules
+
+    B, S, K, d = 2, 16, 64, 32
+    h = jax.random.normal(jax.random.PRNGKey(0), (B, S, K))
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, d))
+
+    # pure model-axis ring: the stream_scatter aggregation alone
+    mesh = make_mesh((n_dev,), ("model",))
+    rules = Rules(seq="model", ff="model", mesh=mesh)
+    set_tuning(explicit_lbp_scatter=True, overlap_streaming=True)
+    comp = jax.jit(lambda h, w: lbp_linear.lbp_row_parallel(h, w, rules)
+                   ).lower(h, w).compile()
+    summ = collective_summary(comp.as_text(), n_dev)
+    per_op = summ["per_op"]
+    assert "all-gather" not in per_op, per_op
+    assert "reduce-scatter" not in per_op and "all-reduce" not in per_op, per_op
+    pp = per_op["collective-permute"]
+    analytic = collectives.collective_bytes_per_device(
+        B * S * d, n_dev, "stream_scatter", itemsize=4)
+    expect_n = overlap.expected_ppermutes("stream_scatter", n_dev)
+    assert pp["count"] == expect_n, (pp, expect_n)
+    assert abs(pp["link_bytes"] - analytic) < 1e-6, (pp, analytic)
+
+    # full (pod, data, model) mesh: the FSDP weight ring joins in and the
+    # module still lowers with zero monolithic all-gathers
+    mesh3 = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    rules3 = Rules(batch=("pod", "data"), seq="model", embed="data",
+                   ff="model", mesh=mesh3)
+    h3 = jax.random.normal(jax.random.PRNGKey(2), (4, 8, K))
+    comp3 = jax.jit(lambda h, w: lbp_linear.lbp_row_parallel(h, w, rules3)
+                    ).lower(h3, w).compile()
+    summ3 = collective_summary(comp3.as_text(), n_dev)
+    assert "all-gather" not in summ3["per_op"], summ3["per_op"]
+    set_tuning(overlap_streaming=False)
+    return {
+        "model_ring": {"p": n_dev, "ppermutes": pp["count"],
+                       "link_bytes_hlo": pp["link_bytes"],
+                       "link_bytes_analytic": analytic},
+        "pod_mesh": {"per_op": summ3["per_op"]},
+        "allgather_free": True,
+    }
+
+
+def _identity_section(reps: int) -> Dict:
+    """Streamed == blocking on the miniature production mesh + wall time."""
+    import jax
+    import numpy as np
+    from repro.compat import make_mesh
+    from repro.models import lbp_linear
+    from repro.models.tuning import set_tuning
+    from repro.sharding.rules import Rules
+
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    rules = Rules(batch=("pod", "data"), seq="model", embed="data",
+                  ff="model", mesh=mesh)
+    B, S, K, d = 4, 32, 256, 128
+    h = jax.random.normal(jax.random.PRNGKey(0), (B, S, K))
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, d))
+    set_tuning(explicit_lbp_scatter=True)
+
+    outs, walls = {}, {}
+    for name, streaming in (("blocking", False), ("streamed", True)):
+        set_tuning(overlap_streaming=streaming)
+        fn = jax.jit(lambda h, w: lbp_linear.lbp_row_parallel(h, w, rules))
+        fn(h, w).block_until_ready()          # compile
+        outs[name] = np.asarray(fn(h, w))
+        walls[name] = time_best(lambda: fn(h, w).block_until_ready(), reps)
+    set_tuning(overlap_streaming=False)
+    err = float(np.abs(outs["streamed"] - outs["blocking"]).max())
+    assert err < 1e-4, err
+    return {"max_abs_err": err,
+            "wall_blocking_s": walls["blocking"],
+            "wall_streamed_s": walls["streamed"],
+            "note": "CPU wall time measures dispatch cost only; the "
+                    "overlap win needs async collectives (TPU)"}
+
+
+def _prediction_section(load: int) -> Dict:
+    """Serial vs max(comm, compute) finish on the production 2x16x16
+    shape, and the ICI-vs-DCN roofline split of the aggregation bytes."""
+    import numpy as np
+    from repro.analysis.roofline import (PEAK_FLOPS, collective_split_seconds,
+                                         serial_vs_overlap)
+    from repro.core.collectives import hierarchical_byte_breakdown
+    from repro.plan import (evaluate_split, plan, production_shape,
+                            production_topology)
+
+    topo = production_topology(multi_pod=True)
+    shape = production_shape(True)
+    serial = plan(topo, load, objective="PCCS")
+    ov = plan(topo, load, objective="overlap")
+    # cross pricing: each split under the other plane's cost model
+    serial_k_overlapped = float(np.max(
+        evaluate_split(topo, serial.k, load, objective="overlap")))
+    ov_k_serial = float(np.max(
+        evaluate_split(topo, ov.k, load, objective="PCCS")))
+
+    # execution-plane aggregation of one bf16 load x load output layer:
+    # ICI hops within the pod vs the shared DCN trunk, priced in seconds
+    pod_size = int(np.prod(shape[1:]))
+    bd = hierarchical_byte_breakdown(load * load, n_pods=shape[0],
+                                     pod_size=pod_size)
+    link = collective_split_seconds(bd["ici_per_device"], bd["dcn_per_pod"])
+    comp_s = 2.0 * load ** 3 / (shape[0] * pod_size) / PEAK_FLOPS
+    planes = serial_vs_overlap(comp_s, link["ici_s"], link["dcn_s"])
+    return {
+        "shape": list(shape), "load": load,
+        "serial_plan": {"solver": serial.solver,
+                        "finish": serial.finish_time,
+                        "finish_overlapped": serial.finish_time_overlap,
+                        "finish_of_split_on_overlap_plane":
+                            serial_k_overlapped},
+        "overlap_plan": {"solver": ov.solver, "finish": ov.finish_time,
+                         "finish_of_split_on_serial_plane": ov_k_serial},
+        "predicted_overlap_speedup":
+            serial.finish_time / max(ov.finish_time, 1e-12),
+        "roofline_split": {
+            "ici_s": link["ici_s"], "dcn_s": link["dcn_s"],
+            "compute_s": comp_s,
+            "serial_bound_s": planes["serial_s"],
+            "overlap_bound_s": planes["overlap_s"],
+            "overlap_speedup": planes["overlap_speedup"],
+            "bound": planes["overlap_bound"],
+        },
+    }
+
+
+def main(argv=None) -> Dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small load + few reps for CI")
+    ap.add_argument("--load", type=int, default=8192)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+
+    import jax
+    n_dev = len(jax.devices())
+    assert n_dev >= 8, (
+        "benchmarks.overlap needs 8 host devices; run via `python -m "
+        "benchmarks.overlap` (it re-execs itself with XLA_FLAGS set)")
+
+    load, reps = (2048, 2) if args.smoke else (args.load, args.reps)
+
+    structure = _structure_section(8)
+    identity = _identity_section(reps)
+    prediction = _prediction_section(load)
+
+    result = {
+        "workload": {"load": load, "reps": reps, "smoke": bool(args.smoke)},
+        "structure": structure,
+        "identity": identity,
+        "prediction": prediction,
+    }
+
+    mr = structure["model_ring"]
+    print(f"\nstructure : {mr['ppermutes']:.0f} ppermutes, "
+          f"{mr['link_bytes_hlo']:.0f} B/device "
+          f"(analytic {mr['link_bytes_analytic']:.0f} B), 0 all-gathers")
+    print(f"identity  : max |streamed - blocking| = "
+          f"{identity['max_abs_err']:.2e}  "
+          f"wall {identity['wall_streamed_s']*1e3:.1f}ms vs "
+          f"{identity['wall_blocking_s']*1e3:.1f}ms (CPU dispatch)")
+    rs = prediction["roofline_split"]
+    print(f"prediction: {prediction['shape']} load {load}  "
+          f"serial {prediction['serial_plan']['finish']:.1f} vs overlap "
+          f"{prediction['overlap_plan']['finish']:.1f} "
+          f"({prediction['predicted_overlap_speedup']:.2f}x)")
+    print(f"roofline  : compute {rs['compute_s']*1e3:.2f}ms  "
+          f"ici {rs['ici_s']*1e3:.2f}ms  dcn {rs['dcn_s']*1e3:.2f}ms  "
+          f"-> serial {rs['serial_bound_s']*1e3:.2f}ms, overlapped "
+          f"{rs['overlap_bound_s']*1e3:.2f}ms "
+          f"({rs['overlap_speedup']:.2f}x, {rs['bound']}-bound)")
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {args.out}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -18,19 +18,17 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
+import pathlib
 from typing import Dict
 
 import numpy as np
 
+from ._util import time_best
 
-def time_best(fn, reps: int) -> float:
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best
+# default artifact location: the repository root, so the perf trajectory
+# is tracked across PRs instead of vanishing into /tmp or CI workspaces
+DEFAULT_OUT = str(pathlib.Path(__file__).resolve().parents[1]
+                  / "BENCH_plan.json")
 
 
 def main(argv=None) -> Dict:
@@ -43,7 +41,7 @@ def main(argv=None) -> Dict:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--reps", type=int, default=5,
                     help="latency reps; best per side is kept")
-    ap.add_argument("--out", default="BENCH_plan.json")
+    ap.add_argument("--out", default=DEFAULT_OUT)
     args = ap.parse_args(argv)
 
     from repro.core.collectives import hierarchical_byte_breakdown

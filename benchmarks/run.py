@@ -1,21 +1,30 @@
 """Benchmark driver: one section per paper figure + the roofline report.
 
-  PYTHONPATH=src python -m benchmarks.run [--quick]
+  PYTHONPATH=src python -m benchmarks.run [--skip-roofline] [--skip-serve]
 
 Prints human-readable sections followed by ``name,value,note`` CSV rows
-(the machine-readable summary used by EXPERIMENTS.md).
+(the machine-readable summary used by EXPERIMENTS.md).  The trajectory
+artifacts — ``BENCH_plan.json`` / ``BENCH_serve.json`` /
+``BENCH_overlap.json`` — are written to the REPOSITORY ROOT (same
+filenames CI emits), so perf is tracked across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import pathlib
+import subprocess
 import sys
 import time
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--skip-serve", action="store_true",
+                    help="skip the (slow) serving-engine smoke")
     args = ap.parse_args()
 
     rows = []
@@ -37,12 +46,47 @@ def main() -> None:
     # production multi-pod shape (details land in BENCH_plan.json)
     t0 = time.time()
     from . import plan as plan_bench
-    pr = plan_bench.main(["--smoke", "--out", "/tmp/BENCH_plan_run.json"])
+    pr = plan_bench.main(["--smoke",
+                          "--out", str(REPO_ROOT / "BENCH_plan.json")])
     rows.append(("plan.hier_finish_speedup_x", pr["finish_speedup"],
                  "flat star priced on the true shared trunks"))
     rows.append(("plan.hier_dcn_reduction_pct", pr["dcn_reduction"] * 100,
                  "distribution volume on DCN trunks"))
     out(f"[plan benchmarks {time.time()-t0:.1f}s]")
+
+    # overlapped layer-streaming plane: needs 8 host devices, so it runs
+    # as a subprocess (this process keeps the real device topology)
+    t0 = time.time()
+    import json
+    from ._util import host_device_env
+    env = host_device_env(8)
+    env.setdefault("PYTHONPATH", str(REPO_ROOT / "src"))
+    overlap_out = REPO_ROOT / "BENCH_overlap.json"
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.overlap", "--smoke",
+         "--out", str(overlap_out)],
+        env=env, cwd=str(REPO_ROOT), capture_output=True, text=True)
+    if r.returncode == 0:
+        ov = json.loads(overlap_out.read_text())
+        rows.append(("overlap.predicted_speedup_x",
+                     ov["prediction"]["predicted_overlap_speedup"],
+                     "serial vs max(comm, compute) on 2x16x16"))
+        rows.append(("overlap.roofline_speedup_x",
+                     ov["prediction"]["roofline_split"]["overlap_speedup"],
+                     "serial vs overlapped collective bound"))
+    else:
+        out(f"[overlap benchmark FAILED]\n{r.stdout}\n{r.stderr}")
+    out(f"[overlap benchmarks {time.time()-t0:.1f}s]")
+
+    # serving engine vs fixed batches (details land in BENCH_serve.json)
+    if not args.skip_serve:
+        t0 = time.time()
+        from . import serve as serve_bench
+        sr = serve_bench.main(["--smoke",
+                               "--out", str(REPO_ROOT / "BENCH_serve.json")])
+        rows.append(("serve.engine_speedup_x", sr["speedup"],
+                     "continuous batching vs fixed batches (smoke)"))
+        out(f"[serve benchmarks {time.time()-t0:.1f}s]")
 
     # scheduler-plane wall time (the runtime re-solves these on rebalance)
     import numpy as _np

@@ -23,10 +23,16 @@ from __future__ import annotations
 
 import argparse
 import json
+import pathlib
 import time
 from typing import Dict, List, Tuple
 
 import numpy as np
+
+# default artifact location: the repository root, so the perf trajectory
+# is tracked across PRs instead of vanishing into /tmp or CI workspaces
+DEFAULT_OUT = str(pathlib.Path(__file__).resolve().parents[1]
+                  / "BENCH_serve.json")
 
 PROMPT_LENS = (8, 16, 32, 64)
 MAX_NEWS = (2, 4, 8, 32)    # heavy-tailed output lengths: the fixed batch
@@ -119,7 +125,7 @@ def main(argv=None) -> Dict:
     ap.add_argument("--reps", type=int, default=5,
                     help="measured repetitions; best wall per side is kept "
                          "(shared CI runners swing several-fold run to run)")
-    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--out", default=DEFAULT_OUT)
     args = ap.parse_args(argv)
 
     import jax

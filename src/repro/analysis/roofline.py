@@ -10,6 +10,14 @@ share of the theoretically-attainable step time goes to *useful* model
 math.  MODEL_FLOPS / HLO_FLOPs separately exposes remat/padding/redundancy
 waste.
 
+Multi-pod extension: collective bytes split by link class.  ICI carries
+the in-pod hops at ICI_BW per link; each pod's shared DCN trunk carries
+the cross-pod shard traffic at DCN_BW.  ``serial_vs_overlap`` prices a
+step on both execution planes — the blocking plane pays the SUM of the
+terms on the critical path, the layer-streaming plane (``core/overlap``)
+pays their MAX per the paper's simultaneous-start analysis — which is the
+ICI-vs-DCN narrative ``benchmarks/overlap.py`` reports.
+
 Usage:
   PYTHONPATH=src python -m repro.analysis.roofline [--mesh 16x16] [--csv]
 """
@@ -24,8 +32,42 @@ from typing import Dict, List, Optional
 PEAK_FLOPS = 197e12     # bf16 / chip (v5e)
 HBM_BW = 819e9          # bytes/s / chip
 ICI_BW = 50e9           # bytes/s / link
+DCN_BW = 12.5e9         # bytes/s / pod trunk (100 Gb/s shared DCN uplink)
 
 ARTIFACTS = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def serial_vs_overlap(compute_s: float, ici_s: float, dcn_s: float = 0.0,
+                      memory_s: float = 0.0) -> Dict[str, float]:
+    """Step-time bounds of the two execution planes.
+
+    serial:  blocking collectives — compute, ICI hops and the DCN trunk
+             serialize on the critical path (memory is folded into the
+             compute term as their max: HBM traffic already overlaps MXU
+             issue on TPU).
+    overlap: layer streaming — distribution of layer j+1 overlaps
+             multiplication of layer j, so the bound is the slowest single
+             term (the paper's simultaneous-start max(comm, compute)).
+    """
+    comp = max(compute_s, memory_s)
+    serial = comp + ici_s + dcn_s
+    overlapped = max(comp, ici_s, dcn_s)
+    bound = max(("compute", comp), ("ici", ici_s), ("dcn", dcn_s),
+                key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": comp, "ici_s": ici_s, "dcn_s": dcn_s,
+        "serial_s": serial, "overlap_s": overlapped,
+        "overlap_speedup": serial / overlapped if overlapped > 0 else 1.0,
+        "overlap_bound": bound,
+    }
+
+
+def collective_split_seconds(ici_bytes: float, dcn_bytes_per_pod: float
+                             ) -> Dict[str, float]:
+    """Seconds each link class needs for the given per-device ICI bytes and
+    per-pod trunk bytes (the `hierarchical_byte_breakdown` quantities)."""
+    return {"ici_s": ici_bytes / ICI_BW,
+            "dcn_s": dcn_bytes_per_pod / DCN_BW}
 
 
 def roofline_row(art: Dict) -> Dict:
@@ -50,7 +92,13 @@ def roofline_row(art: Dict) -> Dict:
               key=lambda kv: kv[1])
     t_model = model_dev / PEAK_FLOPS
     frac = t_model / dom[1] if dom[1] > 0 else 0.0
+    # both execution planes' bounds (dry-run artifacts are single-pod:
+    # all collective traffic is ICI-class)
+    planes = serial_vs_overlap(t_comp, t_coll, 0.0, memory_s=t_mem)
     return {
+        "serial_bound_s": planes["serial_s"],
+        "overlap_bound_s": planes["overlap_s"],
+        "overlap_speedup": planes["overlap_speedup"],
         "arch": art["arch"], "shape": art["shape"], "mesh": art["mesh"],
         "tag": art.get("tag", ""),
         "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,

@@ -14,6 +14,9 @@ Execution plane (JAX):
   partition         LayerAssignment {k_i} datatype
   lbp_matmul        k-sharded distributed matmul (layers/allreduce/scatter),
                     ragged heterogeneous shards
+  overlap           layer-streaming collective matmuls ("simultaneous
+                    start" on the mesh): streamed gather/scatter rings +
+                    the stream_* aggregation modes
 """
 
 from .network import MeshNetwork, SpeedProfile, StarNetwork, random_mesh, random_star  # noqa: F401

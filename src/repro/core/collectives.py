@@ -22,6 +22,12 @@ to the partial layers.  The built-in modes:
                all-reduce the 1/m shard across pods (all the DCN traffic),
                all-gather within the pod.  axis=(pod_axis, inner_axis).
 
+Layer-streaming modes ("stream_scatter" / "stream_gather" /
+"stream_hierarchical" — the paper's simultaneous-start overlap lifted to
+the mesh as ppermute rings, byte-identical to their blocking
+counterparts) are defined in ``core/overlap.py`` and register themselves
+here on import (see the bottom of this file).
+
 Every shard_map body in the repo combines partial layers through
 ``aggregate(partial, mode, axis)`` and builds its out-spec with
 ``out_spec(mode, axis, base)``, so the semantics, the PartitionSpec
@@ -271,3 +277,8 @@ register_mode(AggregationMode(
                 "across pods, all-gather in pod (replicated result; per-pod "
                 "trunk bytes 2(P-1)/P x out vs the flat ring's 2(p-1)/p)",
 ))
+
+
+# The overlapped layer-streaming modes register themselves on import (the
+# import sits below every definition they need, so the cycle is benign).
+from . import overlap as _overlap  # noqa: E402,F401

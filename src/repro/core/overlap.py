@@ -1,0 +1,257 @@
+"""Overlapped layer-streaming collective-matmul primitives (shard_map plane).
+
+The paper's "simultaneous start" observation — distributing layer j+1 can
+overlap multiplying layer j, so finish time is governed by max(comm,
+compute) rather than their sum — so far lived only inside the Pallas
+kernel (DMA double-buffering across the K grid).  This module lifts it to
+the mesh: every blocking collective around a distributed matmul is
+replaced by a ring of ``ppermute`` hops sized so one hop's transfer is in
+flight while the previous hop's chunk is being multiplied (XLA's
+latency-hiding scheduler overlaps them on TPU; the numerics are identical
+everywhere).
+
+Fused primitives (called INSIDE a shard_map body):
+
+  streamed_gather_matmul   replaces all-gather(w)->einsum: the weight's
+                           shard rotates around the ring and one column
+                           block of this device's LBP layer is matmul'd
+                           per hop while the next shard is in flight.
+                           p-1 ppermutes of bytes(shard) — exactly the
+                           ring all-gather's (p-1)/p x bytes(w) per device.
+  streamed_scatter_matmul  replaces einsum->psum_scatter: the local
+                           product is computed one output tile per hop,
+                           each tile accumulated into the partial sum
+                           arriving from the ring neighbour and forwarded
+                           (accumulate-and-forward).  p-1 ppermutes of
+                           bytes(out)/p — exactly reduce-scatter's
+                           (p-1)/p x bytes(out) per device.
+
+Aggregation-registry modes (drop-in for "allreduce"/"scatter" anywhere the
+``core.collectives`` registry is consumed — ``lbp_matmul``, ragged shards,
+``models/lbp_linear`` — with the same exact byte accounting):
+
+  "stream_scatter"       ring reduce-scatter by accumulate-and-forward
+                         tiles; output sharded like "scatter" mode,
+                         (p-1)/p x bytes(out) per device.
+  "stream_gather"        replicated result like "allreduce", decomposed
+                         into the tile ring reduce-scatter followed by a
+                         tile ring all-gather: 2(p-1) ppermutes moving
+                         2(p-1)/p x bytes(out) per device — the all-reduce
+                         ring unrolled so every hop can interleave with
+                         compute.
+  "stream_hierarchical"  two-level variant: tile ring reduce-scatter
+                         within the pod (ICI), all-reduce of the 1/m shard
+                         across pods (the DCN trunk hop), tile ring
+                         all-gather within the pod.  Byte model identical
+                         to "hierarchical".  axis=(pod_axis, inner_axis).
+
+Streaming requires the tiled dim to divide evenly by the axis size (the
+same constraint ``psum_scatter(tiled=True)`` imposes); a clear error is
+raised otherwise.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import collectives
+from .collectives import AggregationMode, _axis_size, _scatter_spec
+
+
+def _ring_perm(p: int) -> list:
+    """Forward ring: device i sends to i+1 (chunk held by i at step s was
+    originally chunk (i - s) mod p)."""
+    return [(i, (i + 1) % p) for i in range(p)]
+
+
+def _chunk_size(dim: int, p: int, what: str) -> int:
+    if dim % p != 0:
+        raise ValueError(
+            f"layer streaming needs the {what} dim ({dim}) divisible by the "
+            f"ring size ({p}) — same constraint as psum_scatter(tiled=True)")
+    return dim // p
+
+
+def _rs_ring(tile, axis: str, p: int) -> jax.Array:
+    """Accumulate-and-forward reduce-scatter ring: ``tile(c)`` produces
+    this device's contribution to chunk c (a matmul or a slice — computed
+    per hop so it can interleave with the in-flight ppermute).  After p-1
+    hops device i holds the fully-reduced tile i."""
+    idx = jax.lax.axis_index(axis)
+    perm = _ring_perm(p)
+    acc = tile(jnp.mod(idx - 1, p))
+    for s in range(1, p):
+        acc = jax.lax.ppermute(acc, axis, perm)
+        acc = acc + tile(jnp.mod(idx - 1 - s, p))
+    return acc
+
+
+def _ag_ring(buf: jax.Array, block, out: jax.Array, cs: int, sd: int,
+             axis: str, p: int) -> jax.Array:
+    """All-gather ring: ``buf`` rotates p-1 hops; each hop ``block(buf)``
+    is computed (identity, or a matmul against the resident operand) and
+    placed at its original owner's offset along ``sd``."""
+    idx = jax.lax.axis_index(axis)
+    perm = _ring_perm(p)
+    for s in range(p):
+        c = jnp.mod(idx - s, p)              # original owner of buf
+        out = jax.lax.dynamic_update_slice_in_dim(out, block(buf), c * cs,
+                                                  axis=sd)
+        if s < p - 1:
+            buf = jax.lax.ppermute(buf, axis, perm)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fused primitives (matmul interleaved with the ring)
+# ---------------------------------------------------------------------------
+
+def streamed_gather_matmul(hl: jax.Array, wl: jax.Array, axis: str
+                           ) -> jax.Array:
+    """hl @ all_gather(wl over ``axis``, dim 1) without the all-gather.
+
+    hl: (..., k) local activations; wl: (k, d/p) this device's shard of a
+    (k, d) weight whose dim 1 is sharded over ``axis``.  The weight shard
+    rotates around the ring; each hop multiplies one column block of this
+    device's layer while the next shard is in flight.  Returns (..., d).
+    """
+    assert isinstance(axis, str), "streaming rings run over a single axis"
+    p = _axis_size(axis)
+    if p == 1:
+        return jnp.einsum("...k,kd->...d", hl, wl)
+    d_local = wl.shape[1]
+    out = jnp.zeros(hl.shape[:-1] + (p * d_local,),
+                    jnp.result_type(hl.dtype, wl.dtype))
+    return _ag_ring(wl, lambda w: jnp.einsum("...k,kd->...d", hl, w),
+                    out, d_local, out.ndim - 1, axis, p)
+
+
+def streamed_scatter_matmul(hl: jax.Array, wl: jax.Array, axis: str, *,
+                            scatter_dim: int) -> jax.Array:
+    """psum_scatter(hl @ wl over ``axis``) without the reduce-scatter.
+
+    hl: (..., k) with k sharded over ``axis``; wl: (k, d).  The product's
+    ``scatter_dim`` is split into p tiles; tile matmuls are interleaved
+    with accumulate-and-forward ppermute hops so the tile for hop s+1 is
+    computed while hop s's partial sum is in flight.  Returns this
+    device's fully-reduced tile (== psum_scatter(..., tiled=True)).
+    """
+    assert isinstance(axis, str), "streaming rings run over a single axis"
+    p = _axis_size(axis)
+    if p == 1:
+        return jnp.einsum("...k,kd->...d", hl, wl)
+    out_ndim = hl.ndim - 1 + 1
+    if scatter_dim < 0:
+        scatter_dim += out_ndim
+
+    if scatter_dim == out_ndim - 1:          # tile the weight's columns
+        cs = _chunk_size(wl.shape[1], p, "scattered output")
+
+        def tile(c):
+            wc = jax.lax.dynamic_slice_in_dim(wl, c * cs, cs, axis=1)
+            return jnp.einsum("...k,kd->...d", hl, wc)
+    else:                                    # tile a batch dim of hl
+        cs = _chunk_size(hl.shape[scatter_dim], p, "scattered output")
+
+        def tile(c):
+            hc = jax.lax.dynamic_slice_in_dim(hl, c * cs, cs,
+                                              axis=scatter_dim)
+            return jnp.einsum("...k,kd->...d", hc, wl)
+
+    return _rs_ring(tile, axis, p)           # device i holds tile i
+
+
+# ---------------------------------------------------------------------------
+# streaming rings over an already-computed partial (registry combines)
+# ---------------------------------------------------------------------------
+
+def ring_reduce_scatter(partial: jax.Array, axis: str, sd: int) -> jax.Array:
+    """Accumulate-and-forward tile ring == psum_scatter(tiled=True):
+    p-1 ppermutes of bytes(out)/p per device."""
+    p = _axis_size(axis)
+    if p == 1:
+        return partial
+    cs = _chunk_size(partial.shape[sd], p, "scattered output")
+    return _rs_ring(
+        lambda c: jax.lax.dynamic_slice_in_dim(partial, c * cs, cs, axis=sd),
+        axis, p)
+
+
+def ring_all_gather(tile: jax.Array, axis: str, sd: int) -> jax.Array:
+    """Forward each owned tile p-1 hops == all_gather(tiled=True):
+    p-1 ppermutes of bytes(tile) per device."""
+    p = _axis_size(axis)
+    if p == 1:
+        return tile
+    cs = tile.shape[sd]
+    shape = tile.shape[:sd] + (p * cs,) + tile.shape[sd + 1:]
+    out = jnp.zeros(shape, tile.dtype)
+    return _ag_ring(tile, lambda b: b, out, cs, sd, axis, p)
+
+
+def _stream_gather_combine(partial: jax.Array, axis: str, sd: int
+                           ) -> jax.Array:
+    """Replicated result via RS-ring + AG-ring (the all-reduce ring
+    unrolled into 2(p-1) interleavable hops)."""
+    tile = ring_reduce_scatter(partial, axis, sd)
+    return ring_all_gather(tile, axis, sd)
+
+
+def _stream_hier_combine(partial: jax.Array, axis, sd: int) -> jax.Array:
+    """Two-level streaming: tile RS-ring in pod (ICI), shard all-reduce
+    across pods (DCN trunk), tile AG-ring in pod (ICI).  Numerically
+    identical to the "hierarchical" mode; the in-pod hops are ppermutes so
+    they can interleave with compute."""
+    if not isinstance(axis, (tuple, list)) or len(axis) != 2:
+        raise ValueError(
+            "stream_hierarchical aggregation needs axis=(pod_axis, "
+            f"inner_axis), got {axis!r}")
+    pod_axis, inner = axis
+    shard = ring_reduce_scatter(partial, inner, sd)
+    shard = jax.lax.psum(shard, pod_axis)    # DCN: V/m per device
+    return ring_all_gather(shard, inner, sd)
+
+
+# ---------------------------------------------------------------------------
+# registry entries — byte models exactly match the blocking counterparts
+# ---------------------------------------------------------------------------
+
+collectives.register_mode(AggregationMode(
+    name="stream_scatter",
+    combine=ring_reduce_scatter,
+    out_spec=_scatter_spec,
+    link_byte_factor=lambda p: 1.0 * (p - 1) / p,   # == "scatter"
+    description="streamed reduce-scatter: accumulate-and-forward tile ring "
+                "(p-1 ppermutes of out/p; bytes == scatter)",
+))
+
+collectives.register_mode(AggregationMode(
+    name="stream_gather",
+    combine=_stream_gather_combine,
+    out_spec=lambda axis, base, _sd: collectives.P(*base),
+    link_byte_factor=lambda p: 2.0 * (p - 1) / p,   # == "allreduce"
+    description="streamed replicated aggregation: RS-ring + AG-ring "
+                "(2(p-1) ppermutes of out/p; bytes == allreduce)",
+))
+
+collectives.register_mode(AggregationMode(
+    name="stream_hierarchical",
+    combine=_stream_hier_combine,
+    out_spec=lambda axis, base, _sd: collectives.P(*base),
+    link_byte_factor=collectives.get_mode("hierarchical").link_byte_factor,
+    description="two-level streaming: tile RS-ring in pod (ICI), shard "
+                "all-reduce across pods (DCN), tile AG-ring in pod "
+                "(bytes == hierarchical)",
+))
+
+
+def expected_ppermutes(mode: str, p: int, fsdp_ring: int = 1) -> int:
+    """Number of collective-permute ops the lowered HLO of one streamed
+    matmul carries: the p-1 (or 2(p-1)) aggregation hops plus the m-1
+    weight-shard hops when the FSDP gather is streamed too.  The
+    structural check ``benchmarks/overlap.py`` asserts against this."""
+    agg = {"stream_scatter": p - 1,
+           "stream_gather": 2 * (p - 1),
+           "stream_hierarchical": 2 * (p - 1)}[mode]
+    return agg + max(0, fsdp_ring - 1)

@@ -8,6 +8,10 @@ Bharadwaj et al.'s divisible-load monograph).  Four communication modes:
   PCCS  Parallel Communication,  Consecutive Start     (eqs 21-28)
   PCSS  Parallel Communication,  Simultaneous Start    (eqs 29-33)
 
+plus the beyond-paper "overlap" mode backing the layer-streaming execution
+plane (``core/overlap.py``): PCSS's simultaneous start priced honestly as
+``T_f(i) = max(comm_i, comp_i)`` instead of assuming comm is always hidden.
+
 Each solver returns the real-valued optimal split ``k`` (k_i >= 0, sum = N)
 and the overall finishing time T_f.  Integer rounding lives in
 ``integer_adjust.py`` (§4.5).
@@ -97,11 +101,30 @@ def solve_pcss(net: StarNetwork, N: int) -> StarSchedule:
     return StarSchedule("PCSS", k, tf, 2.0 * N * float(k.sum()))
 
 
+def solve_overlap(net: StarNetwork, N: int) -> StarSchedule:
+    """Beyond-paper: PCSS's simultaneous start with honest comm pricing.
+
+    PCSS assumes the streamed distribution is always hidden behind compute
+    (T_f(i) = comp_i).  On the overlapped execution plane the true bound is
+    ``max(comm_i, comp_i)`` — a slow link cannot be hidden by fast compute.
+    Both terms are linear in k_i, so equal finish gives the closed form
+    k_i proportional to 1 / max(N w_i Tcp, 2 z_i Tcm).
+    """
+    w, z, tcp, tcm = net.w, net.z, net.t_cp, net.t_cm
+    cost = np.maximum(N * w * tcp, 2.0 * z * tcm)   # per-unit-k bound
+    coef = cost[0] / cost
+    k1 = N / coef.sum()
+    k = coef * k1
+    tf = float(k[0] * N * cost[0])
+    return StarSchedule("overlap", k, tf, 2.0 * N * float(k.sum()))
+
+
 SOLVERS: Dict[Mode, Callable[[StarNetwork, int], StarSchedule]] = {
     "SCSS": solve_scss,
     "SCCS": solve_sccs,
     "PCCS": solve_pccs,
     "PCSS": solve_pcss,
+    "overlap": solve_overlap,
 }
 
 
@@ -122,6 +145,9 @@ def finish_time_for_split(net: StarNetwork, N: int, k: np.ndarray, mode: Mode) -
     if mode == "PCSS":
         # all links start at t=0, compute overlaps communication
         return float(np.max(comp))
+    if mode == "overlap":
+        # simultaneous start, honestly priced: max(comm, compute) per node
+        return float(np.max(np.maximum(comm, comp)))
     if mode == "PCCS":
         return float(np.max(comm + comp))
     if mode == "SCSS":
@@ -144,6 +170,8 @@ def per_processor_finish(net: StarNetwork, N: int, k: np.ndarray, mode: Mode) ->
     comm = 2.0 * k * N * z * tcm
     if mode == "PCSS":
         return comp
+    if mode == "overlap":
+        return np.maximum(comm, comp)
     if mode == "PCCS":
         return comm + comp
     if mode == "SCSS":

@@ -31,7 +31,15 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlapped layer-streaming plane: explicit "
+                         "shard_map LBP with stream_* aggregation "
+                         "(sequence-parallel train_sp profile)")
     args = ap.parse_args()
+
+    if args.overlap:
+        from ..models.tuning import set_tuning
+        set_tuning(explicit_lbp_scatter=True, overlap_streaming=True)
 
     if args.demo:
         cfg = get_reduced(args.arch)
@@ -58,7 +66,7 @@ def main():
 
     # production path: build the pod mesh and compile the step
     mesh = make_production_mesh()
-    rules = make_rules("train", mesh)
+    rules = make_rules("train_sp" if args.overlap else "train", mesh)
     cfg = get_config(args.arch)
     print(f"arch={cfg.name}  N={cfg.n_params()/1e9:.2f}B  mesh={mesh.shape}")
     print("production launch requires a real pod; use launch.dryrun to "

@@ -12,6 +12,14 @@ mode) or all-reduce ("allreduce" mode, the eager paper-faithful default).
 FSDP composes inside: the weight's embed dim arrives data-sharded and is
 all-gathered in the shard_map body (exactly what GSPMD does implicitly).
 
+With ``TUNING.overlap_streaming`` on, the body switches to the overlapped
+layer-streaming plane (``core/overlap.py``): the FSDP all-gather becomes a
+ppermute ring whose shards are matmul'd one column block per hop while the
+next shard is in flight, and the layer aggregation uses the streamed
+"stream_scatter"/"stream_gather" modes — the paper's simultaneous start
+(distribute layer j+1 while multiplying layer j) lifted from the kernel to
+the mesh, so the step is bounded by max(comm, compute) instead of the sum.
+
 Only used when the tuning flag ``explicit_lbp_scatter`` is on AND the rules
 carry real mesh axes; the null-rules smoke path keeps the plain einsum.
 """
@@ -24,7 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from ..core import collectives
+from ..core import collectives, overlap
 from ..sharding.rules import Rules
 
 
@@ -41,13 +49,27 @@ def applicable(rules: Rules) -> bool:
             and isinstance(_axis_or_none(rules.ff), str))
 
 
+def aggregation_mode(rules: Rules, *, streaming: Optional[bool] = None) -> str:
+    """The registry mode this layer aggregates with under ``rules``:
+    deferred (sequence-sharded) when rules.seq is set, replicated
+    otherwise; the stream_* variant when the overlap plane is on."""
+    if streaming is None:
+        from .tuning import TUNING
+        streaming = TUNING.overlap_streaming
+    if rules.seq is not None:
+        return "stream_scatter" if streaming else "scatter"
+    return "stream_gather" if streaming else "allreduce"
+
+
 def lbp_row_parallel(h: jax.Array, w: jax.Array, rules: Rules) -> jax.Array:
     """h: (B, S, K) with K sharded on the model axis; w: (K, d) sharded
     (model, embed).  Returns (B, S, d); S sharded on model when rules.seq
     is set (deferred aggregation), else replicated (eager psum)."""
+    from .tuning import TUNING
+    streaming = TUNING.overlap_streaming
     model_ax = _axis_or_none(rules.ff)
     data_ax = _axis_or_none(rules.embed)
-    mode = "scatter" if rules.seq is not None else "allreduce"
+    mode = aggregation_mode(rules, streaming=streaming)
 
     in_h = P(rules.batch, None, model_ax)
     in_w = P(model_ax, data_ax)
@@ -56,8 +78,20 @@ def lbp_row_parallel(h: jax.Array, w: jax.Array, rules: Rules) -> jax.Array:
 
     def local(hl, wl):
         if data_ax is not None:
-            wl = jax.lax.all_gather(wl, data_ax, axis=1, tiled=True)
-        partial = jnp.einsum("bsf,fd->bsd", hl, wl)   # this device's layer
+            if streaming:
+                # weight shards ride the ring; one column block of this
+                # device's layer is matmul'd per hop
+                partial = overlap.streamed_gather_matmul(hl, wl, data_ax)
+            else:
+                wl = jax.lax.all_gather(wl, data_ax, axis=1, tiled=True)
+                partial = jnp.einsum("bsf,fd->bsd", hl, wl)
+        elif streaming and mode == "stream_scatter":
+            # no FSDP ring: fuse the tile matmuls directly into the
+            # accumulate-and-forward aggregation ring
+            return overlap.streamed_scatter_matmul(hl, wl, model_ax,
+                                                   scatter_dim=1)
+        else:
+            partial = jnp.einsum("bsf,fd->bsd", hl, wl)
         return collectives.aggregate(partial, mode, model_ax, scatter_dim=1)
 
     fn = rules.shard_map(local, in_specs=(in_h, in_w), out_specs=out)

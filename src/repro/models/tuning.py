@@ -34,6 +34,14 @@ class Tuning:
     # the core.collectives registry ("scatter" under the train_sp /
     # prefill_sp profiles, "allreduce" otherwise)
     explicit_lbp_scatter: bool = False
+    # overlapped layer-streaming execution plane (core/overlap.py): the
+    # FSDP weight gather becomes a ppermute ring matmul'd one column block
+    # per hop, and the layer aggregation uses the stream_* modes
+    # ("stream_scatter" under the sp profiles, "stream_gather" otherwise)
+    # so distribution of layer j+1 overlaps multiplication of layer j.
+    # Only takes effect on the explicit path (explicit_lbp_scatter=True);
+    # requires the streamed dims to divide by the ring sizes.
+    overlap_streaming: bool = False
     # per-data-row MoE dispatch (no cross-row token gather).  Measured
     # REFUTED with GSPMD (it cannot prove the combine scatter-add local and
     # inserts full activation all-reduces) — kept for the record + the

@@ -49,6 +49,12 @@ class PartitionPlan:
     solver: str               # provenance: "star:PCCS", "hierarchical:PCCS+PCSS", "mesh:heuristic", ...
     topology_kind: str        # "star" | "mesh" | "hierarchical"
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # (p,) T_f(i) of the SAME integer shares on the overlapped
+    # layer-streaming plane (finish = max(comm_i, comp_i), the paper's
+    # simultaneous-start bound) — None when the topology's solver family
+    # has no overlap model (mesh).  Carried alongside the serial
+    # prediction so consumers can price the overlap win of any plan.
+    finish_times_overlap: Any = None
 
     def __post_init__(self):
         k = np.asarray(self.k, dtype=np.int64)
@@ -58,6 +64,10 @@ class PartitionPlan:
         object.__setattr__(self, "finish_times",
                            np.asarray(self.finish_times, dtype=np.float64))
         assert k.shape == self.k_real.shape == self.finish_times.shape
+        if self.finish_times_overlap is not None:
+            fo = np.asarray(self.finish_times_overlap, dtype=np.float64)
+            object.__setattr__(self, "finish_times_overlap", fo)
+            assert fo.shape == k.shape
         assert np.all(k >= 0) and int(k.sum()) == int(self.load)
         if self.quantum > 1:
             assert np.all(k % self.quantum == 0), \
@@ -75,6 +85,17 @@ class PartitionPlan:
             return 0.0
         return float(self.finish_times[loaded].max())
 
+    @property
+    def finish_time_overlap(self):
+        """Predicted makespan on the overlapped streaming plane (None when
+        no overlap model exists for this topology kind)."""
+        if self.finish_times_overlap is None:
+            return None
+        loaded = self.k > 0
+        if not loaded.any():
+            return 0.0
+        return float(self.finish_times_overlap[loaded].max())
+
     def fractions(self) -> np.ndarray:
         return self.k / max(int(self.load), 1)
 
@@ -87,6 +108,7 @@ class PartitionPlan:
             "load": int(self.load),
             "quantum": int(self.quantum),
             "finish_time": self.finish_time,
+            "finish_time_overlap": self.finish_time_overlap,
             "comm_total": self.comm.total,
             "comm_dcn": self.comm.dcn,
             "comm_ici": self.comm.ici,

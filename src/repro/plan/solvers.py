@@ -5,8 +5,12 @@ solve the real-valued split with the paper's machinery, integer-adjust to
 the quantum, predict per-node finish times, and account comm volume per
 link class.  Built-ins:
 
-  star          §4 equality solvers (objective = "SCSS"|"SCCS"|"PCCS"|"PCSS",
-                default PCCS) + §4.5 integer adjustment.
+  star          §4 equality solvers (objective = "SCSS"|"SCCS"|"PCCS"|"PCSS"
+                |"overlap", default PCCS) + §4.5 integer adjustment.  The
+                beyond-paper "overlap" objective targets the layer-streaming
+                execution plane (``core/overlap.py``): finish is the paper's
+                simultaneous-start bound max(comm_i, k_i w_i) instead of the
+                serial comm+compute sum.
   mesh          §5 MIP family (objective = "heuristic"|"pmft"|"lp", default
                 heuristic): the simulation-only solvers promoted to
                 first-class planning backends.
@@ -131,6 +135,11 @@ def _hier_finish_times(topo: HierarchicalTopology, k: np.ndarray, load: int,
     if mode == "PCSS":          # simultaneous start: full comm/comp overlap
         return comp
     ici_comm = 2.0 * load * k * topo.ici_z * topo.t_cm
+    if mode == "overlap":
+        # streamed pipeline trunk -> ICI -> compute: the finish bound is
+        # the slowest stage on the device's path, not the stage sum
+        return np.maximum(np.maximum(trunk_comm[topo.device_pod()],
+                                     ici_comm), comp)
     if mode == "PCCS":          # parallel trunks, consecutive start
         start = trunk_comm
     elif mode == "SCSS":        # sequential trunks, compute while receiving
@@ -157,7 +166,8 @@ def _plan_star(topo: StarTopology, load: int, quantum: int,
         finish_times=per_processor_finish(net, load, k, mode),
         comm=comm_for_split(topo, k, load),
         solver=f"star:{mode}", topology_kind="star",
-        meta={"schedule_finish": sched.finish_time})
+        meta={"schedule_finish": sched.finish_time},
+        finish_times_overlap=per_processor_finish(net, load, k, "overlap"))
 
 
 def _plan_hierarchical(topo: HierarchicalTopology, load: int, quantum: int,
@@ -179,14 +189,16 @@ def _plan_hierarchical(topo: HierarchicalTopology, load: int, quantum: int,
         psched = SOLVERS[POD_MODE](pod_net, share)
         k[sl] = adjust_integer(pod_net, share, psched.k, POD_MODE,
                                quantum=quantum)
+    kf = k.astype(np.float64)
     return PartitionPlan(
         k=k, k_real=k_real, load=load, quantum=quantum,
-        finish_times=_hier_finish_times(topo, k.astype(np.float64), load, mode),
+        finish_times=_hier_finish_times(topo, kf, load, mode),
         comm=comm_for_split(topo, k, load),
         solver=f"hierarchical:{mode}+{POD_MODE}",
         topology_kind="hierarchical",
         meta={"pod_shares": shares.tolist(),
-              "top_finish": sched.finish_time})
+              "top_finish": sched.finish_time},
+        finish_times_overlap=_hier_finish_times(topo, kf, load, "overlap"))
 
 
 def _plan_mesh(topo: MeshTopology, load: int, quantum: int,

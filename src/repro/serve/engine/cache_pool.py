@@ -16,6 +16,7 @@ through the jitted decode step.
 
 from __future__ import annotations
 
+import heapq
 from typing import List, Tuple
 
 import jax
@@ -27,6 +28,9 @@ class SlotCachePool:
     def __init__(self, n_slots: int):
         assert n_slots >= 1
         self.n_slots = int(n_slots)
+        # min-heap: allocate() hands out the LOWEST free slot (test-pinned)
+        # in O(log n) — the old sorted list paid an O(n) shift per pop(0)
+        # and an O(n log n) re-sort per free
         self._free: List[int] = list(range(n_slots))
         self._used: set = set()
         self.n_allocated = 0
@@ -50,7 +54,7 @@ class SlotCachePool:
     def allocate(self) -> int:
         if not self._free:
             raise RuntimeError("cache pool exhausted: no free slots")
-        slot = self._free.pop(0)
+        slot = heapq.heappop(self._free)
         self._used.add(slot)
         self.n_allocated += 1
         return slot
@@ -59,8 +63,7 @@ class SlotCachePool:
         if slot not in self._used:
             raise RuntimeError(f"slot {slot} is not allocated")
         self._used.remove(slot)
-        self._free.append(slot)
-        self._free.sort()
+        heapq.heappush(self._free, slot)
         self.n_freed += 1
 
 

@@ -9,9 +9,9 @@ arrival time has passed, which is how benchmarks replay staggered traces.
 
 from __future__ import annotations
 
-import bisect
 import dataclasses
-from typing import List, Optional
+import heapq
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -35,7 +35,10 @@ class AdmissionLimits:
 class RequestQueue:
     def __init__(self, limits: AdmissionLimits = AdmissionLimits()):
         self.limits = limits
-        self._pending: List[Request] = []   # kept sorted by (arrival, rid)
+        # min-heap keyed on (arrival, rid): only the minimum is ever
+        # popped, so submit and pop_ready are both O(log n) — the old
+        # sorted list paid an O(n) shift per pop_ready's list.pop(0)
+        self._pending: List[Tuple[Tuple[float, int], Request]] = []
         self._next_rid = 0
         self.n_submitted = 0
         self.n_rejected = 0
@@ -74,25 +77,22 @@ class RequestQueue:
         req = Request(rid=self._next_rid, prompt=prompt, max_new=int(max_new),
                       arrival=float(arrival), state=QUEUED)
         self._next_rid += 1
-        bisect.insort(self._pending, req,
-                      key=lambda r: (r.arrival, r.rid))
+        heapq.heappush(self._pending, ((req.arrival, req.rid), req))
         self.n_submitted += 1
         return req
 
     def pop_ready(self, now: float) -> Optional[Request]:
         """Oldest request whose arrival time has passed, or None."""
-        if self._pending and self._pending[0].arrival <= now:
-            return self._pending.pop(0)
+        if self._pending and self._pending[0][0][0] <= now:
+            return heapq.heappop(self._pending)[1]
         return None
 
     def mark_eligible(self, now: float, wall: float) -> None:
         """Stamp the wall-clock moment each request became servable (for
         time-to-first-token accounting that includes queueing delay)."""
-        for r in self._pending:
-            if r.arrival > now:
-                break
-            if r.eligible_wall is None:
+        for _, r in self._pending:       # heap order: check every entry
+            if r.arrival <= now and r.eligible_wall is None:
                 r.eligible_wall = wall
 
     def next_arrival(self) -> Optional[float]:
-        return self._pending[0].arrival if self._pending else None
+        return self._pending[0][0][0] if self._pending else None

@@ -43,13 +43,49 @@ def batch_specs(cfg: ModelConfig, rules: Rules):
 
 
 def make_train_step(cfg: ModelConfig, rules: Rules, opt_cfg: AdamWConfig,
-                    grad_accum: int = 1):
-    """Returns step(state, batch) -> (state, metrics)."""
+                    grad_accum: int = 1, *,
+                    overlap_streaming: Optional[bool] = None):
+    """Returns step(state, batch) -> (state, metrics).
+
+    ``overlap_streaming`` (None = leave the global tuning untouched)
+    selects the overlapped layer-streaming execution plane for every
+    row-parallel matmul in the step: the FSDP weight gather and the layer
+    aggregation become ppermute rings (``core/overlap.py``) so the lowered
+    step contains no monolithic all-gather and is bounded by
+    max(comm, compute) per the paper's simultaneous-start analysis.  It
+    implies the explicit shard_map LBP path — a plain einsum cannot
+    stream.  The flag is applied around the TRACE of ``step`` (set on
+    entry, restored on exit), so steps built with different settings
+    coexist and the process-global tuning is left untouched.
+    """
+
+    def _apply_tuning() -> Dict[str, bool]:
+        if overlap_streaming is None:
+            return {}
+        from ..models.tuning import TUNING, set_tuning
+        saved = {"overlap_streaming": TUNING.overlap_streaming,
+                 "explicit_lbp_scatter": TUNING.explicit_lbp_scatter}
+        set_tuning(overlap_streaming=bool(overlap_streaming))
+        if overlap_streaming:
+            set_tuning(explicit_lbp_scatter=True)
+        return saved
+
+    def _restore_tuning(saved: Dict[str, bool]) -> None:
+        if saved:
+            from ..models.tuning import set_tuning
+            set_tuning(**saved)
 
     def loss(params, micro):
         return T.loss_fn(params, cfg, rules, micro)
 
     def step(state: TrainState, batch) -> Tuple[TrainState, Dict[str, Any]]:
+        saved = _apply_tuning()
+        try:
+            return _step(state, batch)
+        finally:
+            _restore_tuning(saved)
+
+    def _step(state: TrainState, batch) -> Tuple[TrainState, Dict[str, Any]]:
         params = state["params"]
 
         if grad_accum == 1:

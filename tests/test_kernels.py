@@ -46,6 +46,42 @@ def test_matmul_block_shape_invariance():
         np.testing.assert_allclose(o, outs[0], rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (160, 96, 200, 64, 128, 32),    # all three blocks distinct + padding
+    (128, 256, 64, 32, 16, 128),    # block_k > block_m/block_n
+    (100, 60, 40, 64, 32, 16),      # ragged every dim, non-square blocks
+])
+def test_matmul_nonsquare_blocks(m, k, n, bm, bn, bk):
+    """block_m != block_n != block_k must stay exact vs the oracle."""
+    x = rand((m, k), jnp.float32, 11)
+    w = rand((k, n), jnp.float32, 12)
+    out = ops.matmul(x, w, block_m=bm, block_n=bn, block_k=bk,
+                     out_dtype=jnp.float32, interpret=True)
+    expect = ref.matmul_ref(x, w, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_smaller_than_one_block():
+    """Shapes far below a single block: the whole product lives in the
+    padding path (zero layers are exact by Theorem-1 linearity)."""
+    x = rand((7, 5), jnp.float32, 13)
+    w = rand((5, 3), jnp.float32, 14)
+    out = ops.matmul(x, w, block_m=128, block_n=128, block_k=128,
+                     out_dtype=jnp.float32, interpret=True)
+    expect = ref.matmul_ref(x, w, out_dtype=jnp.float32)
+    assert out.shape == (7, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-4, atol=2e-4)
+    # degenerate single row/col
+    x1 = rand((1, 2), jnp.float32, 15)
+    w1 = rand((2, 1), jnp.float32, 16)
+    out1 = ops.matmul(x1, w1, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1),
+                               np.asarray(ref.matmul_ref(x1, w1)),
+                               rtol=2e-4, atol=2e-4)
+
+
 # ---------------------------------------------------------------------------
 # rglru kernel
 # ---------------------------------------------------------------------------
@@ -115,6 +151,31 @@ def test_flash_causal_sweep(B, H, S, D, bq, bk, dtype, tol):
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(expect, np.float32),
                                rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("S,bq,bk", [
+    (96, 96, 64),     # q unpadded, keys padded 96 -> 128 (T % block_k != 0)
+    (100, 128, 48),   # T % block_k = 4; q padded too
+    (40, 64, 64),     # whole sequence smaller than one KV block
+])
+def test_flash_key_padding_ragged_T(S, bq, bk):
+    """Key/value padding on a T that is NOT a block_k multiple: the padded
+    keys sit at positions >= T and the causal mask of every real query row
+    must exclude them exactly (no mass leaks into the softmax)."""
+    B, H, D = 2, 2, 32
+    q = rand((B, H, S, D), jnp.float32, 21)
+    k = rand((B, H, S, D), jnp.float32, 22)
+    # huge-magnitude values in the *real* tail of k/v: if padded keys were
+    # mis-masked the online softmax would visibly shift
+    k = k.at[:, :, -1].mul(8.0)
+    v = rand((B, H, S, D), jnp.float32, 23)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                              interpret=True)
+    expect = ref.attention_ref(
+        q.reshape(B * H, S, D), k.reshape(B * H, S, D),
+        v.reshape(B * H, S, D), causal=True).reshape(B, H, S, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
 
 
 def test_flash_noncausal():

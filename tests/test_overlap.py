@@ -1,0 +1,362 @@
+"""Overlapped layer-streaming plane: modes, bytes, HLO structure, plan.
+
+The paper's "simultaneous start" lifted from the kernel to the mesh:
+
+  * stream_* aggregation modes are byte-identical to their blocking
+    counterparts (stream_scatter == scatter, stream_gather == allreduce,
+    stream_hierarchical == hierarchical) but lower to ppermute rings;
+  * the streamed matmul primitives are allclose to all-gather->einsum and
+    einsum->psum_scatter on a real 8-device (2-pod) mesh, including the
+    uneven plan()-assigned ragged shares;
+  * the lowered overlapped ``lbp_row_parallel`` carries ZERO all-gathers
+    and exactly p-1 collective-permutes whose bytes match the registry;
+  * a full train step on a (pod, data, model) mesh is loss-identical to
+    the blocking path;
+  * the "overlap" planning objective predicts finish = max(comm, comp)
+    and its split equalizes that bound.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collectives
+from repro.core.network import StarNetwork
+from repro.core.star import SOLVERS, per_processor_finish
+from repro.plan import (HierarchicalTopology, StarTopology, evaluate_split,
+                        plan)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(body: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    code = textwrap.dedent(body)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+# ---------------------------------------------------------------------------
+# registry: modes + exact byte accounting
+# ---------------------------------------------------------------------------
+
+def test_stream_modes_registered():
+    for name in ("stream_scatter", "stream_gather", "stream_hierarchical"):
+        assert name in collectives.available_modes()
+        assert not collectives.get_mode(name).adds_device_axis
+
+
+def test_stream_bytes_match_blocking_counterparts():
+    """Streaming changes the op shape, never the bytes: each stream mode's
+    per-device link bytes equal its blocking counterpart for every p."""
+    pairs = [("stream_scatter", "scatter"), ("stream_gather", "allreduce"),
+             ("stream_hierarchical", "hierarchical")]
+    for out_elems in (1, 4096, 1 << 20):
+        for p in (2, 4, 8, 64):
+            for itemsize in (1, 2, 4):
+                for stream, blocking in pairs:
+                    assert collectives.collective_bytes_per_device(
+                        out_elems, p, stream, itemsize) == pytest.approx(
+                        collectives.collective_bytes_per_device(
+                            out_elems, p, blocking, itemsize)), (stream, p)
+
+
+def test_stream_out_specs():
+    assert collectives.out_spec("stream_gather", "model",
+                                ("data", None, None)) == P("data", None, None)
+    assert collectives.out_spec("stream_scatter", "model",
+                                ("data", None, None)) == \
+        collectives.out_spec("scatter", "model", ("data", None, None))
+    assert collectives.out_spec("stream_hierarchical", ("pod", "model"),
+                                ("data", None, None)) == P("data", None, None)
+
+
+def test_stream_hier_rejects_single_axis():
+    with pytest.raises(ValueError, match="pod_axis"):
+        collectives.get_mode("stream_hierarchical").combine(None, "model", 0)
+
+
+def test_expected_ppermutes():
+    from repro.core.overlap import expected_ppermutes
+    assert expected_ppermutes("stream_scatter", 8) == 7
+    assert expected_ppermutes("stream_gather", 8) == 14
+    assert expected_ppermutes("stream_scatter", 4, fsdp_ring=2) == 4
+
+
+# ---------------------------------------------------------------------------
+# "overlap" planning objective: finish = max(comm, compute)
+# ---------------------------------------------------------------------------
+
+def test_overlap_solver_equalizes_max_bound():
+    net = StarNetwork(w=np.array([1.0, 2.0, 0.5, 1.0]),
+                      z=np.array([1e-9, 1e-3, 5e-3, 1e-9]))
+    N = 512
+    sched = SOLVERS["overlap"](net, N)
+    assert sched.k.sum() == pytest.approx(N)
+    per_unit = np.maximum(N * net.w * net.t_cp, 2.0 * net.z * net.t_cm)
+    bounds = sched.k * N * per_unit
+    np.testing.assert_allclose(bounds, bounds[0], rtol=1e-9)
+    tf = per_processor_finish(net, N, sched.k, "overlap")
+    np.testing.assert_allclose(tf, sched.finish_time, rtol=1e-9)
+
+
+def test_overlap_finish_never_exceeds_serial():
+    """max(comm, comp) <= comm + comp pointwise, so for the SAME split the
+    overlapped prediction can never be worse than PCCS's serial one."""
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        p = int(rng.integers(2, 12))
+        net = StarNetwork(w=rng.uniform(0.2, 3.0, p),
+                          z=rng.uniform(1e-9, 1e-2, p))
+        N = int(rng.integers(64, 1024))
+        k = rng.dirichlet(np.ones(p)) * N
+        serial = per_processor_finish(net, N, k, "PCCS")
+        ov = per_processor_finish(net, N, k, "overlap")
+        comp = per_processor_finish(net, N, k, "PCSS")
+        assert np.all(ov <= serial + 1e-12)
+        assert np.all(ov >= comp - 1e-12)   # PCSS assumes comm always hidden
+
+
+def test_plan_carries_both_predictions_star():
+    topo = StarTopology(w=np.array([1.0, 1.5, 0.7, 1.2]),
+                        z=np.array([1e-9, 1e-3, 1e-3, 1e-9]))
+    pp = plan(topo, 1024, objective="PCCS")
+    assert pp.finish_times_overlap is not None
+    assert pp.finish_time_overlap <= pp.finish_time + 1e-12
+    assert pp.summary()["finish_time_overlap"] == pp.finish_time_overlap
+    # the overlap objective plans directly against the streamed plane
+    po = plan(topo, 1024, objective="overlap")
+    assert po.solver == "star:overlap"
+    assert po.finish_time <= pp.finish_time_overlap + 1e-9
+    # evaluate_split prices any split on the overlapped plane
+    ev = evaluate_split(topo, pp.k, 1024, objective="overlap")
+    np.testing.assert_allclose(ev, pp.finish_times_overlap)
+
+
+def test_plan_overlap_hierarchical():
+    topo = HierarchicalTopology.from_pod_speeds(
+        [[1.0, 1.2, 0.8, 1.0], [1.1, 0.9, 1.0, 1.3]])
+    pp = plan(topo, 2048, objective="PCCS")
+    po = plan(topo, 2048, objective="overlap")
+    assert pp.finish_times_overlap is not None
+    assert po.solver.startswith("hierarchical:overlap")
+    assert int(po.k.sum()) == 2048
+    # overlapped prediction of the overlap-objective split beats (or ties)
+    # the serial prediction of the serial split
+    assert po.finish_time <= pp.finish_time + 1e-9
+    ev = evaluate_split(topo, po.k, 2048, objective="overlap")
+    loaded = po.k > 0
+    assert float(ev[loaded].max()) == pytest.approx(po.finish_time)
+
+
+def test_plan_overlap_mesh_has_no_model():
+    from repro.core.network import random_mesh
+    from repro.plan import MeshTopology
+    pm = plan(MeshTopology.from_network(random_mesh(3, 3, seed=0)), 100)
+    assert pm.finish_times_overlap is None
+    assert pm.finish_time_overlap is None
+
+
+# ---------------------------------------------------------------------------
+# multi-device semantics (subprocess, 8 host devices)
+# ---------------------------------------------------------------------------
+
+def test_stream_modes_match_blocking_multi_device():
+    """Streamed aggregation == blocking on a real 2-pod (2x4) mesh, for
+    even and uneven plan()-assigned shares."""
+    out = run_sub("""
+        import jax, numpy as np
+        from repro.compat import make_mesh
+        from repro.core.lbp_matmul import (lbp_matmul, lbp_matmul_reference,
+                                           lbp_matmul_heterogeneous)
+        from repro.core.partition import LayerAssignment
+        assert len(jax.devices()) == 8
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 64))
+        w = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+        ref = np.asarray(lbp_matmul_reference(x, w))
+
+        mesh = make_mesh((2, 4), ("pod", "model"))
+        flat = make_mesh((8,), ("model",))
+        for msh, axis in ((flat, "model"), (mesh, "model")):
+            for mode in ("stream_gather", "stream_scatter"):
+                got = jax.jit(lambda x, w: lbp_matmul(
+                    x, w, msh, axis=axis, mode=mode))(x, w)
+                assert np.abs(np.asarray(got) - ref).max() < 1e-4, mode
+        got = jax.jit(lambda x, w: lbp_matmul(
+            x, w, mesh, axis=("pod", "model"),
+            mode="stream_hierarchical"))(x, w)
+        assert np.abs(np.asarray(got) - ref).max() < 1e-4
+
+        # uneven plan()-assigned layer shares (ragged heterogeneous split)
+        asg = LayerAssignment.from_speeds(64, [1., 2., 4., 1., 1., 1., 2., 1.])
+        assert not asg.is_even()
+        for mode in ("stream_gather", "stream_scatter"):
+            got = jax.jit(lambda x, w: lbp_matmul_heterogeneous(
+                x, w, asg, flat, axis="model", mode=mode))(x, w)
+            assert np.abs(np.asarray(got) - ref).max() < 1e-4, mode
+        print("MODES-OK")
+    """)
+    assert "MODES-OK" in out
+
+
+def test_streamed_primitives_match_blocking_collectives():
+    """streamed_gather_matmul == all_gather->einsum and
+    streamed_scatter_matmul == einsum->psum_scatter inside shard_map."""
+    out = run_sub("""
+        import jax, numpy as np, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
+        from repro.core import overlap
+        assert len(jax.devices()) == 8
+        mesh = make_mesh((2, 4), ("pod", "model"))
+        h = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 64))
+        w = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+
+        def gather_stream(hl, wl):
+            return overlap.streamed_gather_matmul(hl, wl, "model")
+        def gather_block(hl, wl):
+            return jnp.einsum("bsf,fd->bsd", hl, jax.lax.all_gather(
+                wl, "model", axis=1, tiled=True))
+        specs = dict(in_specs=(P("pod", None, None), P(None, "model")),
+                     out_specs=P("pod", None, None))
+        a = jax.jit(shard_map(gather_stream, mesh=mesh,
+                              check_vma=False, **specs))(h, w)
+        b = jax.jit(shard_map(gather_block, mesh=mesh,
+                              check_vma=False, **specs))(h, w)
+        assert np.abs(np.asarray(a) - np.asarray(b)).max() < 1e-5
+
+        def scatter_stream(hl, wl):
+            return overlap.streamed_scatter_matmul(hl, wl, "model",
+                                                   scatter_dim=1)
+        def scatter_block(hl, wl):
+            return jax.lax.psum_scatter(
+                jnp.einsum("bsf,fd->bsd", hl, wl), "model",
+                scatter_dimension=1, tiled=True)
+        specs = dict(in_specs=(P("pod", None, "model"), P("model", None)),
+                     out_specs=P("pod", "model", None))
+        a = jax.jit(shard_map(scatter_stream, mesh=mesh,
+                              check_vma=False, **specs))(h, w)
+        b = jax.jit(shard_map(scatter_block, mesh=mesh,
+                              check_vma=False, **specs))(h, w)
+        assert np.abs(np.asarray(a) - np.asarray(b)).max() < 1e-5
+        print("PRIM-OK")
+    """)
+    assert "PRIM-OK" in out
+
+
+def test_overlapped_hlo_structure_and_bytes():
+    """The lowered overlapped lbp_row_parallel: zero all-gathers, exactly
+    p-1 ppermutes, link bytes == the registry's stream_scatter row."""
+    out = run_sub("""
+        import jax, numpy as np
+        from repro.analysis.hlo_collectives import collective_summary
+        from repro.compat import make_mesh
+        from repro.core import collectives, overlap
+        from repro.models import lbp_linear
+        from repro.models.tuning import set_tuning
+        from repro.sharding.rules import Rules
+        B, S, K, d, p = 2, 16, 64, 32, 8
+        mesh = make_mesh((p,), ("model",))
+        rules = Rules(seq="model", ff="model", mesh=mesh)
+        h = jax.random.normal(jax.random.PRNGKey(0), (B, S, K))
+        w = jax.random.normal(jax.random.PRNGKey(1), (K, d))
+        set_tuning(explicit_lbp_scatter=True, overlap_streaming=True)
+        comp = jax.jit(lambda h, w: lbp_linear.lbp_row_parallel(h, w, rules)
+                       ).lower(h, w).compile()
+        summ = collective_summary(comp.as_text(), p)
+        per_op = summ["per_op"]
+        assert "all-gather" not in per_op, per_op
+        assert "all-reduce" not in per_op, per_op
+        assert "reduce-scatter" not in per_op, per_op
+        pp = per_op["collective-permute"]
+        assert pp["count"] == overlap.expected_ppermutes("stream_scatter", p)
+        analytic = collectives.collective_bytes_per_device(
+            B * S * d, p, "stream_scatter", itemsize=4)
+        assert abs(pp["link_bytes"] - analytic) < 1e-6, (pp, analytic)
+
+        # the full (pod, data, model) mesh keeps the module all-gather-free
+        # (the FSDP weight ring replaces the blocking gather)
+        mesh3 = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        rules3 = Rules(batch=("pod", "data"), seq="model", embed="data",
+                       ff="model", mesh=mesh3)
+        h3 = jax.random.normal(jax.random.PRNGKey(2), (4, 8, K))
+        c3 = jax.jit(lambda h, w: lbp_linear.lbp_row_parallel(h, w, rules3)
+                     ).lower(h3, w).compile()
+        s3 = collective_summary(c3.as_text(), 8)
+        assert "all-gather" not in s3["per_op"], s3["per_op"]
+        set_tuning(explicit_lbp_scatter=False, overlap_streaming=False)
+        print("HLO-OK")
+    """)
+    assert "HLO-OK" in out
+
+
+def test_train_step_restores_global_tuning():
+    """make_train_step(overlap_streaming=...) must not leak the flags into
+    the process-global TUNING: they are set around the trace and restored,
+    so later steps built with the default None are unaffected."""
+    import jax
+    from repro.configs import get_reduced
+    from repro.models.tuning import TUNING
+    from repro.optim.adamw import AdamWConfig
+    from repro.sharding.rules import Rules
+    from repro.train.step import init_train_state, make_train_step
+    assert not TUNING.overlap_streaming and not TUNING.explicit_lbp_scatter
+    cfg = get_reduced("llama3_2_3b")
+    st = init_train_state(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": np.zeros((2, 16), np.int32)}
+    step = make_train_step(cfg, Rules.null(), AdamWConfig(), 1,
+                           overlap_streaming=True)
+    jax.jit(step)(st, batch)
+    assert not TUNING.overlap_streaming, "flag leaked past the trace"
+    assert not TUNING.explicit_lbp_scatter, "flag leaked past the trace"
+
+
+def test_train_step_overlap_parity_pod_mesh():
+    """A real train step on the (pod, data, model) mesh: the overlapped
+    streaming plane is loss-identical to the blocking default."""
+    out = run_sub("""
+        import jax, numpy as np, dataclasses
+        from repro.compat import make_mesh
+        from repro.configs import get_reduced
+        from repro.sharding.rules import make_rules
+        from repro.train.step import (init_train_state, make_train_step,
+                                      train_state_specs)
+        from repro.optim.adamw import AdamWConfig
+        from repro.models.tuning import set_tuning
+        from jax.sharding import NamedSharding
+        cfg = dataclasses.replace(get_reduced("llama3_2_3b"), tp=2)
+        opt = AdamWConfig(warmup_steps=2, total_steps=10)
+        key = jax.random.PRNGKey(0)
+        batch = {"tokens": jax.random.randint(key, (8, 32), 0,
+                                              cfg.vocab_size)}
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        losses = {}
+        for name, prof, ov in [("default", "train", None),
+                               ("overlap", "train_sp", True)]:
+            set_tuning(explicit_lbp_scatter=False, overlap_streaming=False)
+            rules = make_rules(prof, mesh)
+            with mesh:
+                st = init_train_state(cfg, key)
+                sspec = train_state_specs(cfg, rules)
+                st = jax.device_put(st, jax.tree.map(
+                    lambda s: NamedSharding(mesh, s), sspec,
+                    is_leaf=lambda s: isinstance(
+                        s, jax.sharding.PartitionSpec)))
+                step = make_train_step(cfg, rules, opt, 2,
+                                       overlap_streaming=ov)
+                _, m = jax.jit(step)(st, batch)
+            losses[name] = float(m["loss"])
+        assert np.isclose(losses["default"], losses["overlap"],
+                          rtol=2e-3), losses
+        print("TRAIN-OK", losses)
+    """)
+    assert "TRAIN-OK" in out

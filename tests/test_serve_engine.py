@@ -132,6 +132,17 @@ def test_pool_alloc_free_conservation():
     assert pool.drained and pool.n_allocated == pool.n_freed == 3
 
 
+def test_pool_lowest_slot_first():
+    """allocate() hands out the lowest free slot id regardless of free
+    order (pins the semantics across the O(1) deque refactor)."""
+    pool = SlotCachePool(4)
+    assert [pool.allocate() for _ in range(4)] == [0, 1, 2, 3]
+    pool.free(2)
+    pool.free(0)
+    assert pool.allocate() == 0
+    assert pool.allocate() == 2
+
+
 # ---------------------------------------------------------------------------
 # scheduling invariants over random workloads (fake model)
 # ---------------------------------------------------------------------------
