@@ -1,0 +1,184 @@
+"""Bench-regression gate: fresh BENCH_*.json vs the committed copies.
+
+  PYTHONPATH=src python -m benchmarks.check_regression --fresh bench_out
+
+CI emits fresh trajectory artifacts into a scratch directory
+(``benchmarks.run --smoke --out-dir bench_out``) and this gate compares
+them against the committed repo-root copies.  Only STRUCTURAL metrics are
+gated — quantities that are deterministic functions of the code, not of
+the shared runner's wall clock:
+
+  overlap  HLO shape of the streamed plane: ppermute count, monolithic
+           all-gathers eliminated, HLO-vs-analytic byte parity, oracle
+           identity (max_abs_err == 0), and the predicted speedups of the
+           plan model (pure arithmetic -> tight tolerance).
+  plan     hierarchical-vs-flat predicted finish speedup, DCN volume
+           reduction, pod shares (all solver outputs, deterministic).
+  serve    workload-shape invariants (useful tokens, paged token
+           identity, fragmentation evidence) and occupancy, which is a
+           deterministic function of the schedule.  tok/s and TTFT are
+           NOT gated: shared CI runners swing several-fold.
+
+Wall-clock metrics are reported but never fail the gate.  Exit code 1 on
+any regression, with a per-check report.  When a tracked artifact is
+missing on either side the gate fails: silently skipping a comparison is
+how regressions sneak in.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Any, Callable, List, Tuple
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+ARTIFACTS = ("BENCH_plan.json", "BENCH_serve.json", "BENCH_overlap.json")
+
+
+def dig(tree: Any, path: str) -> Any:
+    node = tree
+    for part in path.split("."):
+        node = node[part]
+    return node
+
+
+class Gate:
+    def __init__(self):
+        self.failures: List[str] = []
+        self.passed: List[str] = []
+
+    def check(self, label: str, ok: bool, detail: str = "") -> None:
+        if ok:
+            self.passed.append(label)
+        else:
+            self.failures.append(f"{label}  {detail}")
+
+    def equal(self, label: str, fresh: Any, base: Any) -> None:
+        self.check(label, fresh == base, f"fresh={fresh!r} base={base!r}")
+
+    def close(self, label: str, fresh: float, base: float,
+              rel: float) -> None:
+        """fresh within rel of base (two-sided: a 'too good' jump is a
+        broken metric until the committed artifact is refreshed)."""
+        denom = max(abs(base), 1e-12)
+        drift = abs(fresh - base) / denom
+        self.check(label, drift <= rel,
+                   f"fresh={fresh:.6g} base={base:.6g} "
+                   f"drift={drift:.2%} > {rel:.0%}")
+
+    def at_least(self, label: str, fresh: float, floor: float) -> None:
+        self.check(label, fresh >= floor, f"fresh={fresh:.6g} < {floor}")
+
+
+def check_overlap(g: Gate, fresh: dict, base: dict) -> None:
+    # HLO structure of the streamed plane — exact
+    g.equal("overlap: model-ring ppermute count",
+            dig(fresh, "structure.model_ring.ppermutes"),
+            dig(base, "structure.model_ring.ppermutes"))
+    g.equal("overlap: zero monolithic all-gathers",
+            dig(fresh, "structure.allgather_free"), True)
+    # byte parity: the lowered HLO moves EXACTLY the registry's bytes
+    g.equal("overlap: HLO-vs-analytic byte parity",
+            dig(fresh, "structure.model_ring.link_bytes_hlo"),
+            dig(fresh, "structure.model_ring.link_bytes_analytic"))
+    # the accumulate-and-forward ring reduces in a different order than
+    # the blocking psum_scatter — bit-identity is backend luck, so gate
+    # on the benchmark's own tolerance, not on 0.0
+    g.check("overlap: streamed == blocking oracle (max_abs_err)",
+            dig(fresh, "identity.max_abs_err") <= 1e-4,
+            f"max_abs_err={dig(fresh, 'identity.max_abs_err')!r} > 1e-4")
+    # plan-model predictions are pure arithmetic on fixed constants
+    g.close("overlap: predicted plan speedup",
+            dig(fresh, "prediction.predicted_overlap_speedup"),
+            dig(base, "prediction.predicted_overlap_speedup"), 0.02)
+    g.close("overlap: roofline collective-bound speedup",
+            dig(fresh, "prediction.roofline_split.overlap_speedup"),
+            dig(base, "prediction.roofline_split.overlap_speedup"), 0.02)
+
+
+def check_plan(g: Gate, fresh: dict, base: dict) -> None:
+    g.close("plan: hierarchical finish speedup",
+            dig(fresh, "finish_speedup"), dig(base, "finish_speedup"), 0.02)
+    g.close("plan: DCN distribution-volume reduction",
+            dig(fresh, "dcn_reduction"), dig(base, "dcn_reduction"), 0.02)
+    g.equal("plan: pod shares (solver determinism)",
+            dig(fresh, "hierarchical.pod_shares"),
+            dig(base, "hierarchical.pod_shares"))
+    g.equal("plan: trunk aggregation bytes",
+            dig(fresh, "aggregation_dcn_per_pod.hierarchical_bytes"),
+            dig(base, "aggregation_dcn_per_pod.hierarchical_bytes"))
+
+
+def check_serve(g: Gate, fresh: dict, base: dict) -> None:
+    # same committed workload -> identical useful-token count
+    g.equal("serve: engine useful tokens",
+            dig(fresh, "engine.useful_tokens"),
+            dig(base, "engine.useful_tokens"))
+    g.equal("serve: paged plane token-identical to slot plane",
+            dig(fresh, "paged_vs_slot.token_identical"), True)
+    # fragmentation evidence: the paged comparison must actually exercise
+    # multi-page non-contiguous requests, or it proves nothing
+    g.at_least("serve: paged multi-page requests",
+               dig(fresh, "paged_vs_slot.multi_page_requests"),
+               dig(base, "paged_vs_slot.multi_page_requests"))
+    g.at_least("serve: paged fragmented requests",
+               dig(fresh, "paged_vs_slot.fragmented_requests"), 1)
+    # occupancy is schedule-determined, not wall-clock-determined
+    g.close("serve: engine occupancy",
+            dig(fresh, "engine.occupancy"),
+            dig(base, "engine.occupancy"), 0.05)
+    g.close("serve: paged page occupancy",
+            dig(fresh, "paged.page_occupancy"),
+            dig(base, "paged.page_occupancy"), 0.05)
+
+
+CHECKS: Tuple[Tuple[str, Callable[[Gate, dict, dict], None]], ...] = (
+    ("BENCH_overlap.json", check_overlap),
+    ("BENCH_plan.json", check_plan),
+    ("BENCH_serve.json", check_serve),
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True,
+                    help="directory holding the freshly-emitted "
+                         "BENCH_*.json artifacts")
+    ap.add_argument("--baseline", default=str(REPO_ROOT),
+                    help="directory holding the committed baselines "
+                         "(default: repo root)")
+    args = ap.parse_args(argv)
+    fresh_dir = pathlib.Path(args.fresh)
+    base_dir = pathlib.Path(args.baseline)
+
+    g = Gate()
+    for name, fn in CHECKS:
+        fpath, bpath = fresh_dir / name, base_dir / name
+        if not fpath.exists() or not bpath.exists():
+            g.check(f"{name}: artifact present on both sides", False,
+                    f"fresh={fpath.exists()} baseline={bpath.exists()}")
+            continue
+        try:
+            fn(g, json.loads(fpath.read_text()),
+               json.loads(bpath.read_text()))
+        except KeyError as e:
+            g.check(f"{name}: schema", False, f"missing key {e}")
+
+    for label in g.passed:
+        print(f"  ok  {label}")
+    for line in g.failures:
+        print(f"FAIL  {line}")
+    n = len(g.passed) + len(g.failures)
+    if g.failures:
+        print(f"\nbench-regression gate: {len(g.failures)}/{n} checks "
+              f"FAILED (structural metrics regressed — or the committed "
+              f"BENCH_*.json baselines need a refresh in this PR)")
+        return 1
+    print(f"\nbench-regression gate: all {n} checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

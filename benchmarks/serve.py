@@ -16,7 +16,11 @@ fixed-shape batch must, which is what the wall-clock comparison
 measures; token correctness is the engine's tested property.)
 
 Emits ``BENCH_serve.json``: tokens/sec, batch occupancy, time-to-first-
-token for the perf trajectory (CI runs ``--smoke``).
+token for the perf trajectory (CI runs ``--smoke``), plus the
+``paged_vs_slot`` section — the paged KV plane timed against the slot
+plane on the same workload, with token-identity and fragmentation
+evidence (requests spanning non-contiguous pages) as structural gates
+for ``benchmarks/check_regression.py``.
 """
 
 from __future__ import annotations
@@ -49,19 +53,21 @@ def make_workload(n: int, seed: int, vocab: int,
                               stagger=stagger, seed=seed)
 
 
-def run_engine(model, workload, slots: int) -> Dict[str, float]:
+def run_engine(model, workload, slots: int, page_size=None
+               ) -> Dict[str, float]:
     from repro.serve import EngineConfig, ServingEngine
     max_len = max(p.shape[0] for p, _, _ in workload)
     max_new = max(m for _, m, _ in workload)
     engine = ServingEngine(model, EngineConfig(
         n_slots=slots, max_prompt_len=max_len, max_new_cap=max_new,
         cache_len=max_len + max_new,
-        max_prefill_per_step=max(2, slots // 2)))
+        max_prefill_per_step=max(2, slots // 2),
+        page_size=page_size))
     for prompt, m, arrival in workload:
         engine.submit(prompt, m, arrival=arrival)
     rep = engine.run()
     assert len(rep.completed) == len(workload)
-    return {
+    out = {
         "tokens_per_sec": rep.tokens_per_sec,
         "decode_tokens_per_sec": rep.decode_tokens_per_sec,
         "ttft_mean_s": rep.ttft_mean,
@@ -69,6 +75,45 @@ def run_engine(model, workload, slots: int) -> Dict[str, float]:
         "useful_tokens": rep.total_tokens,
         "wall_s": rep.wall,
         "decode_steps": rep.decode_steps,
+    }
+    if page_size is not None:
+        out["page_occupancy"] = rep.page_occupancy
+    return out
+
+
+def paged_identity(slot_model, paged_model, workload, slots: int,
+                   page_size: int) -> Dict[str, object]:
+    """Token-identity + fragmentation evidence for the paged plane: one
+    run per plane, outputs compared request-by-request, and the paged
+    pool's page history checked for multi-page non-contiguous spans."""
+    from repro.serve import EngineConfig, ServingEngine
+    max_len = max(p.shape[0] for p, _, _ in workload)
+    max_new = max(m for _, m, _ in workload)
+
+    def engine(model, ps):
+        eng = ServingEngine(model, EngineConfig(
+            n_slots=slots, max_prompt_len=max_len, max_new_cap=max_new,
+            cache_len=max_len + max_new,
+            max_prefill_per_step=max(2, slots // 2), page_size=ps))
+        for prompt, m, arrival in workload:
+            eng.submit(prompt, m, arrival=arrival)
+        return eng
+
+    slot_eng = engine(slot_model, None)
+    paged_eng = engine(paged_model, page_size)
+    slot_rep, paged_rep = slot_eng.run(), paged_eng.run()
+    identical = all(
+        np.array_equal(slot_rep.completed[rid], paged_rep.completed[rid])
+        for rid in slot_rep.completed)
+    hist = paged_eng.pool.page_history
+    multi = sum(len(pages) >= 2 for pages in hist.values())
+    frag = sum(any(b != a + 1 for a, b in zip(pages, pages[1:]))
+               for pages in hist.values())
+    return {
+        "token_identical": bool(identical),
+        "requests": len(hist),
+        "multi_page_requests": int(multi),
+        "fragmented_requests": int(frag),
     }
 
 
@@ -121,6 +166,8 @@ def main(argv=None) -> Dict:
                     help="small workload for CI (16 requests, 4 slots)")
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per KV page for the paged-plane side")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--reps", type=int, default=5,
                     help="measured repetitions; best wall per side is kept "
@@ -136,36 +183,62 @@ def main(argv=None) -> Dict:
 
     n, slots = (16, 4) if args.smoke else (args.requests, args.slots)
     lens, news = ((8, 16), (2, 16)) if args.smoke else (PROMPT_LENS, MAX_NEWS)
+    page_size = args.page_size
     cfg = get_reduced("llama3_2_3b")
     rules = Rules.null()
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     workload = make_workload(n, args.seed, cfg.vocab_size, lens, news)
+    from repro.serve import PagedTransformerModel
     model = TransformerModel(params, cfg, rules)
+    paged_model = PagedTransformerModel(params, cfg, rules)
 
-    # warmup: compile every shape both paths will touch
+    # warmup: compile every shape all three paths will touch
     run_engine(model, workload, slots)
+    run_engine(paged_model, workload, slots, page_size=page_size)
     run_fixed_batch(params, cfg, rules, workload, slots)
 
     eng = min((run_engine(model, workload, slots)
                for _ in range(args.reps)), key=lambda r: r["wall_s"])
+    paged = min((run_engine(paged_model, workload, slots,
+                            page_size=page_size)
+                 for _ in range(args.reps)), key=lambda r: r["wall_s"])
     base = min((run_fixed_batch(params, cfg, rules, workload, slots)
                 for _ in range(args.reps)), key=lambda r: r["wall_s"])
+    identity = paged_identity(model, paged_model, workload, slots,
+                              page_size)
     result = {
         "workload": {"requests": n, "slots": slots, "seed": args.seed,
                      "prompt_lens": list(lens), "max_news": list(news),
+                     "page_size": page_size,
                      "arch": cfg.name, "smoke": bool(args.smoke)},
         "engine": eng,
+        "paged": paged,
         "fixed_batch": base,
         "speedup": eng["tokens_per_sec"] / base["tokens_per_sec"],
+        "paged_vs_slot": {
+            "tokens_per_sec_ratio": (paged["tokens_per_sec"]
+                                     / eng["tokens_per_sec"]),
+            "occupancy_delta": paged["occupancy"] - eng["occupancy"],
+            "page_occupancy": paged["page_occupancy"],
+            **identity,
+        },
     }
     print(f"\nworkload: {n} staggered requests, {slots} slots, {cfg.name}")
     print(f"engine:      {eng['tokens_per_sec']:8.1f} tok/s  "
           f"occupancy {eng['occupancy']:.2f}  "
           f"ttft {eng['ttft_mean_s']*1e3:.0f}ms")
+    print(f"paged:       {paged['tokens_per_sec']:8.1f} tok/s  "
+          f"occupancy {paged['occupancy']:.2f}  "
+          f"page-occ {paged['page_occupancy']:.2f}  "
+          f"(page_size={page_size})")
     print(f"fixed batch: {base['tokens_per_sec']:8.1f} tok/s  "
           f"useful-fraction {base['occupancy']:.2f}  "
           f"ttft {base['ttft_mean_s']*1e3:.0f}ms")
-    print(f"speedup:     {result['speedup']:.2f}x")
+    print(f"speedup:     {result['speedup']:.2f}x   paged/slot "
+          f"{result['paged_vs_slot']['tokens_per_sec_ratio']:.2f}x  "
+          f"identical={identity['token_identical']}  "
+          f"fragmented {identity['fragmented_requests']}"
+          f"/{identity['requests']}")
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     print(f"wrote {args.out}")

@@ -4,9 +4,11 @@
 
 Serves a staggered-arrival workload of mixed-length requests through
 ``repro.serve.engine``, verifies a few outputs against the
-``greedy_generate`` oracle, then shows the LBP capacity planner splitting
-traffic across heterogeneous replicas with the §4 star solvers (and
-re-planning when measured rates drift).
+``greedy_generate`` oracle, replays the SAME workload on the paged KV
+plane (fixed-size token pages + per-request page tables — token-identical
+by construction, with visible fragmentation), then shows the LBP capacity
+planner splitting traffic across heterogeneous replicas with the §4 star
+solvers (re-planning on drift, and memory-honest page-capacity splits).
 """
 
 import argparse
@@ -16,7 +18,8 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_reduced
 from repro.models import transformer as T
-from repro.serve import (CapacityPlanner, EngineConfig, ServingEngine,
+from repro.serve import (CapacityPlanner, EngineConfig,
+                         PagedTransformerModel, ServingEngine,
                          TransformerModel, greedy_generate)
 from repro.sharding.rules import Rules
 
@@ -63,6 +66,30 @@ def main():
         assert np.array_equal(ref, rep.completed[rid]), rid
     print("  oracle spot-check: token-identical")
 
+    # --- the same workload on the paged KV plane -------------------------
+    paged_eng = ServingEngine(
+        PagedTransformerModel(params, cfg, rules),
+        EngineConfig(n_slots=args.slots, max_prompt_len=24, max_new_cap=12,
+                     cache_len=36, page_size=4))
+    for prompt, max_new, arrival in workload:
+        paged_eng.submit(prompt, max_new, arrival=arrival)
+    paged_rep = paged_eng.run()
+    identical = all(np.array_equal(rep.completed[rid],
+                                   paged_rep.completed[rid])
+                    for rid in rep.completed)
+    frag = {rid: pages for rid, pages
+            in sorted(paged_eng.pool.page_history.items())
+            if any(b != a + 1 for a, b in zip(pages, pages[1:]))}
+    print(f"\npaged KV plane (page_size=4, "
+          f"{paged_eng.pool.n_pages} pages):")
+    print(f"  token-identical to the slot plane: {identical}")
+    print(f"  page occupancy {paged_rep.page_occupancy:.2f}, "
+          f"{len(frag)}/{args.requests} requests spanned "
+          f"non-contiguous pages")
+    for rid, pages in list(frag.items())[:3]:
+        print(f"    rid {rid}: physical pages {list(pages)}")
+    assert identical
+
     # --- capacity planning across heterogeneous replicas -----------------
     rates = [140.0, 90.0, 210.0, 60.0]   # measured tokens/sec per replica
     planner = CapacityPlanner(rates, mode="PCCS")
@@ -77,6 +104,13 @@ def main():
     new_plan = planner.observe([140.0, 90.0, 140.0, 60.0], 64)
     print(f"  drift re-plan (replica 2 slowed): "
           f"{new_plan.shares.tolist() if new_plan else 'kept old plan'}")
+
+    # memory-honest split: the fastest replica has the smallest page pool
+    paged_planner = CapacityPlanner(rates, mode="PCCS",
+                                    pages=[512, 512, 64, 512])
+    pplan = paged_planner.plan_paged(64, pages_per_request=8)
+    print(f"  page-capped shares (replica 2: 64 pages @ 8/request): "
+          f"{pplan.shares.tolist()}  saturated={pplan.saturated.tolist()}")
 
 
 if __name__ == "__main__":

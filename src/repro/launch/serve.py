@@ -5,6 +5,9 @@
 ``--demo`` serves a batch of synthetic staggered-arrival prompts through
 ``serve.engine.ServingEngine`` on local devices and reports prefill
 latency (time-to-first-token) separately from decode throughput.
+``--paged`` switches the KV cache to the paged plane (fixed-size token
+pages + per-request page tables; admission gated on free pages) —
+outputs are token-identical to the slot plane by construction.
 ``--oracle`` additionally replays every request through the reference
 ``greedy_generate`` and verifies the engine reproduced it token-for-token.
 """
@@ -18,8 +21,8 @@ import numpy as np
 
 from ..configs import ARCH_IDS, get_reduced
 from ..models import transformer as T
-from ..serve import (EngineConfig, ServingEngine, TransformerModel,
-                     greedy_generate)
+from ..serve import (EngineConfig, PagedTransformerModel, ServingEngine,
+                     TransformerModel, greedy_generate)
 from ..sharding.rules import Rules
 
 
@@ -60,6 +63,13 @@ def main(argv=None):
     ap.add_argument("--max-new", type=_positive_int("--max-new"), default=16)
     ap.add_argument("--slots", type=_positive_int("--slots"), default=4,
                     help="continuous-batching cache slots")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV plane: page-table cache, admission "
+                         "gated on free pages instead of free slots")
+    ap.add_argument("--page-size", type=_positive_int("--page-size"),
+                    default=8, help="tokens per KV page (with --paged)")
+    ap.add_argument("--pages", type=_positive_int("--pages"), default=None,
+                    help="physical page budget (default: slot-equivalent)")
     ap.add_argument("--oracle", action="store_true",
                     help="verify every output against greedy_generate")
     args = ap.parse_args(argv)
@@ -70,17 +80,23 @@ def main(argv=None):
     params = T.init_params(cfg, key)
     workload = build_workload(args, cfg.vocab_size)
 
-    model = TransformerModel(params, cfg, rules)
+    model_cls = PagedTransformerModel if args.paged else TransformerModel
+    model = model_cls(params, cfg, rules)
     engine = ServingEngine(model, EngineConfig(
         n_slots=args.slots, max_prompt_len=args.prompt_len,
         max_new_cap=args.max_new,
-        cache_len=args.prompt_len + args.max_new))
+        cache_len=args.prompt_len + args.max_new,
+        page_size=args.page_size if args.paged else None,
+        n_pages=args.pages if args.paged else None))
     for prompt, max_new, arrival in workload:
         engine.submit(prompt, max_new, arrival=arrival)
     report = engine.run()
 
+    plane = (f"paged(page_size={args.page_size}, "
+             f"pages={engine.pool.n_pages})" if args.paged else "slots")
     print(f"arch={cfg.name}  requests={args.batch}  slots={args.slots}  "
-          f"max_prompt={args.prompt_len}  new={args.max_new}")
+          f"max_prompt={args.prompt_len}  new={args.max_new}  "
+          f"cache={plane}")
     print(f"prefill: {report.prefill_count} prompts, "
           f"{report.prefill_tokens} tokens in {report.prefill_wall:.2f}s  "
           f"(TTFT mean {report.ttft_mean*1e3:.0f}ms)")
@@ -90,6 +106,9 @@ def main(argv=None):
           f"occupancy {report.occupancy:.2f})")
     print(f"total:   {report.total_tokens} tokens in {report.wall:.2f}s "
           f"({report.tokens_per_sec:.1f} tok/s aggregate)")
+    if args.paged:
+        print(f"pages:   occupancy {report.page_occupancy:.2f} "
+              f"(mean used/total over decode steps)")
     first = report.completed[0]
     print("generated token ids (first request):",
           list(map(int, first[:16])))

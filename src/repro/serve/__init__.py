@@ -1,5 +1,8 @@
 from .step import (cached_decode_step, cached_prefill_step,  # noqa: F401
-                   greedy_generate, make_decode_step, make_prefill_step)
+                   greedy_generate, make_decode_step,
+                   make_paged_decode_scan, make_paged_decode_step,
+                   make_prefill_step)
 from .engine import (CapacityPlanner, EngineConfig, EngineReport,  # noqa: F401
+                     ManualClock, PagedReplicaPlan, PagedTransformerModel,
                      ReplicaPlan, ServingEngine, TransformerModel,
                      serve_requests)

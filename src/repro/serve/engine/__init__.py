@@ -3,17 +3,20 @@
 The layer between the §4 solvers and the user-facing launcher:
 
   queue.py       FIFO admission-controlled request queue
-  cache_pool.py  slot-based ragged KV-cache pool
+  cache_pool.py  slot-row AND paged KV-cache pools (one admission surface)
   scheduler.py   per-iteration batch former (retire / admit / decode)
-  engine.py      the engine loop + transformer model adapter
+  engine.py      the engine loop + slot/paged transformer model adapters
   planner.py     star-network traffic split across heterogeneous replicas
+                 (page-seconds capacity for memory-bounded fleets)
 """
 
-from .cache_pool import SlotCachePool, write_slot  # noqa: F401
-from .engine import (EngineConfig, EngineReport, ServingEngine,  # noqa: F401
+from .cache_pool import (PagedCachePool, SlotCachePool,  # noqa: F401
+                         gather_page_view, scatter_page_view, write_slot)
+from .engine import (EngineConfig, EngineReport, ManualClock,  # noqa: F401
+                     PagedTransformerModel, ServingEngine,
                      TransformerModel, serve_requests)
 from .planner import (CapacityPlanner, DCN_LINK, ICI_LINK,  # noqa: F401
-                      ReplicaPlan)
+                      PagedReplicaPlan, ReplicaPlan)
 from .queue import AdmissionError, AdmissionLimits, RequestQueue  # noqa: F401
 from .request import Request  # noqa: F401
 from .scheduler import Scheduler, StepPlan  # noqa: F401

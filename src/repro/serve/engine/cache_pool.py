@@ -1,25 +1,46 @@
-"""Slot-based ragged KV-cache pool.
+"""KV-cache pools: whole-row slots and fixed-size token pages.
 
-The engine's cache is one pytree with ``n_slots`` rows on the batch axis
-(axis 1 for every cache leaf in the dense/moe/hybrid families — the ssm
-family mixes batch axes and is rejected by the model adapter).  A *slot*
-is one row; a request owns exactly one slot from prefill to retirement.
+Two bookkeeping planes share one admission interface (``can_admit`` /
+``admit`` / ``release`` / ``prepare_decode``) so the scheduler and engine
+are pool-agnostic:
 
-``SlotCachePool`` is pure bookkeeping — slot ids, a free list, and the
-conservation counters the property tests check (``n_allocated ==
-n_freed`` once drained).  The tensor side is the two functions below:
-``write_slot`` splices a freshly prefilled single-request cache into the
-pool (overwriting the whole row, so no stale bytes from the previous
-occupant survive), and the pool tree itself is threaded functionally
-through the jitted decode step.
+``SlotCachePool`` — the original plane: the cache is one pytree with
+``n_slots`` batch rows; a request owns one whole row from prefill to
+retirement.  Admission is gated on free *slots*.
+
+``PagedCachePool`` — the paged plane: the device cache is a pool of
+``n_pages`` fixed-size token pages (``page_size`` rows each, one physical
+page axis per cache leaf) plus one reserved *trash* page, and each live
+request holds a page *table* mapping its logical pages to physical ones.
+A request's cache can therefore span non-contiguous fragments, and
+admission is gated on free **pages**, not free slots:
+
+  * admission reserves the request's worst-case page count
+    (``ceil((prompt_len + max_new - 1) / page_size)``) so decode growth
+    can never be starved mid-flight (preemption-free reservation);
+  * prefill claims only the pages the prompt needs; decode claims more
+    lazily (*grow-on-decode*), structurally bounded by the reservation;
+  * unclaimed logical pages point at the trash page, so whole-view
+    scatters are always well-defined (the trash page absorbs garbage
+    rows that are never read back — decode attention masks positions
+    beyond each request's depth).
+
+Both pools are pure id bookkeeping with conservation counters
+(``n_allocated == n_freed`` once drained, property-tested).  The tensor
+side lives in the helper functions: ``write_slot`` splices a prefilled
+row into the slot pool; ``gather_page_view`` / ``scatter_page_view``
+translate between the physical page pool and the per-slot contiguous
+*view* the decode math runs on (one gather + one scatter inside the same
+jitted dispatch, so the step count stays identical to the slot plane).
 """
 
 from __future__ import annotations
 
 import heapq
-from typing import List, Tuple
+from typing import Dict, List, Tuple
 
 import jax
+import numpy as np
 
 BATCH_AXIS = 1  # cache-leaf batch axis for the supported families
 
@@ -66,6 +87,184 @@ class SlotCachePool:
         heapq.heappush(self._free, slot)
         self.n_freed += 1
 
+    # ---- pool-agnostic admission interface (scheduler/engine) ----------
+    def can_admit(self, request) -> bool:
+        return self.free_count > 0
+
+    def admit(self, request) -> int:
+        return self.allocate()
+
+    def release(self, request) -> None:
+        self.free(request.slot)
+
+    def prepare_decode(self, requests, k: int) -> None:
+        """Slot rows are whole — nothing to claim before a decode batch."""
+
+
+class PagedCachePool:
+    """Page allocator + per-request page tables for the paged KV plane.
+
+    ``table`` is the host-side (numpy) page map, shape
+    ``(n_slots, pages_per_slot)`` int32: row = decode-batch slot, column =
+    logical page index, value = physical page id (``trash_page`` when
+    unclaimed).  The engine pushes it to device as an argument of every
+    jitted dispatch — values change per step, shapes never do.
+    """
+
+    def __init__(self, n_pages: int, page_size: int, n_slots: int,
+                 pages_per_slot: int):
+        assert n_pages >= 1 and page_size >= 1
+        assert n_slots >= 1 and pages_per_slot >= 1
+        # a pool smaller than one slot's view could never admit a
+        # worst-case request: the engine would spin forever un-admitting
+        assert n_pages >= pages_per_slot, (
+            f"n_pages={n_pages} < pages_per_slot={pages_per_slot}")
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self.n_slots = int(n_slots)
+        self.pages_per_slot = int(pages_per_slot)
+        self._free_pages: List[int] = list(range(n_pages))
+        self._free_rows: List[int] = list(range(n_slots))
+        # rid -> (slot, reserved page count, claimed physical page list)
+        self._live: Dict[int, Tuple[int, int, List[int]]] = {}
+        self._reserved_total = 0
+        self.table = np.full((n_slots, pages_per_slot), self.trash_page,
+                             np.int32)
+        # rid -> final claimed page tuple, recorded at release (tests and
+        # benchmarks assert fragmentation: requests span non-contiguous
+        # physical pages)
+        self.page_history: Dict[int, Tuple[int, ...]] = {}
+        self.n_allocated = 0   # pages claimed (conservation counters)
+        self.n_freed = 0       # pages returned
+
+    @property
+    def trash_page(self) -> int:
+        """Reserved physical page absorbing writes from inactive slots and
+        unclaimed logical pages (index ``n_pages``: one past the real
+        pool, so leaves carry ``n_pages + 1`` physical pages)."""
+        return self.n_pages
+
+    @property
+    def view_len(self) -> int:
+        return self.pages_per_slot * self.page_size
+
+    @property
+    def free_page_count(self) -> int:
+        return len(self._free_pages)
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - len(self._free_pages)
+
+    @property
+    def reserved_pages(self) -> int:
+        return self._reserved_total
+
+    @property
+    def free_count(self) -> int:
+        """Admittable-request lower bound (kept for engine fast-paths):
+        0 when no row or no unreserved page remains."""
+        if not self._free_rows:
+            return 0
+        return max(0, self.n_pages - self._reserved_total)
+
+    @property
+    def used_count(self) -> int:
+        return len(self._live)
+
+    @property
+    def drained(self) -> bool:
+        return not self._live
+
+    def pages_needed(self, prompt_len: int, max_new: int) -> int:
+        """Worst-case pages a request can ever hold: prompt positions plus
+        the ``max_new - 1`` decode writes (the final token is returned but
+        never written back)."""
+        tokens = prompt_len + max(max_new - 1, 0)
+        return -(-tokens // self.page_size)
+
+    def prefill_pages(self, prompt_len: int) -> int:
+        return -(-prompt_len // self.page_size)
+
+    def live_pages(self, rid: int) -> Tuple[int, ...]:
+        return tuple(self._live[rid][2])
+
+    def _claim_one(self, rid: int) -> int:
+        slot, reserved, pages = self._live[rid]
+        if len(pages) >= reserved:
+            raise RuntimeError(
+                f"request {rid} grew past its reservation of {reserved} "
+                f"pages — admission must reserve the worst-case decode "
+                f"length")
+        if not self._free_pages:
+            raise RuntimeError(
+                "page pool exhausted despite reservations — allocator "
+                "invariant broken (claimed pages must never exceed the "
+                "reserved total)")
+        page = heapq.heappop(self._free_pages)
+        pages.append(page)
+        self.table[slot, len(pages) - 1] = page
+        self.n_allocated += 1
+        return page
+
+    # ---- pool-agnostic admission interface -----------------------------
+    def can_admit(self, request) -> bool:
+        """Free decode row AND enough unreserved pages for the request's
+        worst case.  Reserving up front is what makes the plane
+        preemption-free: grow-on-decode can never fail mid-flight."""
+        if not self._free_rows:
+            return False
+        need = self.pages_needed(request.prompt_len, request.max_new)
+        if need > self.pages_per_slot:
+            raise RuntimeError(
+                f"request needs {need} pages but a slot's view holds only "
+                f"{self.pages_per_slot} — admission control must bound "
+                f"prompt_len + max_new to the configured cache length")
+        return self._reserved_total + need <= self.n_pages
+
+    def admit(self, request) -> int:
+        if not self.can_admit(request):
+            raise RuntimeError("page pool cannot admit this request")
+        slot = heapq.heappop(self._free_rows)
+        need = self.pages_needed(request.prompt_len, request.max_new)
+        self._reserved_total += need
+        self._live[request.rid] = (slot, need, [])
+        for _ in range(self.prefill_pages(request.prompt_len)):
+            self._claim_one(request.rid)
+        return slot
+
+    def grow_to(self, rid: int, n_tokens: int) -> None:
+        """Claim pages until the request's claimed region covers
+        ``n_tokens`` cache positions (grow-on-decode)."""
+        _, _, pages = self._live[rid]
+        while len(pages) * self.page_size < n_tokens:
+            self._claim_one(rid)
+
+    def prepare_decode(self, requests, k: int) -> None:
+        """Claim every page the next ``k`` fused decode steps will write:
+        step i writes position ``prompt_len + (n_generated - 1) + i``, so
+        the claimed region must cover ``prompt_len + n_generated - 1 + k``
+        tokens.  Reservations make this infallible."""
+        for r in requests:
+            self.grow_to(r.rid, r.prompt_len + r.n_generated - 1 + k)
+
+    def release(self, request) -> None:
+        rid = request.rid
+        if rid not in self._live:
+            raise RuntimeError(f"request {rid} holds no pages")
+        slot, reserved, pages = self._live.pop(rid)
+        self.page_history[rid] = tuple(pages)
+        for page in pages:
+            heapq.heappush(self._free_pages, page)
+            self.n_freed += 1
+        self._reserved_total -= reserved
+        self.table[slot, :] = self.trash_page
+        heapq.heappush(self._free_rows, slot)
+
+
+# ===========================================================================
+# tensor helpers
+# ===========================================================================
 
 def write_slot(pool_tree, request_tree, slot: int):
     """Splice a single-request cache (batch dim 1) into pool row ``slot``.
@@ -77,3 +276,57 @@ def write_slot(pool_tree, request_tree, slot: int):
         lambda pool, one: jax.lax.dynamic_update_slice_in_dim(
             pool, one.astype(pool.dtype), slot, axis=BATCH_AXIS),
         pool_tree, request_tree)
+
+
+def _trash_mask(table, n_phys: int, rank: int):
+    """(1, S, npp, 1, ...) bool: True where a table entry is the trash
+    page (id ``n_phys - 1``), broadcastable against gathered pages."""
+    mask = table == (n_phys - 1)
+    return mask.reshape((1,) + mask.shape + (1,) * (rank - 3))
+
+
+def gather_page_view(pool_tree, table):
+    """Physical page pool -> per-slot contiguous view.
+
+    Leaves are ``(L, n_pages + 1, page_size, ...)``; ``table`` is
+    ``(n_slots, pages_per_slot)`` int32.  Returns leaves of shape
+    ``(L, n_slots, pages_per_slot * page_size, ...)`` — exactly the slot
+    plane's layout, so the unchanged decode math runs on the view and
+    positions beyond a request's depth (stale bytes in freshly claimed
+    pages) are masked by decode attention.
+
+    Trash-backed logical pages are forced to exact ZEROS rather than the
+    trash page's bytes: the trash page absorbs racing duplicate scatter
+    writes, and a torn write could leave inf/NaN bit patterns there —
+    attention masking zeroes the *probability* of those positions, but
+    ``0 * inf`` in the value contraction would still be NaN.  Zeros are
+    inert under masking exactly.
+    """
+    def gather(leaf):
+        g = leaf[:, table]                     # (L, S, npp, ps, ...)
+        g = jax.numpy.where(_trash_mask(table, leaf.shape[1], g.ndim),
+                            jax.numpy.zeros((), g.dtype), g)
+        L, S, npp, ps = g.shape[:4]
+        return g.reshape(L, S, npp * ps, *g.shape[4:])
+    return jax.tree_util.tree_map(gather, pool_tree)
+
+
+def scatter_page_view(pool_tree, view_tree, table):
+    """Per-slot contiguous view -> physical page pool (inverse gather).
+
+    Page ownership is exclusive among live requests, so slot views write
+    disjoint physical pages.  Every DUPLICATE index in ``table`` is the
+    trash page; its updates are forced to zero so all racing writers
+    carry identical bytes — the scatter's nondeterministic duplicate
+    ordering then cannot produce torn values (and the trash page stays
+    all-zero for the pool's lifetime).
+    """
+    def scatter(leaf, view):
+        L, S, Tv = view.shape[:3]
+        npp = table.shape[1]
+        pages = view.reshape(L, S, npp, Tv // npp, *view.shape[3:])
+        pages = jax.numpy.where(_trash_mask(table, leaf.shape[1],
+                                            pages.ndim),
+                                jax.numpy.zeros((), pages.dtype), pages)
+        return leaf.at[:, table].set(pages)
+    return jax.tree_util.tree_map(scatter, pool_tree, view_tree)

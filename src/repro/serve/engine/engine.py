@@ -41,7 +41,7 @@ import numpy as np
 from ...models import transformer as T
 from ...models.config import ModelConfig
 from ...sharding.rules import Rules
-from .cache_pool import SlotCachePool, write_slot
+from .cache_pool import PagedCachePool, SlotCachePool, write_slot
 from .queue import AdmissionLimits, RequestQueue
 from .request import Request
 from .scheduler import Scheduler
@@ -179,6 +179,124 @@ class TransformerModel:
         return self._decode_k[k](self.params, tok, pos, pool)
 
 
+class PagedTransformerModel(TransformerModel):
+    """Transformer adapter for the paged KV plane.
+
+    Same dispatch discipline as the slot adapter — grouped prefill and
+    every decode stretch are ONE jitted call — but the cache pytree is a
+    physical page pool (``n_pages + 1`` pages of ``page_size`` token rows
+    per layer; the extra page is the trash page) and every dispatch takes
+    the host-maintained page table as an argument.  Gather/scatter via
+    the table happens *inside* the jit (serve.step paged builders), so
+    the paged plane adds zero dispatches over the slot plane.
+
+    Restricted to purely-causal attention caches (dense/moe, no window):
+    recurrent state mixes batch axes and ring-windowed caches wrap
+    positions mod the window, neither of which pages cleanly.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, rules: Rules):
+        super().__init__(params, cfg, rules)
+        if not self.can_group_prefill:
+            raise NotImplementedError(
+                "paged KV serving supports purely-causal attention caches "
+                "(dense/moe families, window == 0); recurrent and "
+                "windowed caches do not page cleanly")
+        from ..step import make_paged_decode_scan, make_paged_decode_step
+        from .cache_pool import scatter_page_view
+        self._paged: Optional[PagedCachePool] = None
+
+        def paged_group_prefill(view_len, params, tokens, lengths, slots,
+                                tables, pool, tok_vec, pos_vec):
+            """Prefill B requests right-padded to one length, scatter each
+            row through its page table.  Unclaimed logical pages map to
+            the trash page; claimed pages receive the freshly-initialized
+            row (zero tail included), so no stale bytes from a previous
+            page owner are ever visible below a request's depth."""
+            B = tokens.shape[0]
+            batch = T.init_cache(self.cfg, B, view_len)
+            batch, logits = T.prefill(params, self.cfg, self.rules, tokens,
+                                      batch, last_index=lengths - 1)
+            firsts = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            for b in range(B):   # static unroll: B is a compile-time const
+                row = jax.tree_util.tree_map(
+                    lambda c: jax.lax.dynamic_slice_in_dim(c, b, 1, axis=1),
+                    batch)
+                pool = scatter_page_view(pool, row, tables[b:b + 1])
+                tok_vec = jax.lax.dynamic_update_slice(
+                    tok_vec, firsts[b:b + 1], (slots[b],))
+                pos_vec = jax.lax.dynamic_update_slice(
+                    pos_vec, lengths[b:b + 1], (slots[b],))
+            return pool, firsts, tok_vec, pos_vec
+
+        step1 = make_paged_decode_step(self.cfg, rules)
+
+        def paged_decode1(params, tok, pos, pool, table):
+            nxt, _, pool = step1(params, tok[:, None], pos, pool, table)
+            return pool, nxt, nxt, pos + 1
+
+        self._paged_prefill = jax.jit(paged_group_prefill, static_argnums=0)
+        self._paged_decode1 = jax.jit(paged_decode1)
+        self._paged_decode_k = {}
+        self._paged_scan_builder = (
+            lambda k: make_paged_decode_scan(self.cfg, rules, k))
+
+    def init_paged_pool(self, pool: PagedCachePool):
+        """Bind the page allocator and build the device-side page pool:
+        one batch row per physical page (+ the trash page)."""
+        self._paged = pool
+        return T.init_cache(self.cfg, pool.n_pages + 1, pool.page_size)
+
+    def _table(self):
+        # snapshot, never alias: on CPU jnp.asarray can be ZERO-COPY over
+        # the host numpy buffer, and the allocator mutates ``pool.table``
+        # in place while the previous async dispatch may still be reading
+        # it — without the copy the page map races the device
+        return jnp.asarray(self._paged.table.copy())
+
+    def prefill(self, pool, prompts, slots, tok, pos):
+        assert self._paged is not None, "init_paged_pool must run first"
+        B = len(prompts)
+        lengths = np.array([p.shape[0] for p in prompts], np.int32)
+        batch = np.zeros((B, int(lengths.max())), np.int32)
+        for b, p in enumerate(prompts):
+            batch[b, :p.shape[0]] = p
+        slots_np = np.asarray(slots, np.int32)
+        tables = self._paged.table[slots_np]        # (B, pages_per_slot)
+        return self._paged_prefill(self._paged.view_len, self.params,
+                                   jnp.asarray(batch), jnp.asarray(lengths),
+                                   jnp.asarray(slots_np),
+                                   jnp.asarray(tables), pool, tok, pos)
+
+    def decode(self, pool, tok, pos):
+        return self._paged_decode1(self.params, tok, pos, pool,
+                                   self._table())
+
+    def decode_multi(self, pool, tok, pos, k: int):
+        if k == 1:
+            pool, nxt, tok, pos = self.decode(pool, tok, pos)
+            return pool, nxt[None], tok, pos
+        if k not in self._paged_decode_k:
+            self._paged_decode_k[k] = jax.jit(self._paged_scan_builder(k))
+        return self._paged_decode_k[k](self.params, tok, pos, pool,
+                                       self._table())
+
+
+class ManualClock:
+    """Deterministic injectable clock for wall-clock arrival replay in
+    tests: ``clock()`` reads the time, ``sleep`` advances it (the engine
+    calls ``sleep`` when idle until the next arrival)."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def sleep(self, dt: float) -> None:
+        self.t += float(dt)
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     n_slots: int = 8
@@ -187,11 +305,33 @@ class EngineConfig:
     max_queue: int = 4096
     max_prefill_per_step: int = 2
     cache_len: Optional[int] = None   # default: max_prompt_len + max_new_cap
+    # paged KV plane: set page_size to gate admission on free pages
+    # instead of free slots (n_slots then only caps decode-batch width)
+    page_size: Optional[int] = None
+    n_pages: Optional[int] = None     # default: n_slots * pages_per_slot
+    # arrival units: "steps" (engine iterations, the default) or
+    # "seconds" (wall-clock replay against a monotonic clock)
+    arrival_mode: str = "steps"
 
     @property
     def pool_len(self) -> int:
         return (self.cache_len if self.cache_len is not None
                 else self.max_prompt_len + self.max_new_cap)
+
+    @property
+    def paged(self) -> bool:
+        return self.page_size is not None
+
+    @property
+    def pages_per_slot(self) -> int:
+        assert self.page_size is not None
+        return -(-self.pool_len // self.page_size)
+
+    @property
+    def pool_pages(self) -> int:
+        """Physical page budget (default: slot-pool-equivalent memory)."""
+        return (self.n_pages if self.n_pages is not None
+                else self.n_slots * self.pages_per_slot)
 
 
 @dataclasses.dataclass
@@ -207,6 +347,7 @@ class EngineReport:
     wall: float
     prefill_wall: float
     decode_wall: float
+    page_occupancy: float = 0.0            # mean used/total pages (paged only)
 
     @property
     def total_tokens(self) -> int:
@@ -227,7 +368,12 @@ class EngineReport:
 
 
 class ServingEngine:
-    def __init__(self, model, config: EngineConfig = EngineConfig()):
+    def __init__(self, model, config: EngineConfig = EngineConfig(),
+                 clock=None):
+        if config.arrival_mode not in ("steps", "seconds"):
+            raise ValueError(
+                f"arrival_mode must be 'steps' or 'seconds', got "
+                f"{config.arrival_mode!r}")
         self.model = model
         self.config = config
         self.queue = RequestQueue(AdmissionLimits(
@@ -235,18 +381,47 @@ class ServingEngine:
             max_new_cap=config.max_new_cap,
             max_queue=config.max_queue,
             max_total_len=config.pool_len))
-        self.pool = SlotCachePool(config.n_slots)
+        if config.paged:
+            if not hasattr(model, "init_paged_pool"):
+                raise TypeError(
+                    "page_size is set but the model adapter has no "
+                    "init_paged_pool — use PagedTransformerModel (or a "
+                    "paged-capable fake) for the paged KV plane")
+            self.pool = PagedCachePool(
+                n_pages=config.pool_pages, page_size=config.page_size,
+                n_slots=config.n_slots,
+                pages_per_slot=config.pages_per_slot)
+            self.cache = model.init_paged_pool(self.pool)
+        else:
+            self.pool = SlotCachePool(config.n_slots)
+            self.cache = model.init_pool(config.n_slots, config.pool_len)
         self.scheduler = Scheduler(self.queue, self.pool,
                                    config.max_prefill_per_step)
-        self.cache = model.init_pool(config.n_slots, config.pool_len)
         self._tok, self._pos = model.token_state(config.n_slots)
         self._trace = []                  # (k_i, n_slots) next-token blocks
         self._rows = 0                    # total trace rows so far
         self.completed: Dict[int, Request] = {}
         self.clock = 0.0
+        # wall-clock arrival replay: arrivals are seconds on an injectable
+        # monotonic clock (tests pass ManualClock; None = time.monotonic)
+        self._wall_arrivals = config.arrival_mode == "seconds"
+        self._clock_fn = clock if clock is not None else time.monotonic
+        self._clock_t0: Optional[float] = None
         self._stats = dict(decode_steps=0, prefill_count=0, decode_tokens=0,
                            prefill_tokens=0, occupancy_sum=0.0,
-                           prefill_wall=0.0, decode_wall=0.0)
+                           prefill_wall=0.0, decode_wall=0.0,
+                           page_occupancy_sum=0.0)
+
+    def _now(self) -> float:
+        """Engine time in arrival units (seconds since run start in
+        wall-clock mode; the iteration counter otherwise)."""
+        if self._clock_t0 is None:
+            self._clock_t0 = self._clock_fn()
+        return self._clock_fn() - self._clock_t0
+
+    def _sleep(self, dt: float) -> None:
+        sleep = getattr(self._clock_fn, "sleep", time.sleep)
+        sleep(dt)
 
     def submit(self, prompt, max_new: int, arrival: float = 0.0) -> int:
         return self.queue.submit(prompt, max_new, arrival).rid
@@ -256,15 +431,22 @@ class ServingEngine:
         """One engine iteration; returns False when fully drained."""
         if not self.scheduler.has_work:
             return False
+        if self._wall_arrivals:
+            self.clock = self._now()
         now, wall = self.clock, time.perf_counter()
         self.queue.mark_eligible(now, wall)
         plan = self.scheduler.plan(now)
         if not (plan.retired or plan.admit or self.scheduler.active):
             # nothing in flight and nothing eligible: fast-forward the
             # clock to the next arrival instead of spinning no-op steps
+            # (in wall-clock mode: actually wait on the injected clock)
             nxt = self.queue.next_arrival()
             if nxt is not None and nxt > self.clock:
-                self.clock = float(nxt)
+                if self._wall_arrivals:
+                    self._sleep(nxt - self.clock)
+                    self.clock = self._now()
+                else:
+                    self.clock = float(nxt)
                 return True
         for r in plan.retired:
             r.finish_wall = r.finish_wall or wall
@@ -290,7 +472,11 @@ class ServingEngine:
             self._stats["prefill_count"] += len(plan.admit)
             self._stats["prefill_wall"] += t1 - t0
 
-        if plan.decode:
+        # the decode batch was planned BEFORE prefill handed max_new == 1
+        # admits their first (and only) token — drop the already-done ones
+        # so budget math (k, page growth, token accounting) can't overshoot
+        live = [r for r in plan.decode if not r.done]
+        if live:
             # decode fusion: when nothing was admitted this step AND no
             # admission can happen before the next retirement (queue empty,
             # or every slot busy), the next k iterations are pure decode —
@@ -301,22 +487,30 @@ class ServingEngine:
             k = 1
             if not plan.admit and (len(self.queue) == 0
                                    or self.pool.free_count == 0):
-                k = min(r.max_new - r.n_generated for r in plan.decode)
+                k = min(r.max_new - r.n_generated for r in live)
                 k = 1 << max(0, k.bit_length() - 1)
+            # paged plane: claim every page the next k steps will write
+            # BEFORE the dispatch (the page map is an argument of the
+            # fused call); reservations make the claims infallible
+            self.pool.prepare_decode(live, k)
             t0 = time.perf_counter()
             self.cache, rows, self._tok, self._pos = self.model.decode_multi(
                 self.cache, self._tok, self._pos, k)
             self._trace.append(rows)       # (k, n_slots)
             self._rows += k
-            for r in plan.decode:
+            for r in live:
                 r.n_generated += k
             t1 = time.perf_counter()
             self._stats["decode_steps"] += k
-            self._stats["decode_tokens"] += k * len(plan.decode)
-            self._stats["occupancy_sum"] += (k * len(plan.decode)
+            self._stats["decode_tokens"] += k * len(live)
+            self._stats["occupancy_sum"] += (k * len(live)
                                              / self.config.n_slots)
+            if isinstance(self.pool, PagedCachePool):
+                self._stats["page_occupancy_sum"] += (
+                    k * self.pool.used_pages / self.pool.n_pages)
             self._stats["decode_wall"] += t1 - t0
-        self.clock += float(max(k, 1) if plan.decode else 1)
+        if not self._wall_arrivals:   # wall mode reads the clock per step
+            self.clock += float(max(k, 1) if live else 1)
         return True
 
     def _materialize(self) -> Dict[int, np.ndarray]:
@@ -361,6 +555,8 @@ class ServingEngine:
                 and r.eligible_wall is not None}
         occ = (s["occupancy_sum"] / s["decode_steps"]
                if s["decode_steps"] else 0.0)
+        pocc = (s["page_occupancy_sum"] / s["decode_steps"]
+                if s["decode_steps"] else 0.0)
         return EngineReport(
             completed=completed,
             steps=n, decode_steps=s["decode_steps"],
@@ -368,13 +564,19 @@ class ServingEngine:
             decode_tokens=s["decode_tokens"],
             prefill_tokens=s["prefill_tokens"],
             occupancy=occ, ttft=ttft, wall=wall,
-            prefill_wall=s["prefill_wall"], decode_wall=s["decode_wall"])
+            prefill_wall=s["prefill_wall"], decode_wall=s["decode_wall"],
+            page_occupancy=pocc)
 
 
 def serve_requests(params, cfg: ModelConfig, rules: Rules, requests,
-                   n_slots: int = 8, max_prefill_per_step: int = 2
-                   ) -> EngineReport:
-    """Convenience one-shot: serve [(prompt, max_new, arrival), ...]."""
+                   n_slots: int = 8, max_prefill_per_step: int = 2,
+                   page_size: Optional[int] = None,
+                   n_pages: Optional[int] = None) -> EngineReport:
+    """Convenience one-shot: serve [(prompt, max_new, arrival), ...].
+
+    ``page_size`` switches to the paged KV plane (``n_pages`` defaults to
+    slot-pool-equivalent memory) — outputs must be token-identical.
+    """
     reqs = [(np.asarray(p, np.int32).reshape(-1), int(m), float(a))
             for p, m, a in requests]
     max_len = max(p.shape[0] + m for p, m, _ in reqs)
@@ -382,8 +584,10 @@ def serve_requests(params, cfg: ModelConfig, rules: Rules, requests,
                       max_prompt_len=max(p.shape[0] for p, _, _ in reqs),
                       max_new_cap=max(m for _, m, _ in reqs),
                       cache_len=max_len,
-                      max_prefill_per_step=max_prefill_per_step)
-    eng = ServingEngine(TransformerModel(params, cfg, rules), ec)
+                      max_prefill_per_step=max_prefill_per_step,
+                      page_size=page_size, n_pages=n_pages)
+    model_cls = PagedTransformerModel if ec.paged else TransformerModel
+    eng = ServingEngine(model_cls(params, cfg, rules), ec)
     for p, m, a in reqs:
         eng.submit(p, m, arrival=a)
     return eng.run()

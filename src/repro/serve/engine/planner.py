@@ -12,6 +12,16 @@ quantum > 1 models replicas that only accept full micro-batches).
 Rate drift (thermal throttling, noisy neighbours) is handled the same way
 ``runtime/rebalance.py`` handles stragglers: re-measure, and re-solve when
 the measured rates have moved past a threshold.
+
+Paged fleets add a MEMORY dimension (Dongarra et al., master-worker with
+bounded worker memory): a replica's concurrency is capped by its KV page
+pool, so the divisible load is priced in **page-seconds** — a request on
+replica i holds ``pages_per_request`` pages for ``w_i`` time-units.  The
+equal-finish split is unchanged in shape; memory enters as a per-replica
+share cap, enforced by waterfilling (clamp the saturated replicas, re-run
+the §4 solver on the survivors for the remaining load).  A replica with a
+fast chip but a small page pool therefore splits *honestly*: it gets the
+lesser of its compute-fair share and what its memory can hold.
 """
 
 from __future__ import annotations
@@ -26,7 +36,8 @@ from ...plan import (DCN_LINK, ICI_LINK, PartitionPlan, StarTopology,
                      Topology, plan as plan_split)
 from ...runtime.rebalance import measure_speeds
 
-__all__ = ["CapacityPlanner", "ReplicaPlan", "ICI_LINK", "DCN_LINK"]
+__all__ = ["CapacityPlanner", "ReplicaPlan", "PagedReplicaPlan",
+           "ICI_LINK", "DCN_LINK"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +60,16 @@ class ReplicaPlan:
         return self.shares / max(self.n_requests, 1)
 
 
+@dataclasses.dataclass(frozen=True)
+class PagedReplicaPlan(ReplicaPlan):
+    """A ReplicaPlan whose shares respect per-replica page capacity."""
+
+    pages_per_request: int = 1
+    capacity: Optional[np.ndarray] = None       # (p,) request cap per replica
+    page_seconds: Optional[np.ndarray] = None   # (p,) pages x service time
+    saturated: Optional[np.ndarray] = None      # (p,) bool: memory-capped
+
+
 class CapacityPlanner:
     """Traffic splitter over p replicas with measured token rates.
 
@@ -61,7 +82,8 @@ class CapacityPlanner:
                  link_class: Optional[Sequence[float]] = None,
                  mode: str = "PCCS", quantum: int = 1,
                  drift_threshold: float = 0.2,
-                 topology: Optional[Topology] = None):
+                 topology: Optional[Topology] = None,
+                 pages: Optional[Sequence[int]] = None):
         if topology is None:
             assert rates is not None, "pass rates=... or topology=..."
             topology = StarTopology.from_rates(rates, link_class)
@@ -89,6 +111,15 @@ class CapacityPlanner:
         self.mode = mode
         self.quantum = int(quantum)
         self.drift_threshold = float(drift_threshold)
+        # per-replica KV page capacity (the paged plane's memory budget);
+        # None = unbounded memory, plan_paged then needs an explicit cap
+        self.pages = (None if pages is None
+                      else np.asarray(pages, dtype=np.int64))
+        if self.pages is not None:
+            if self.pages.shape != (self.p,) or not np.all(self.pages >= 1):
+                raise ValueError(
+                    f"pages must give a positive page count for each of "
+                    f"the {self.p} replicas, got {pages!r}")
 
     @property
     def p(self) -> int:
@@ -116,6 +147,64 @@ class CapacityPlanner:
             comm_volume=2.0 * n_requests * float(pp.k_real.sum()))
         return ReplicaPlan(schedule=sched, shares=pp.k, mode=self.mode,
                            rates=self.rates.copy(), partition=pp)
+
+    def plan_paged(self, n_requests: int,
+                   pages_per_request: int) -> PagedReplicaPlan:
+        """Memory-honest split for paged fleets: equal-finish shares
+        capped by each replica's page capacity (waterfilling).
+
+        The load is divisible in *page-seconds*: serving one request on
+        replica i costs ``pages_per_request * w_i`` page-seconds of its
+        pool.  Replicas whose compute-fair share exceeds
+        ``pages_i // pages_per_request`` are clamped there and the §4
+        solver re-runs on the survivors for the remaining load — the
+        bounded-memory master-worker schedule.
+        """
+        assert n_requests >= 1 and pages_per_request >= 1
+        if self.pages is None:
+            raise ValueError(
+                "plan_paged needs per-replica page capacities — build the "
+                "planner with pages=[...]")
+        if self.quantum != 1:
+            raise NotImplementedError(
+                "page-capped waterfilling assumes quantum=1 (clamped "
+                "shares need not stay quantum-aligned)")
+        caps = self.pages // int(pages_per_request)
+        if int(caps.sum()) < n_requests:
+            raise ValueError(
+                f"fleet page capacity holds {int(caps.sum())} concurrent "
+                f"requests at {pages_per_request} pages each, but the "
+                f"batch has {n_requests} — shrink the batch or the "
+                f"per-request reservation")
+        shares = np.zeros(self.p, dtype=np.int64)
+        active = np.arange(self.p)
+        remaining = int(n_requests)
+        pp = None
+        while remaining > 0 and active.shape[0] > 0:
+            sub = (self.topology if active.shape[0] == self.p
+                   else self.topology.restrict(active))
+            pp = plan_split(sub, remaining, quantum=1, objective=self.mode)
+            over = pp.k > caps[active]
+            if not np.any(over):
+                shares[active] = pp.k
+                break
+            # clamp the memory-saturated replicas, re-solve the rest
+            shares[active[over]] = caps[active[over]]
+            remaining -= int(caps[active[over]].sum())
+            active = active[~over]
+        unclamped = pp is not None and active.shape[0] == self.p
+        w = 1.0 / self.rates
+        sched = StarSchedule(
+            mode=self.mode, k=shares.astype(np.float64),
+            finish_time=float(np.max(shares * w)),
+            comm_volume=2.0 * n_requests * float(shares.sum()))
+        return PagedReplicaPlan(
+            schedule=sched, shares=shares, mode=self.mode,
+            rates=self.rates.copy(),
+            partition=pp if unclamped else None,
+            pages_per_request=int(pages_per_request),
+            capacity=caps, page_seconds=shares * pages_per_request * w,
+            saturated=shares >= caps)
 
     # ------------------------------------------------------------------
     def drift(self, new_rates: Sequence[float]) -> float:

@@ -39,6 +39,11 @@ class RequestQueue:
         # popped, so submit and pop_ready are both O(log n) — the old
         # sorted list paid an O(n) shift per pop_ready's list.pop(0)
         self._pending: List[Tuple[Tuple[float, int], Request]] = []
+        # second heap, same key: requests not yet stamped eligible.  Each
+        # request is stamped exactly once, so mark_eligible is amortized
+        # O(log n) instead of an O(n) scan of the whole queue per engine
+        # step (the heap has no early-exit iteration order)
+        self._unstamped: List[Tuple[Tuple[float, int], Request]] = []
         self._next_rid = 0
         self.n_submitted = 0
         self.n_rejected = 0
@@ -78,6 +83,7 @@ class RequestQueue:
                       arrival=float(arrival), state=QUEUED)
         self._next_rid += 1
         heapq.heappush(self._pending, ((req.arrival, req.rid), req))
+        heapq.heappush(self._unstamped, ((req.arrival, req.rid), req))
         self.n_submitted += 1
         return req
 
@@ -87,11 +93,20 @@ class RequestQueue:
             return heapq.heappop(self._pending)[1]
         return None
 
+    def peek_ready(self, now: float) -> Optional[Request]:
+        """The request ``pop_ready(now)`` would return, without removing
+        it — schedulers check pool capacity (e.g. the paged plane's page
+        budget) before committing to the admission."""
+        if self._pending and self._pending[0][0][0] <= now:
+            return self._pending[0][1]
+        return None
+
     def mark_eligible(self, now: float, wall: float) -> None:
         """Stamp the wall-clock moment each request became servable (for
         time-to-first-token accounting that includes queueing delay)."""
-        for _, r in self._pending:       # heap order: check every entry
-            if r.arrival <= now and r.eligible_wall is None:
+        while self._unstamped and self._unstamped[0][0][0] <= now:
+            r = heapq.heappop(self._unstamped)[1]
+            if r.eligible_wall is None:
                 r.eligible_wall = wall
 
     def next_arrival(self) -> Optional[float]:

@@ -2,14 +2,24 @@
 
 Policy (prefill/decode interleaving):
 
-  1. *Retire* finished requests first, freeing their cache slots for this
-     very iteration's admissions.
-  2. *Admit* up to ``max_prefill_per_step`` eligible requests into free
-     slots.  Capping prefills per iteration is what keeps decode from
+  1. *Retire* finished requests first, freeing their cache capacity for
+     this very iteration's admissions.
+  2. *Admit* up to ``max_prefill_per_step`` eligible requests the pool
+     can hold.  Capping prefills per iteration is what keeps decode from
      starving: a burst of long prompts is spread over several iterations
      while the in-flight decodes keep producing a token each step.
   3. *Decode* every in-flight request (including ones admitted this very
      step, whose first token already came from prefill logits).
+
+Admission is the pool's call (``pool.can_admit``): the slot plane gates
+on a free row, the paged plane on a free decode row AND enough
+*unreserved pages* for the request's worst-case decode length — the
+reservation is taken whole at admit time, so an in-flight request can
+always grow its cache without preempting anyone (grow-on-decode is
+infallible by construction).  Admission stays strictly FIFO among
+eligible requests: a head-of-queue request that does not fit blocks the
+ones behind it (no size-based overtaking, so large requests cannot
+starve).
 
 Starvation-freedom is structural: every admitted request appears in every
 subsequent decode batch until it has its ``max_new`` tokens, so it
@@ -23,7 +33,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List
 
-from .cache_pool import SlotCachePool
 from .queue import RequestQueue
 from .request import DECODE, FINISHED, PREFILL, Request
 
@@ -36,11 +45,11 @@ class StepPlan:
 
 
 class Scheduler:
-    def __init__(self, queue: RequestQueue, pool: SlotCachePool,
+    def __init__(self, queue: RequestQueue, pool,
                  max_prefill_per_step: int = 2):
         assert max_prefill_per_step >= 1
         self.queue = queue
-        self.pool = pool
+        self.pool = pool   # SlotCachePool or PagedCachePool (same surface)
         self.max_prefill_per_step = int(max_prefill_per_step)
         self.active: Dict[int, Request] = {}
 
@@ -53,18 +62,18 @@ class Scheduler:
         for rid in list(self.active):
             r = self.active[rid]
             if r.done:
-                self.pool.free(r.slot)
+                self.pool.release(r)
                 r.slot = None
                 r.state = FINISHED
                 retired.append(self.active.pop(rid))
 
         admit: List[Request] = []
-        while (self.pool.free_count > 0
-               and len(admit) < self.max_prefill_per_step):
-            r = self.queue.pop_ready(now)
-            if r is None:
-                break
-            r.slot = self.pool.allocate()
+        while len(admit) < self.max_prefill_per_step:
+            r = self.queue.peek_ready(now)
+            if r is None or not self.pool.can_admit(r):
+                break   # FIFO: a head request that doesn't fit waits
+            self.queue.pop_ready(now)
+            r.slot = self.pool.admit(r)
             r.state = PREFILL
             self.active[r.rid] = r
             admit.append(r)

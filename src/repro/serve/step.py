@@ -1,4 +1,4 @@
-"""Serving steps: batched prefill and single-token decode.
+"""Serving steps: batched prefill, single-token decode, paged decode.
 
 ``decode_32k`` / ``long_500k`` dry-run cells lower ``decode_step`` (one new
 token against a seq_len cache); ``prefill_32k`` lowers ``prefill``.
@@ -7,9 +7,14 @@ contraction — see models/transformer.cache_specs).
 
 The continuous-batching engine (``serve.engine``) consumes these step
 builders through the jit caches below — one decode compilation per
-(config, rules) no matter how many requests are served.
-``greedy_generate`` is the engine's reference oracle: under greedy
-decoding the engine must reproduce its outputs token-for-token
+(config, rules) no matter how many requests are served.  The *paged*
+builders wrap the same decode math in a page-table gather/scatter
+(``serve.engine.cache_pool``): the physical page pool is reshaped into
+the per-slot contiguous view inside the SAME jitted call, so a paged
+decode step is still ONE dispatch and its logits are bit-compatible with
+the slot plane's (masked positions contribute exact zeros).
+``greedy_generate`` is the reference oracle for both planes: under greedy
+decoding the engines must reproduce its outputs token-for-token
 (tests/test_serve_engine.py enforces this).
 """
 
@@ -38,6 +43,45 @@ def make_decode_step(cfg: ModelConfig, rules: Rules):
         next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return next_token, logits, cache
     return step
+
+
+def make_paged_decode_step(cfg: ModelConfig, rules: Rules):
+    """One decode step against a paged pool: gather the per-slot view via
+    the page table, decode, scatter the view back — one fused dispatch.
+    ``pool`` leaves are (L, n_pages + 1, page_size, ...); ``table`` is the
+    (n_slots, pages_per_slot) int32 page map."""
+    from .engine.cache_pool import gather_page_view, scatter_page_view
+    base = make_decode_step(cfg, rules)
+
+    def step(params, token, pos, pool, table):
+        view = gather_page_view(pool, table)
+        next_token, logits, view = base(params, token, pos, view)
+        pool = scatter_page_view(pool, view, table)
+        return next_token, logits, pool
+    return step
+
+
+def make_paged_decode_scan(cfg: ModelConfig, rules: Rules, k: int):
+    """``k`` fused decode steps on the paged plane in one dispatch.  The
+    view is gathered once, the scan carries it (the page map is fixed for
+    the whole stretch — the engine claims every page the k steps will
+    write *before* dispatching), and the pages are written back once."""
+    from .engine.cache_pool import gather_page_view, scatter_page_view
+    base = make_decode_step(cfg, rules)
+
+    def run(params, tok, pos, pool, table):
+        view = gather_page_view(pool, table)
+
+        def body(carry, _):
+            tok, pos, view = carry
+            nxt, _, view = base(params, tok[:, None], pos, view)
+            return (nxt, pos + 1, view), nxt
+
+        (tok, pos, view), stack = jax.lax.scan(body, (tok, pos, view),
+                                               None, length=k)
+        pool = scatter_page_view(pool, view, table)
+        return pool, stack, tok, pos
+    return run
 
 
 # ---------------------------------------------------------------------------

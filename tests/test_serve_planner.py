@@ -1,11 +1,12 @@
-"""LBP capacity planner: §4 equal-finish-time traffic splits + drift."""
+"""LBP capacity planner: §4 equal-finish-time traffic splits + drift +
+page-capacity (memory-honest) splits for paged fleets."""
 
 import numpy as np
 import pytest
 
 from repro.core.star import StarSchedule, per_processor_finish
 from repro.serve import CapacityPlanner
-from repro.serve.engine import ReplicaPlan
+from repro.serve.engine import PagedReplicaPlan, ReplicaPlan
 
 
 def _per_unit_cost(planner, n):
@@ -96,3 +97,68 @@ def test_replan_from_step_times():
     assert plan is not None
     # replica 1 is twice as fast: about twice the traffic under PCCS
     assert plan.shares[1] >= 2 * plan.shares[0] - 2
+
+
+# ---------------------------------------------------------------------------
+# page-capacity (memory-honest) splits for paged fleets
+# ---------------------------------------------------------------------------
+
+def test_plan_paged_unconstrained_matches_plan():
+    """Ample memory everywhere: the paged split IS the §4 split."""
+    rates = [120.0, 60.0, 180.0]
+    pl = CapacityPlanner(rates, pages=[10_000] * 3)
+    base = pl.plan(60)
+    paged = pl.plan_paged(60, pages_per_request=4)
+    assert isinstance(paged, PagedReplicaPlan)
+    np.testing.assert_array_equal(paged.shares, base.shares)
+    assert paged.partition is not None           # unclamped: full IR kept
+    assert not paged.saturated.any()
+    # page-seconds price the memory footprint of each share
+    np.testing.assert_allclose(
+        paged.page_seconds, paged.shares * 4 / np.asarray(rates))
+
+
+def test_plan_paged_memory_caps_fast_replica():
+    """A fast replica with a tiny page pool must be clamped at its
+    capacity; the §4 solver redistributes the rest (waterfilling)."""
+    rates = [300.0, 100.0, 100.0]                # replica 0 is fastest...
+    pages = [8, 1000, 1000]                      # ...but memory-starved
+    pl = CapacityPlanner(rates, pages=pages)
+    paged = pl.plan_paged(40, pages_per_request=4)
+    assert paged.shares[0] == 2                  # 8 pages / 4 per request
+    assert bool(paged.saturated[0])
+    assert not paged.saturated[1:].any()
+    assert paged.shares.sum() == 40
+    # the displaced load went to the unconstrained replicas evenly
+    # (equal rates): within one request of each other
+    assert abs(int(paged.shares[1]) - int(paged.shares[2])) <= 1
+    assert paged.capacity[0] == 2
+
+
+def test_plan_paged_all_replicas_at_capacity():
+    pl = CapacityPlanner([100.0, 100.0], pages=[8, 8])
+    paged = pl.plan_paged(4, pages_per_request=4)
+    np.testing.assert_array_equal(paged.shares, [2, 2])
+    assert paged.saturated.all()
+
+
+def test_plan_paged_over_capacity_raises():
+    pl = CapacityPlanner([100.0, 100.0], pages=[8, 8])
+    with pytest.raises(ValueError, match="capacity"):
+        pl.plan_paged(5, pages_per_request=4)
+
+
+def test_plan_paged_requires_page_capacities():
+    pl = CapacityPlanner([100.0, 100.0])
+    with pytest.raises(ValueError, match="pages"):
+        pl.plan_paged(4, pages_per_request=2)
+
+
+def test_plan_paged_routes_like_any_plan():
+    """PagedReplicaPlan flows through route() unchanged."""
+    pl = CapacityPlanner([200.0, 100.0, 50.0], pages=[64, 64, 4])
+    paged = pl.plan_paged(20, pages_per_request=4)
+    routed = pl.route(paged)
+    np.testing.assert_array_equal(np.bincount(routed, minlength=3),
+                                  paged.shares)
+    assert paged.shares[2] <= 1                  # memory-capped straggler
