@@ -132,6 +132,18 @@ def check_serve(g: Gate, fresh: dict, base: dict) -> None:
     g.close("serve: paged page occupancy",
             dig(fresh, "paged.page_occupancy"),
             dig(base, "paged.page_occupancy"), 0.05)
+    # fleet rescale scenario: tick-driven and fault-scheduled, so every
+    # number below is a deterministic function of the code
+    g.equal("serve: fleet token-identical under kill/join",
+            dig(fresh, "fleet.token_identical"), True)
+    g.equal("serve: fleet completed everything",
+            dig(fresh, "fleet.completed"),
+            dig(fresh, "workload.requests"))
+    g.at_least("serve: fleet kill actually requeued work",
+               dig(fresh, "fleet.requeued"), 1)
+    g.equal("serve: fleet kill/join schedule ran",
+            (dig(fresh, "fleet.kills"), dig(fresh, "fleet.joins")),
+            (dig(base, "fleet.kills"), dig(base, "fleet.joins")))
 
 
 CHECKS: Tuple[Tuple[str, Callable[[Gate, dict, dict], None]], ...] = (

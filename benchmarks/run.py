@@ -82,6 +82,11 @@ def run_trajectory(out_dir: pathlib.Path, rows, out,
         rows.append(("serve.paged_vs_slot_x",
                      sr["paged_vs_slot"]["tokens_per_sec_ratio"],
                      "paged KV plane vs slot plane tok/s"))
+        rows.append(("serve.fleet_token_identical",
+                     float(sr["fleet"]["token_identical"]),
+                     "3-replica fleet == single engine under kill/join"))
+        rows.append(("serve.fleet_requeued", float(sr["fleet"]["requeued"]),
+                     "requests requeued by the mid-decode kill"))
         out(f"[serve benchmarks {time.time()-t0:.1f}s]")
     return ok
 

@@ -20,7 +20,10 @@ token for the perf trajectory (CI runs ``--smoke``), plus the
 ``paged_vs_slot`` section — the paged KV plane timed against the slot
 plane on the same workload, with token-identity and fragmentation
 evidence (requests spanning non-contiguous pages) as structural gates
-for ``benchmarks/check_regression.py``.
+for ``benchmarks/check_regression.py`` — and the ``fleet`` section: the
+same workload through a 3-replica heterogeneous fleet with one replica
+killed mid-decode and one joining later, checked token-identical to the
+single engine (requeue counts and per-replica occupancy recorded).
 """
 
 from __future__ import annotations
@@ -117,6 +120,52 @@ def paged_identity(slot_model, paged_model, workload, slots: int,
     }
 
 
+def run_fleet(model, workload, slots: int,
+              reference: Dict[int, np.ndarray]) -> Dict[str, object]:
+    """Elastic-rescale scenario: 3 heterogeneous replicas sharing the
+    slot adapter (one compilation set), one killed mid-decode, one
+    joining later.  Deterministic by construction (tick clock, seeded
+    workload, fixed fault schedule), so everything here is a structural
+    gate: the fleet's tokens must equal the single engine's, requests
+    must have been requeued by the kill, and nothing may be lost."""
+    from repro.fleet import (FaultPlan, FleetController, FleetFrontend,
+                             Replica)
+    from repro.serve import EngineConfig
+    max_len = max(p.shape[0] for p, _, _ in workload)
+    max_new = max(m for _, m, _ in workload)
+    ec = EngineConfig(
+        n_slots=slots, max_prompt_len=max_len, max_new_cap=max_new,
+        cache_len=max_len + max_new,
+        max_prefill_per_step=max(2, slots // 2))
+    replicas = [
+        Replica("r0", model, ec, rate=1.0, fault=FaultPlan(kill_at=4)),
+        Replica("r1", model, ec, rate=2.0),
+        Replica("r2", model, ec, rate=0.5),
+    ]
+    controller = FleetController(replicas, miss_threshold=3)
+    controller.schedule_join(Replica("r3", model, ec, rate=1.5),
+                             at_tick=8)
+    frontend = FleetFrontend(controller, max_pending=2 * slots)
+    report = frontend.serve(workload)
+    identical = (set(report.completed) == set(reference)
+                 and all(np.array_equal(reference[rid],
+                                        report.completed[rid])
+                         for rid in reference))
+    return {
+        "token_identical": bool(identical),
+        "completed": int(report.n_completed),
+        "requeued": int(report.requeues),
+        "kills": len(report.kills),
+        "joins": len(report.joins),
+        "ticks": int(report.ticks),
+        "replica_occupancy": {n: round(float(v), 4)
+                              for n, v in sorted(
+                                  report.occupancy.items())},
+        "replica_decode_tokens": {n: int(v) for n, v in sorted(
+            report.decode_tokens.items())},
+    }
+
+
 def run_fixed_batch(params, cfg, rules, workload, slots: int
                     ) -> Dict[str, float]:
     """The seed serving path: fixed batches, padded to the workload max."""
@@ -206,6 +255,20 @@ def main(argv=None) -> Dict:
                 for _ in range(args.reps)), key=lambda r: r["wall_s"])
     identity = paged_identity(model, paged_model, workload, slots,
                               page_size)
+
+    # fleet oracle reference: the single engine's tokens (themselves
+    # oracle-tested against greedy_generate in tier-1)
+    from repro.serve import EngineConfig, ServingEngine
+    max_len = max(p.shape[0] for p, _, _ in workload)
+    max_new = max(m for _, m, _ in workload)
+    ref_eng = ServingEngine(model, EngineConfig(
+        n_slots=slots, max_prompt_len=max_len, max_new_cap=max_new,
+        cache_len=max_len + max_new,
+        max_prefill_per_step=max(2, slots // 2)))
+    for prompt, m, arrival in workload:
+        ref_eng.submit(prompt, m, arrival=arrival)
+    reference = ref_eng.run().completed
+    fleet = run_fleet(model, workload, slots, reference)
     result = {
         "workload": {"requests": n, "slots": slots, "seed": args.seed,
                      "prompt_lens": list(lens), "max_news": list(news),
@@ -222,6 +285,7 @@ def main(argv=None) -> Dict:
             "page_occupancy": paged["page_occupancy"],
             **identity,
         },
+        "fleet": fleet,
     }
     print(f"\nworkload: {n} staggered requests, {slots} slots, {cfg.name}")
     print(f"engine:      {eng['tokens_per_sec']:8.1f} tok/s  "
@@ -239,6 +303,10 @@ def main(argv=None) -> Dict:
           f"identical={identity['token_identical']}  "
           f"fragmented {identity['fragmented_requests']}"
           f"/{identity['requests']}")
+    print(f"fleet:       {fleet['completed']} completed in "
+          f"{fleet['ticks']} ticks, {fleet['kills']} kill / "
+          f"{fleet['joins']} join, requeued {fleet['requeued']}, "
+          f"identical={fleet['token_identical']}")
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     print(f"wrote {args.out}")

@@ -1,2 +1,4 @@
+from .reshard import (load_sharded, plan_offsets,  # noqa: F401
+                      reshard_state, restore_resharded, save_sharded)
 from .store import (AsyncCheckpointer, latest_step, load_checkpoint,  # noqa: F401
                     save_checkpoint)

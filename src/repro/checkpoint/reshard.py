@@ -1,0 +1,168 @@
+"""Topology-resharding checkpoints: save under one ``PartitionPlan``,
+restore re-sliced for another.
+
+``store.py`` reshards *sharding objects* on restore (device_put with the
+new mesh's NamedShardings); this module reshards the *byte layout*: a
+fleet that checkpoints per-device shards of the LBP split — device i
+owns rows ``[offset_i, offset_i + k_i)`` of every partitioned leaf —
+can restart on a different device count or share vector, because
+restore concatenates the old shards along the recorded axis into the
+full leaf (bit-identical to what was saved) and re-slices it by the NEW
+plan's integer shares through the PartitionPlan IR.  A ``(2,16,16)``
+production plan's params restore onto a 7-device star this way, and
+vice versa: the plans only have to agree on the total load.
+
+Layout (same atomicity discipline as the store: tmp dir + rename,
+readers trust only ``done`` manifests):
+
+    <dir>/step_000123/
+        manifest.json   {"step", "done", "axis", "shares", "load",
+                         "solver", "topology_kind", "leaves": {...}}
+        <leaf>__shard000.npy ...   partitioned leaves, one file per device
+        <leaf>.npy                 replicated leaves, whole
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+
+from ..plan import PartitionPlan
+from .store import _flatten, _key_str, _write_json_atomic
+
+
+def plan_offsets(plan: PartitionPlan) -> np.ndarray:
+    """(p+1,) shard boundaries of the plan's integer shares."""
+    return np.concatenate([[0], np.cumsum(plan.k)]).astype(np.int64)
+
+
+def _partitioned(arr: np.ndarray, plan: PartitionPlan, axis: int) -> bool:
+    """A leaf is partitioned iff the plan's load spans its ``axis``."""
+    return arr.ndim > axis and int(arr.shape[axis]) == int(plan.load)
+
+
+def save_sharded(directory, step: int, state, plan: PartitionPlan, *,
+                 axis: int = 0) -> pathlib.Path:
+    """Checkpoint ``state`` with every load-sized leaf split into the
+    plan's per-device shards; everything else is saved replicated."""
+    directory = pathlib.Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    offs = plan_offsets(plan)
+    leaves_meta: Dict[str, Any] = {}
+    for name, leaf in _flatten(state).items():
+        arr = np.asarray(leaf)   # gathers device arrays to host
+        base = name.replace("/", "__")
+        if _partitioned(arr, plan, axis):
+            files: List[str] = []
+            for i in range(plan.p):
+                fn = f"{base}__shard{i:03d}.npy"
+                shard = np.take(arr, np.arange(offs[i], offs[i + 1]),
+                                axis=axis)
+                np.save(tmp / fn, shard)
+                files.append(fn)
+            leaves_meta[name] = {"shape": list(arr.shape),
+                                 "dtype": str(arr.dtype),
+                                 "partitioned": True, "files": files}
+        else:
+            fn = base + ".npy"
+            np.save(tmp / fn, arr)
+            leaves_meta[name] = {"shape": list(arr.shape),
+                                 "dtype": str(arr.dtype),
+                                 "partitioned": False, "files": [fn]}
+    _write_json_atomic(tmp / "manifest.json", {
+        "step": step, "done": True, "axis": int(axis),
+        "load": int(plan.load), "shares": [int(k) for k in plan.k],
+        "solver": plan.solver, "topology_kind": plan.topology_kind,
+        "leaves": leaves_meta})
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def _assemble(d: pathlib.Path, meta: Dict[str, Any],
+              name: str) -> np.ndarray:
+    """Full host leaf from its manifest entry (concatenate the shards
+    the saving plan produced — order is the plan's device order)."""
+    lm = meta["leaves"].get(name)
+    if lm is None:
+        raise KeyError(f"checkpoint missing leaf {name}")
+    parts = [np.load(d / fn) for fn in lm["files"]]
+    arr = (np.concatenate(parts, axis=int(meta["axis"]))
+           if lm["partitioned"] else parts[0])
+    assert list(arr.shape) == list(lm["shape"]), (name, arr.shape,
+                                                  lm["shape"])
+    return arr
+
+
+def load_sharded(directory, step: int, target_tree) -> Tuple[int, Any]:
+    """Restore the FULL state from a sharded checkpoint: shards are
+    concatenated back along the recorded axis, so the result is
+    bit-identical to what ``save_sharded`` was handed — independent of
+    the topology it was saved under."""
+    import jax
+    d = pathlib.Path(directory) / f"step_{step:08d}"
+    meta = json.loads((d / "manifest.json").read_text())
+    assert meta.get("done"), "incomplete checkpoint"
+    leaves = []
+    for path, tgt in jax.tree_util.tree_flatten_with_path(target_tree)[0]:
+        name = "/".join(_key_str(k) for k in path)
+        arr = _assemble(d, meta, name)
+        assert list(arr.shape) == list(tgt.shape), (name, arr.shape,
+                                                    tgt.shape)
+        leaves.append(arr)
+    treedef = jax.tree_util.tree_structure(target_tree)
+    return int(meta["step"]), jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def reshard_state(state, new_plan: PartitionPlan, *,
+                  axis: int = 0) -> List[Any]:
+    """Slice a full (host) state into the NEW plan's per-device shards:
+    element i holds device i's view — load-sized leaves sliced to its
+    ``k_i`` rows, everything else replicated whole."""
+    import jax
+    offs = plan_offsets(new_plan)
+
+    def device_view(i):
+        def slice_leaf(leaf):
+            arr = np.asarray(leaf)
+            if _partitioned(arr, new_plan, axis):
+                return np.take(arr, np.arange(offs[i], offs[i + 1]),
+                               axis=axis)
+            return arr
+        return jax.tree_util.tree_map(slice_leaf, state)
+
+    return [device_view(i) for i in range(new_plan.p)]
+
+
+def restore_resharded(directory, step: int, target_tree,
+                      new_plan: PartitionPlan, *,
+                      axis: int = 0) -> Tuple[int, Any, List[Any]]:
+    """The elastic-restart path: load a checkpoint saved under ANY plan
+    and return ``(step, full_state, per_device_shards)`` for the new
+    topology's plan.  The full state is bit-identical to what was saved;
+    the shards are its re-slices by ``new_plan.k``."""
+    d = pathlib.Path(directory) / f"step_{step:08d}"
+    meta = json.loads((d / "manifest.json").read_text())
+    if int(meta["load"]) != int(new_plan.load):
+        raise ValueError(
+            f"cannot reshard: checkpoint was saved for load "
+            f"{meta['load']} but the new plan splits {new_plan.load} — "
+            f"the partitioned dimension itself changed")
+    if int(meta["axis"]) != int(axis):
+        raise ValueError(
+            f"cannot reshard: checkpoint partitions axis {meta['axis']} "
+            f"but the caller asked for axis {axis}")
+    step_loaded, full = load_sharded(directory, step, target_tree)
+    return step_loaded, full, reshard_state(full, new_plan, axis=axis)

@@ -67,12 +67,22 @@ def save_checkpoint(directory, step: int, state) -> pathlib.Path:
         np.save(tmp / fn, arr)
         leaves_meta[name] = {"shape": list(arr.shape), "dtype": str(arr.dtype),
                              "file": fn}
-    (tmp / "manifest.json").write_text(json.dumps(
-        {"step": step, "leaves": leaves_meta, "done": True}))
+    _write_json_atomic(tmp / "manifest.json",
+                       {"step": step, "leaves": leaves_meta, "done": True})
     if final.exists():
         shutil.rmtree(final)
     os.rename(tmp, final)
     return final
+
+
+def _write_json_atomic(path: pathlib.Path, obj) -> None:
+    """Temp file + ``os.replace``: a crash mid-write leaves either no
+    manifest or the previous one, never a torn JSON document (readers
+    tolerate torn manifests anyway — see ``latest_step`` — but the
+    writer should not manufacture them)."""
+    tmp = path.with_suffix(".json.tmp")
+    tmp.write_text(json.dumps(obj))
+    os.replace(tmp, path)
 
 
 def latest_step(directory) -> Optional[int]:
@@ -84,8 +94,11 @@ def latest_step(directory) -> Optional[int]:
         m = re.fullmatch(r"step_(\d+)", d.name)
         if not m or not (d / "manifest.json").exists():
             continue
-        meta = json.loads((d / "manifest.json").read_text())
-        if not meta.get("done"):
+        try:
+            meta = json.loads((d / "manifest.json").read_text())
+        except (OSError, json.JSONDecodeError):
+            continue   # torn manifest (crashed writer): not a checkpoint
+        if not isinstance(meta, dict) or not meta.get("done"):
             continue
         s = int(m.group(1))
         best = s if best is None else max(best, s)

@@ -1,0 +1,22 @@
+"""Fleet runtime: N serving replicas behind one async service.
+
+Three explicit layers (ROADMAP "Fleet runtime"):
+
+  frontend.py    async submit / stream / drain with backpressure
+  controller.py  routing (CapacityPlanner), health, rescale via
+                 runtime.rebalance drop_devices/join_devices,
+                 exactly-once requeue of a dead replica's work
+  replica.py     one ServingEngine behind a narrow step-callable
+                 surface, with heartbeat + fault injection
+
+The fleet oracle invariant: under greedy decoding the fleet's tokens
+are byte-identical to per-request ``greedy_generate`` for ANY kill/join
+schedule, because each engine is oracle-identical and the controller
+requeues (never double-harvests) a dead replica's outstanding work.
+"""
+
+from .controller import (FleetController, FleetReport,  # noqa: F401
+                         FleetRequest)
+from .frontend import FleetFrontend  # noqa: F401
+from .replica import (FaultPlan, Replica, ReplicaDead,  # noqa: F401
+                      build_engine)

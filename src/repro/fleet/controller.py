@@ -1,0 +1,313 @@
+"""Fleet controller: route, step, harvest, heal — N replicas as one service.
+
+The controller is the master of the paper's master-worker shape
+(Dongarra et al.): requests are the divisible load, replicas the
+heterogeneous workers, and BOTH scheduling brains route through the
+same §4 solvers —
+
+  * request routing: ``CapacityPlanner.plan()`` over the live replicas'
+    measured rates, interleaved by ``route()`` (smooth weighted
+    round-robin), re-planned on every kill/join;
+  * the fleet's layer split: a ``runtime.rebalance`` ``LayerAssignment``
+    over a virtual contraction dimension, re-solved live through
+    ``drop_devices`` / ``join_devices`` on every membership change, so a
+    co-hosted LBP matmul always knows each survivor's share.
+
+Exactly-once tokens under rescale (the fleet oracle invariant):
+
+  * a fleet request's tokens are recorded at most once, keyed by its
+    fleet rid, from the FIRST harvest that completes it;
+  * a dead replica is never harvested again — everything it still owed
+    (``Replica.outstanding``: queued, in flight, completed-but-
+    unharvested) is requeued under the same fleet rid and regenerated
+    from scratch on a survivor;
+  * greedy decoding is deterministic and batching-invariant (the
+    single-engine oracle property), so the regenerated tokens are
+    byte-identical to what the dead replica would have produced — the
+    stream loses nothing and duplicates nothing, under ANY kill/join
+    schedule.
+
+Time is the controller's tick counter (injectable by construction: the
+async front-end advances it explicitly, tests drive it directly), never
+the wall clock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..runtime.rebalance import (RebalancePlan, drop_devices, join_devices,
+                                 plan_rebalance)
+from ..serve.engine.planner import CapacityPlanner
+from .replica import Replica, ReplicaDead
+
+
+@dataclasses.dataclass
+class FleetRequest:
+    """A request as the fleet sees it: fleet-level identity + placement."""
+
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    arrival: float = 0.0          # fleet ticks
+    replica: Optional[str] = None
+    local_rid: Optional[int] = None
+    n_requeues: int = 0
+
+
+@dataclasses.dataclass
+class FleetReport:
+    completed: Dict[int, np.ndarray]     # fleet rid -> tokens
+    ticks: int
+    requeues: int
+    kills: List[Tuple[int, str]]         # (tick, replica name)
+    joins: List[Tuple[int, str]]
+    occupancy: Dict[str, float]          # per-replica mean decode occupancy
+    decode_tokens: Dict[str, int]
+    events: List[str]
+
+    @property
+    def n_completed(self) -> int:
+        return len(self.completed)
+
+
+class FleetController:
+    def __init__(self, replicas: Sequence[Replica], *,
+                 miss_threshold: int = 3, route_window: int = 16,
+                 virtual_k: int = 1024, mode: str = "PCCS"):
+        names = [r.name for r in replicas]
+        if len(set(names)) != len(names):
+            raise ValueError(f"replica names must be unique, got {names}")
+        if not replicas:
+            raise ValueError("a fleet needs at least one replica")
+        self.replicas: Dict[str, Replica] = {r.name: r for r in replicas}
+        self.miss_threshold = int(miss_threshold)
+        self.route_window = int(route_window)
+        self.mode = mode
+        self.tick_count = 0
+        # request bookkeeping
+        self.requests: Dict[int, FleetRequest] = {}
+        self.results: Dict[int, np.ndarray] = {}
+        self._next_rid = 0
+        self._unassigned: List[FleetRequest] = []
+        self._owner: Dict[Tuple[str, int], int] = {}  # (name, local) -> rid
+        # rescale bookkeeping
+        self.requeues = 0
+        self.kills: List[Tuple[int, str]] = []
+        self.joins: List[Tuple[int, str]] = []
+        self.events: List[str] = []
+        self._kill_schedule: List[Tuple[int, str]] = []
+        self._join_schedule: List[Tuple[int, Replica]] = []
+        # live layer split over a virtual contraction dim: re-solved
+        # through runtime.rebalance on every membership change
+        self._rb_names: List[str] = list(names)
+        self.rebalance: RebalancePlan = plan_rebalance(
+            int(virtual_k), [r.rate for r in replicas], quantum=1,
+            mode="PCSS")
+        self._route_seq: List[str] = []
+        self._route_pos = 0
+        self._replan()
+
+    # -- membership ------------------------------------------------------
+    def alive_names(self) -> List[str]:
+        return [n for n in self._rb_names if self.replicas[n].alive]
+
+    def schedule_kill(self, name: str, at_tick: int) -> None:
+        """Declare ``name`` dead at ``at_tick`` (operator-initiated drain
+        — the crash path is ``FaultPlan`` on the replica itself)."""
+        if name not in self.replicas:
+            raise KeyError(f"unknown replica {name!r}")
+        self._kill_schedule.append((int(at_tick), name))
+
+    def schedule_join(self, replica: Replica, at_tick: int) -> None:
+        if replica.name in self.replicas:
+            raise ValueError(f"replica {replica.name!r} already exists")
+        self._join_schedule.append((int(at_tick), replica))
+
+    def _replan(self) -> None:
+        """Rebuild the routing sequence from the live replicas' rates via
+        the capacity planner (the §4 equal-finish split + smooth WRR)."""
+        alive = self.alive_names()
+        if not alive:
+            self._route_seq, self._route_pos = [], 0
+            return
+        planner = CapacityPlanner(
+            rates=[self.replicas[n].rate for n in alive],
+            mode=self.mode, quantum=1)
+        plan = planner.plan(max(self.route_window, len(alive)))
+        self._route_seq = [alive[i] for i in planner.route(plan)]
+        self._route_pos = 0
+
+    def _kill(self, name: str, reason: str) -> None:
+        rep = self.replicas[name]
+        if not rep.alive:
+            return
+        rep.alive = False
+        # requeue everything the dead replica still owed, under the SAME
+        # fleet rid — it is never harvested again, so tokens recorded so
+        # far plus the survivor's regeneration are exactly-once
+        lost = rep.outstanding()
+        for r in lost:
+            rid = self._owner.pop((name, r.rid), None)
+            if rid is None or rid in self.results:
+                continue
+            fr = self.requests[rid]
+            fr.replica, fr.local_rid = None, None
+            fr.n_requeues += 1
+            self._unassigned.append(fr)
+            self.requeues += 1
+        self.kills.append((self.tick_count, name))
+        self.events.append(
+            f"tick {self.tick_count}: kill {name} ({reason}), requeued "
+            f"{len(lost)}")
+        # shrink the live layer split through runtime.rebalance
+        idx = self._rb_names.index(name)
+        speeds = [self.replicas[n].rate for n in self._rb_names]
+        if len(self._rb_names) > 1:
+            self.rebalance = drop_devices(
+                self.rebalance.assignment, [idx], speeds, quantum=1,
+                mode="PCSS")
+        self._rb_names.pop(idx)
+        self._replan()
+
+    def _join(self, replica: Replica) -> None:
+        self.replicas[replica.name] = replica
+        replica.alive = True
+        replica.last_heartbeat = self.tick_count
+        # grow the live layer split through runtime.rebalance
+        speeds = [self.replicas[n].rate for n in self._rb_names]
+        if self._rb_names:
+            self.rebalance = join_devices(
+                self.rebalance.assignment, [replica.rate], speeds,
+                quantum=1, mode="PCSS")
+        else:
+            self.rebalance = plan_rebalance(
+                self.rebalance.assignment.K, [replica.rate], quantum=1,
+                mode="PCSS")
+        self._rb_names.append(replica.name)
+        self.joins.append((self.tick_count, replica.name))
+        self.events.append(f"tick {self.tick_count}: join {replica.name}")
+        self._replan()
+
+    # -- request surface ---------------------------------------------------
+    def submit(self, prompt, max_new: int, arrival: float = 0.0) -> int:
+        fr = FleetRequest(
+            rid=self._next_rid,
+            prompt=np.asarray(prompt, np.int32).reshape(-1),
+            max_new=int(max_new), arrival=float(arrival))
+        self._next_rid += 1
+        self.requests[fr.rid] = fr
+        self._unassigned.append(fr)
+        return fr.rid
+
+    @property
+    def depth(self) -> int:
+        """Unfinished requests fleet-wide (the backpressure signal)."""
+        return len(self.requests) - len(self.results)
+
+    @property
+    def has_work(self) -> bool:
+        return self.depth > 0
+
+    def tokens_so_far(self, rid: int) -> np.ndarray:
+        """Host view of a fleet request's tokens (streaming surface).
+        Harvested results are final; in-flight requests read through to
+        their replica; unassigned/requeued requests are empty."""
+        if rid in self.results:
+            return self.results[rid]
+        fr = self.requests.get(rid)
+        if fr is None or fr.replica is None:
+            return np.zeros(0, np.int32)
+        rep = self.replicas[fr.replica]
+        if not rep.alive:
+            return np.zeros(0, np.int32)
+        return rep.tokens_so_far(fr.local_rid)
+
+    def _next_replica(self) -> Optional[str]:
+        for _ in range(len(self._route_seq)):
+            name = self._route_seq[self._route_pos
+                                   % len(self._route_seq)]
+            self._route_pos += 1
+            if self.replicas[name].alive:
+                return name
+        return None
+
+    def _dispatch(self) -> None:
+        """Assign every arrived, unplaced request to the next replica in
+        the planner's routing sequence (FIFO among eligible)."""
+        if not self._unassigned:
+            return
+        self._unassigned.sort(key=lambda fr: (fr.arrival, fr.rid))
+        rest: List[FleetRequest] = []
+        for fr in self._unassigned:
+            name = (self._next_replica()
+                    if fr.arrival <= self.tick_count else None)
+            if name is None:
+                rest.append(fr)
+                continue
+            fr.replica = name
+            fr.local_rid = self.replicas[name].submit(fr.prompt, fr.max_new)
+            self._owner[(name, fr.local_rid)] = fr.rid
+        self._unassigned = rest
+
+    # -- the fleet iteration ------------------------------------------------
+    def tick(self) -> bool:
+        """One fleet iteration: apply scheduled rescale events, dispatch
+        arrivals, step every live replica once, harvest completions,
+        health-check heartbeats.  Returns True while work remains."""
+        t = self.tick_count
+        for at, name in [e for e in self._kill_schedule if e[0] <= t]:
+            self._kill_schedule.remove((at, name))
+            self._kill(name, reason="scheduled")
+        for at, rep in [e for e in self._join_schedule if e[0] <= t]:
+            self._join_schedule.remove((at, rep))
+            self._join(rep)
+        self._dispatch()
+        for name in list(self.replicas):
+            rep = self.replicas[name]
+            if not rep.alive:
+                continue
+            try:
+                rep.step(t)
+            except ReplicaDead as e:
+                self._kill(name, reason=str(e))
+                continue
+            for local_rid, toks in rep.harvest().items():
+                rid = self._owner.get((name, local_rid))
+                if rid is not None and rid not in self.results:
+                    self.results[rid] = toks
+        for name, rep in self.replicas.items():
+            if (rep.alive
+                    and t - rep.last_heartbeat > self.miss_threshold):
+                self._kill(name, reason="heartbeat-miss")
+        self.tick_count += 1
+        if self.has_work and not self.alive_names() \
+                and not self._join_schedule:
+            raise RuntimeError(
+                f"fleet has {self.depth} unfinished requests but no live "
+                f"replica and no scheduled join — the work cannot drain")
+        return self.has_work or bool(self._join_schedule
+                                     or self._kill_schedule)
+
+    def run(self, max_ticks: int = 1_000_000) -> FleetReport:
+        """Drive ticks until drained; returns the fleet report."""
+        while self.tick():
+            if self.tick_count >= max_ticks:
+                raise RuntimeError(
+                    f"fleet did not drain in {max_ticks} ticks "
+                    f"(depth={self.depth})")
+        return self.report()
+
+    def report(self) -> FleetReport:
+        occ = {n: r.progress()["occupancy"]
+               for n, r in self.replicas.items()}
+        dec = {n: int(r.progress()["decode_tokens"])
+               for n, r in self.replicas.items()}
+        return FleetReport(
+            completed=dict(self.results), ticks=self.tick_count,
+            requeues=self.requeues, kills=list(self.kills),
+            joins=list(self.joins), occupancy=occ, decode_tokens=dec,
+            events=list(self.events))

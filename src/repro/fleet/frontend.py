@@ -1,0 +1,105 @@
+"""Async fleet front-end: submit / stream-tokens / await-drain.
+
+The front-end owns the event loop; everything below it (controller,
+replicas, engines) is synchronous and tick-driven.  Every await point
+advances the fleet by whole controller ticks, so concurrency is
+cooperative and DETERMINISTIC: the same submission script produces the
+same tick-by-tick schedule on every run, with no wall clock anywhere —
+the "injectable clock" is the controller's tick counter itself, and the
+event loop is whatever ``asyncio`` loop the caller runs under (tests
+inject their own via ``asyncio.Runner``/``asyncio.run``).
+
+Backpressure: ``submit`` suspends (ticking the fleet) while the number
+of unfinished requests is at or above ``max_pending`` — a producer that
+outruns the fleet donates its waiting time to serving instead of
+growing the queue without bound.
+
+Streaming is exactly-once across rescale: ``stream`` keeps a ``sent``
+cursor into the request's token prefix, and because a requeued request
+regenerates an identical prefix (greedy oracle), the cursor never skips
+or repeats a token even if the replica serving it is killed mid-stream.
+"""
+
+from __future__ import annotations
+
+import asyncio
+from typing import AsyncIterator, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from .controller import FleetController, FleetReport
+
+
+class FleetFrontend:
+    def __init__(self, controller: FleetController, *,
+                 max_pending: int = 64):
+        if max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        self.controller = controller
+        self.max_pending = int(max_pending)
+
+    @property
+    def depth(self) -> int:
+        """Unfinished requests (the backpressure signal)."""
+        return self.controller.depth
+
+    async def _advance(self) -> None:
+        """One controller tick + a cooperative yield, so concurrent
+        submitters/streamers interleave at tick granularity."""
+        self.controller.tick()
+        await asyncio.sleep(0)
+
+    async def submit(self, prompt, max_new: int,
+                     arrival: float = 0.0) -> int:
+        """Enqueue a request, suspending while the fleet is saturated."""
+        while self.depth >= self.max_pending:
+            await self._advance()
+        return self.controller.submit(prompt, max_new, arrival=arrival)
+
+    async def stream(self, rid: int) -> AsyncIterator[int]:
+        """Yield ``rid``'s tokens as they land on the host, exactly once
+        each, driving the fleet forward while waiting."""
+        sent = 0
+        while True:
+            toks = self.controller.tokens_so_far(rid)
+            while sent < toks.shape[0]:
+                yield int(toks[sent])
+                sent += 1
+            done = self.controller.results.get(rid)
+            if done is not None and sent >= done.shape[0]:
+                return
+            await self._advance()
+
+    async def drain(self) -> FleetReport:
+        """Tick until every submitted request has completed."""
+        while self.controller.tick():
+            await asyncio.sleep(0)
+        return self.controller.report()
+
+    # -- sync convenience ---------------------------------------------------
+    def serve(self, workload: Sequence[Tuple[np.ndarray, int, float]],
+              *, stream_rids: Sequence[int] = ()) -> FleetReport:
+        """Submit a [(prompt, max_new, arrival), ...] trace with
+        backpressure, drain, and return the report.  ``stream_rids``
+        additionally consumes those requests through ``stream`` (tokens
+        land in ``self.streamed``) to exercise the concurrent path."""
+        self.streamed: Dict[int, List[int]] = {}
+
+        async def consume(rid: int) -> None:
+            async for tok in self.stream(rid):
+                self.streamed.setdefault(rid, []).append(tok)
+
+        async def produce() -> None:
+            for prompt, max_new, arrival in workload:
+                await self.submit(prompt, max_new, arrival=arrival)
+
+        async def go() -> FleetReport:
+            tasks = [asyncio.ensure_future(consume(r))
+                     for r in stream_rids]
+            await produce()
+            report = await self.drain()
+            for t in tasks:
+                await t
+            return report
+
+        return asyncio.run(go())

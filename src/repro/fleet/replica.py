@@ -1,0 +1,126 @@
+"""Replica plane: a ``ServingEngine`` behind a narrow step-callable surface.
+
+A replica is the fleet's unit of capacity.  It owns one engine (slot or
+paged plane — the fleet does not care which), advances it one iteration
+when the controller says so, and reports health through a heartbeat the
+controller samples: a replica that stops beating for ``miss_threshold``
+ticks is declared dead exactly like one whose step raised.
+
+Fault injection lives here because rescale is THE correctness surface of
+a fleet: ``FaultPlan.kill_at`` makes the step raise ``ReplicaDead`` (the
+crash path), ``hang_at`` makes it go silent without raising (the
+heartbeat-miss path) — both must leave the fleet's token stream
+byte-identical to the no-fault run, which the greedy oracle guarantees
+as long as the controller requeues everything the dead replica still
+owed (``Replica.outstanding``) and never harvests it again.
+
+``build_engine`` is the one sanctioned ``ServingEngine`` constructor
+call site outside ``launch/``: CI grep-gates direct construction so
+every serving surface acquires engines through the fleet plane.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..serve.engine import EngineConfig, ServingEngine
+from ..serve.engine.request import Request
+
+
+def build_engine(model, config: EngineConfig = EngineConfig(),
+                 clock=None) -> ServingEngine:
+    """Factory for serving engines (slot or paged, per ``config``)."""
+    return ServingEngine(model, config, clock=clock)
+
+
+class ReplicaDead(RuntimeError):
+    """A replica's step crashed (fault injection or a real failure)."""
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Deterministic fault schedule, in *replica-local* step counts.
+
+    kill_at: the step raises ``ReplicaDead`` once this many steps ran.
+    hang_at: the step silently stops (no heartbeat, no progress) — the
+    controller must catch this via heartbeat-miss, not an exception.
+    """
+
+    kill_at: Optional[int] = None
+    hang_at: Optional[int] = None
+
+
+class Replica:
+    """One engine + identity + health, stepped by the fleet controller."""
+
+    def __init__(self, name: str, model,
+                 config: EngineConfig = EngineConfig(), *,
+                 rate: float = 1.0, fault: Optional[FaultPlan] = None,
+                 clock=None):
+        if rate <= 0:
+            raise ValueError(f"replica {name!r} needs a positive rate "
+                             f"(tokens/sec the planner splits by), got "
+                             f"{rate}")
+        self.name = str(name)
+        self.rate = float(rate)
+        self.engine = build_engine(model, config, clock=clock)
+        self.fault = fault if fault is not None else FaultPlan()
+        self.alive = True
+        self.last_heartbeat = 0   # controller tick of the last live step
+        self.ticks = 0            # replica-local step count (fault clock)
+
+    # -- request surface -------------------------------------------------
+    def submit(self, prompt, max_new: int) -> int:
+        """Enqueue on the local engine (arrival 0: the fleet controller
+        already applied arrival eligibility — replicas serve ASAP)."""
+        return self.engine.submit(prompt, max_new, arrival=0.0)
+
+    def load(self) -> int:
+        """Requests this replica still owes (queued + in flight)."""
+        return (len(self.engine.queue)
+                + len(self.engine.scheduler.active))
+
+    # -- step surface ------------------------------------------------------
+    def step(self, tick: int) -> bool:
+        """One engine iteration under the fault plan.
+
+        Beats the heartbeat on every live call — even an idle one (an
+        idle replica is healthy, not dead).  Returns whether the engine
+        had work.  Raises ``ReplicaDead`` on the crash fault.
+        """
+        if not self.alive:
+            return False
+        self.ticks += 1
+        if (self.fault.kill_at is not None
+                and self.ticks >= self.fault.kill_at):
+            raise ReplicaDead(
+                f"replica {self.name!r}: injected kill at local step "
+                f"{self.ticks} (fleet tick {tick})")
+        if (self.fault.hang_at is not None
+                and self.ticks >= self.fault.hang_at):
+            return False          # silent: no heartbeat, no progress
+        worked = self.engine.step()
+        self.last_heartbeat = tick
+        return worked
+
+    # -- drain / failover surface ----------------------------------------
+    def harvest(self) -> Dict[int, np.ndarray]:
+        """Newly completed local requests (local rid -> tokens)."""
+        return self.engine.harvest()
+
+    def tokens_so_far(self, local_rid: int) -> np.ndarray:
+        return self.engine.tokens_so_far(local_rid)
+
+    def outstanding(self) -> List[Request]:
+        """What this replica still owes: everything not harvested."""
+        return self.engine.outstanding()
+
+    def progress(self) -> Dict[str, float]:
+        return self.engine.progress()
+
+    def __repr__(self) -> str:   # pragma: no cover - debugging aid
+        return (f"Replica({self.name!r}, rate={self.rate}, "
+                f"alive={self.alive}, load={self.load()})")

@@ -10,6 +10,10 @@ pages + per-request page tables; admission gated on free pages) —
 outputs are token-identical to the slot plane by construction.
 ``--oracle`` additionally replays every request through the reference
 ``greedy_generate`` and verifies the engine reproduced it token-for-token.
+``--fleet N`` serves the same workload through N heterogeneous replicas
+behind the async fleet front-end (repro.fleet); ``--kill-at T`` kills
+one replica at fleet tick T and ``--join-at T`` joins a fresh one — the
+oracle check holds under any such schedule (exactly-once requeue).
 """
 
 from __future__ import annotations
@@ -72,13 +76,31 @@ def main(argv=None):
                     help="physical page budget (default: slot-equivalent)")
     ap.add_argument("--oracle", action="store_true",
                     help="verify every output against greedy_generate")
+    ap.add_argument("--fleet", type=_positive_int("--fleet"), default=None,
+                    help="serve through N replicas behind the async "
+                         "fleet front-end instead of one engine")
+    ap.add_argument("--kill-at", type=_positive_int("--kill-at"),
+                    default=None,
+                    help="fleet tick at which to kill one replica "
+                         "(requires --fleet >= 2)")
+    ap.add_argument("--join-at", type=_positive_int("--join-at"),
+                    default=None,
+                    help="fleet tick at which a fresh replica joins "
+                         "(requires --fleet)")
     args = ap.parse_args(argv)
+    if (args.kill_at or args.join_at) and not args.fleet:
+        ap.error("--kill-at/--join-at need --fleet")
+    if args.kill_at and args.fleet < 2:
+        ap.error("--kill-at needs --fleet >= 2 (a survivor must exist)")
 
     cfg = get_reduced(args.arch)
     rules = Rules.null()
     key = jax.random.PRNGKey(0)
     params = T.init_params(cfg, key)
     workload = build_workload(args, cfg.vocab_size)
+
+    if args.fleet:
+        return _serve_fleet(args, params, cfg, rules, workload)
 
     model_cls = PagedTransformerModel if args.paged else TransformerModel
     model = model_cls(params, cfg, rules)
@@ -122,6 +144,72 @@ def main(argv=None):
             assert np.array_equal(ref, got), (
                 f"request {rid}: engine {got} != oracle {ref}")
         print(f"oracle check: {len(workload)} requests token-identical")
+
+
+def _serve_fleet(args, params, cfg, rules, workload):
+    """Serve the workload through N replicas behind the async front-end,
+    with optional mid-run kill/join (elastic rescale demo)."""
+    from ..fleet import FaultPlan, FleetController, FleetFrontend, Replica
+
+    ec = EngineConfig(
+        n_slots=args.slots, max_prompt_len=args.prompt_len,
+        max_new_cap=args.max_new,
+        cache_len=args.prompt_len + args.max_new,
+        page_size=args.page_size if args.paged else None,
+        n_pages=args.pages if args.paged else None)
+
+    def make_model():
+        cls = PagedTransformerModel if args.paged else TransformerModel
+        return cls(params, cfg, rules)
+
+    # a slot-plane TransformerModel is stateless wrt the cache (it is
+    # passed in) so ONE adapter serves every replica — one compilation
+    # set for the whole fleet; the paged adapter binds its page pool and
+    # needs one instance per replica
+    shared = None if args.paged else make_model()
+    rates = [1.0, 2.0, 0.5, 1.5]   # heterogeneous fleet, cycled
+    replicas = [Replica(f"r{i}", shared if shared is not None
+                        else make_model(), ec,
+                        rate=rates[i % len(rates)])
+                for i in range(args.fleet)]
+    controller = FleetController(replicas)
+    if args.kill_at:
+        controller.schedule_kill("r0", at_tick=args.kill_at)
+    if args.join_at:
+        controller.schedule_join(
+            Replica(f"r{args.fleet}", shared if shared is not None
+                    else make_model(), ec, rate=rates[0],
+                    fault=FaultPlan()),
+            at_tick=args.join_at)
+    frontend = FleetFrontend(controller, max_pending=4 * args.fleet)
+    for prompt, max_new, arrival in workload:
+        controller.submit(prompt, max_new, arrival=arrival)
+    report = asyncio_run_drain(frontend)
+
+    print(f"arch={cfg.name}  requests={args.batch}  fleet={args.fleet} "
+          f"replicas  slots/replica={args.slots}  "
+          f"plane={'paged' if args.paged else 'slots'}")
+    print(f"ticks={report.ticks}  completed={report.n_completed}  "
+          f"requeues={report.requeues}  kills={report.kills}  "
+          f"joins={report.joins}")
+    for name in sorted(report.occupancy):
+        print(f"  {name}: occupancy {report.occupancy[name]:.2f}  "
+              f"decode_tokens {report.decode_tokens[name]}")
+    if args.oracle:
+        for rid, (prompt, max_new, _) in enumerate(workload):
+            ref = np.asarray(greedy_generate(
+                params, cfg, rules, np.asarray(prompt)[None],
+                max_new=max_new))[0]
+            got = report.completed[rid]
+            assert np.array_equal(ref, got), (
+                f"request {rid}: fleet {got} != oracle {ref}")
+        print(f"oracle check: {len(workload)} requests token-identical "
+              f"under the kill/join schedule")
+
+
+def asyncio_run_drain(frontend):
+    import asyncio
+    return asyncio.run(frontend.drain())
 
 
 if __name__ == "__main__":

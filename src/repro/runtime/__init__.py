@@ -1,2 +1,3 @@
-from .rebalance import plan_rebalance, measure_speeds  # noqa: F401
+from .rebalance import (drop_devices, join_devices,  # noqa: F401
+                        measure_speeds, plan_rebalance)
 from .trainer import Trainer, TrainerConfig  # noqa: F401

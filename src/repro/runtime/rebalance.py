@@ -38,10 +38,26 @@ class RebalancePlan:
 
 
 def measure_speeds(step_times: Sequence[float]) -> np.ndarray:
-    """Per-device relative rate from measured per-device step times."""
+    """Per-device relative rate from measured per-device step times.
+
+    A zero/negative step time is NOT a measurement — it is a device with
+    no history (a replica that just joined the fleet reports 0.0 until
+    its first step lands).  Those devices get the *median* rate of the
+    measured ones (a neutral prior: the solver neither starves nor
+    floods a newcomer), and an all-unmeasured fleet degrades to the even
+    split.  The old behaviour divided by zero.
+    """
     t = np.asarray(step_times, dtype=np.float64)
-    assert np.all(t > 0)
-    rate = 1.0 / t
+    if t.ndim != 1 or t.shape[0] < 1:
+        raise ValueError(f"step_times must be a non-empty 1-D sequence, "
+                         f"got shape {t.shape}")
+    measured = t > 0
+    rate = np.empty_like(t)
+    if not np.any(measured):
+        rate[:] = 1.0                       # no history anywhere: even split
+    else:
+        rate[measured] = 1.0 / t[measured]
+        rate[~measured] = float(np.median(rate[measured]))
     return rate / rate.mean()
 
 
@@ -107,3 +123,47 @@ def drop_devices(assign: LayerAssignment, dead: Sequence[int],
     assert topo.p == assign.p, "topology must describe the pre-failure fleet"
     return plan_rebalance(assign.K, s, quantum=quantum, mode=mode,
                           topology=topo.restrict(alive))
+
+
+def join_devices(assign: LayerAssignment, joining: Sequence[float],
+                 speeds: Sequence[float], quantum: int = 128, *,
+                 mode: str = "PCSS",
+                 link_class: Optional[float] = None,
+                 net: Optional[StarNetwork] = None,
+                 topology: Optional[Topology] = None) -> RebalancePlan:
+    """Elastic join — ``drop_devices``' counterpart: re-solve the split
+    over the union of the incumbent fleet and newly joined devices.
+
+    ``joining`` gives the newcomers' measured (or presumed) rates;
+    ``speeds`` describes the incumbents, matching ``assign``.  A star
+    topology/network is extended with the joiners as ICI-class children
+    (or ``link_class``); multi-level topologies cannot be grown in place
+    — rebuild them for the new fleet and call ``plan_rebalance``.
+    """
+    joining = np.atleast_1d(np.asarray(joining, dtype=np.float64))
+    if joining.shape[0] < 1 or not np.all(joining > 0):
+        raise ValueError(
+            f"joining devices need positive rates (got {joining!r}); "
+            f"rate-less newcomers go through measure_speeds, which "
+            f"assigns them the fleet's median")
+    s_old = np.asarray(speeds, dtype=np.float64)
+    assert s_old.shape == (assign.p,), \
+        "speeds must describe the incumbent fleet (one per assign device)"
+    s = np.concatenate([s_old, joining])
+    topo = None
+    if topology is not None or net is not None:
+        base = _as_topology(speeds, net, topology)
+        assert base.p == assign.p, \
+            "topology must describe the incumbent fleet"
+        if not isinstance(base, StarTopology):
+            raise ValueError(
+                f"cannot grow a {base.kind!r} topology in place; rebuild "
+                f"it for the new fleet and call plan_rebalance")
+        from ..plan import ICI_LINK
+        z_new = np.full(joining.shape[0],
+                        ICI_LINK if link_class is None else link_class)
+        topo = StarTopology(w=np.concatenate([base.w, 1.0 / joining]),
+                            z=np.concatenate([base.z, z_new]),
+                            t_cp=base.t_cp, t_cm=base.t_cm)
+    return plan_rebalance(assign.K, s, quantum=quantum, mode=mode,
+                          topology=topo)

@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -401,6 +401,13 @@ class ServingEngine:
         self._trace = []                  # (k_i, n_slots) next-token blocks
         self._rows = 0                    # total trace rows so far
         self.completed: Dict[int, Request] = {}
+        # incremental drain state (the fleet plane's step-callable surface):
+        # host-side copies of the trace, fetched block-by-block on demand
+        self.results: Dict[int, np.ndarray] = {}   # harvested tokens
+        self._host_trace = np.zeros((0, config.n_slots), np.int32)
+        self._fetched_blocks = 0
+        self._firsts_cache: Dict[int, np.ndarray] = {}
+        self.steps = 0
         self.clock = 0.0
         # wall-clock arrival replay: arrivals are seconds on an injectable
         # monotonic clock (tests pass ManualClock; None = time.monotonic)
@@ -426,11 +433,17 @@ class ServingEngine:
     def submit(self, prompt, max_new: int, arrival: float = 0.0) -> int:
         return self.queue.submit(prompt, max_new, arrival).rid
 
+    @property
+    def has_work(self) -> bool:
+        """Anything queued or in flight (``step()`` would do work)."""
+        return self.scheduler.has_work
+
     # ------------------------------------------------------------------
     def step(self) -> bool:
         """One engine iteration; returns False when fully drained."""
         if not self.scheduler.has_work:
             return False
+        self.steps += 1
         if self._wall_arrivals:
             self.clock = self._now()
         now, wall = self.clock, time.perf_counter()
@@ -513,26 +526,98 @@ class ServingEngine:
             self.clock += float(max(k, 1) if live else 1)
         return True
 
-    def _materialize(self) -> Dict[int, np.ndarray]:
-        """Pull the step trace from device once and slice per request."""
-        trace = (np.asarray(jax.device_get(jnp.concatenate(self._trace)))
-                 if self._trace else np.zeros((0, self.config.n_slots),
-                                              np.int32))
+    # -- host materialization (incremental: the fleet drain surface) ----
+    def _trace_upto(self, rows: int) -> np.ndarray:
+        """Host trace covering at least ``rows`` rows: fetch every
+        still-on-device block in ONE transfer when the prefix is short
+        (blocks are append-only, so earlier fetches stay valid)."""
+        if self._host_trace.shape[0] < rows:
+            pend = self._trace[self._fetched_blocks:]
+            if pend:
+                got = np.asarray(jax.device_get(
+                    jnp.concatenate(pend) if len(pend) > 1 else pend[0]))
+                self._host_trace = np.concatenate([self._host_trace, got])
+                self._fetched_blocks = len(self._trace)
+        return self._host_trace
+
+    def _firsts(self, r: Request) -> np.ndarray:
+        """The request's prefill token, from its admit group's argmax
+        vector (one transfer per group, cached for the engine's life —
+        the group array stays referenced by its requests, so ``id`` keys
+        cannot be recycled under us)."""
+        firsts, b = r.first_token
+        group = self._firsts_cache.get(id(firsts))
+        if group is None:
+            group = self._firsts_cache[id(firsts)] = np.asarray(
+                jax.device_get(firsts))
+        return group[b:b + 1]
+
+    def harvest(self) -> Dict[int, np.ndarray]:
+        """Materialize tokens of requests completed since the last call.
+
+        The fleet controller's per-tick drain: only newly completed
+        requests are sliced (and only the trace blocks they need are
+        fetched), results accumulate in ``self.results``, and the return
+        value carries just the NEW ones — calling this every tick costs
+        nothing when nothing finished.
+        """
         out: Dict[int, np.ndarray] = {}
-        fetched: Dict[int, np.ndarray] = {}   # one transfer per admit group
         for rid, r in self.completed.items():
-            firsts, b = r.first_token
-            group = fetched.get(id(firsts))
-            if group is None:
-                group = fetched[id(firsts)] = np.asarray(
-                    jax.device_get(firsts))
-            first = group[b:b + 1]
+            if rid in self.results:
+                continue
+            trace = self._trace_upto(r.trace_start + r.max_new - 1)
             dec = trace[r.trace_start:r.trace_start + r.max_new - 1,
                         r.trace_slot]
             assert dec.shape[0] == r.max_new - 1, (rid, dec.shape, r.max_new)
-            r.tokens = np.concatenate([first, dec]).astype(np.int32)
+            r.tokens = np.concatenate([self._firsts(r), dec]).astype(np.int32)
             out[rid] = r.tokens
+        self.results.update(out)
         return out
+
+    def tokens_so_far(self, rid: int) -> np.ndarray:
+        """Host view of what ``rid`` has generated so far (the streaming
+        surface; syncs with the device up to the request's depth).
+        Empty for queued/unknown rids."""
+        r = self.completed.get(rid)
+        if r is None:
+            r = self.scheduler.active.get(rid)
+        if r is None or r.first_token is None:
+            return np.zeros(0, np.int32)
+        if r.tokens is not None:
+            return r.tokens
+        n_dec = min(r.n_generated, r.max_new) - 1
+        trace = self._trace_upto(r.trace_start + n_dec)
+        dec = trace[r.trace_start:r.trace_start + n_dec, r.trace_slot]
+        return np.concatenate([self._firsts(r), dec]).astype(np.int32)
+
+    def outstanding(self) -> List[Request]:
+        """Every request whose tokens are NOT yet harvested to the host:
+        queued, in flight, and completed-but-unharvested, in rid order.
+        This is the failover set — what a dead replica still owes."""
+        queued = self.queue.pending()
+        active = [self.scheduler.active[rid]
+                  for rid in sorted(self.scheduler.active)]
+        unharvested = [r for rid, r in sorted(self.completed.items())
+                       if rid not in self.results]
+        return sorted(queued + active + unharvested, key=lambda r: r.rid)
+
+    def progress(self) -> Dict[str, float]:
+        """Cheap host-side stats snapshot (fleet replicas never ``run()``
+        to completion, so occupancy must be readable mid-flight)."""
+        s = self._stats
+        occ = (s["occupancy_sum"] / s["decode_steps"]
+               if s["decode_steps"] else 0.0)
+        return dict(steps=self.steps, decode_steps=s["decode_steps"],
+                    decode_tokens=s["decode_tokens"],
+                    prefill_count=s["prefill_count"], occupancy=occ,
+                    n_queued=len(self.queue),
+                    n_active=len(self.scheduler.active),
+                    n_completed=len(self.completed))
+
+    def _materialize(self) -> Dict[int, np.ndarray]:
+        """Pull the step trace from device and slice per request."""
+        self.harvest()
+        return dict(self.results)
 
     def run(self, max_steps: Optional[int] = None) -> EngineReport:
         """Drive until drained; returns the report for this run."""
@@ -587,7 +672,11 @@ def serve_requests(params, cfg: ModelConfig, rules: Rules, requests,
                       max_prefill_per_step=max_prefill_per_step,
                       page_size=page_size, n_pages=n_pages)
     model_cls = PagedTransformerModel if ec.paged else TransformerModel
-    eng = ServingEngine(model_cls(params, cfg, rules), ec)
+    # engines are built through the fleet plane's factory (CI grep-gates
+    # direct ServingEngine construction outside repro.fleet and launch/);
+    # imported lazily because fleet imports this module
+    from ...fleet.replica import build_engine
+    eng = build_engine(model_cls(params, cfg, rules), ec)
     for p, m, a in reqs:
         eng.submit(p, m, arrival=a)
     return eng.run()

@@ -111,3 +111,9 @@ class RequestQueue:
 
     def next_arrival(self) -> Optional[float]:
         return self._pending[0][0][0] if self._pending else None
+
+    def pending(self) -> List[Request]:
+        """Snapshot of the queued requests in (arrival, rid) order without
+        removing them — failover introspection: a fleet controller
+        requeues a dead replica's queue onto the survivors."""
+        return [r for _, r in sorted(self._pending)]

@@ -84,3 +84,164 @@ def test_missing_leaf_raises(tmp_path):
     target = jax.eval_shape(lambda: {"a": jnp.zeros(3), "b": jnp.zeros(4)})
     with pytest.raises(KeyError):
         load_checkpoint(tmp_path, 2, target)
+
+
+def test_latest_step_skips_torn_manifest(tmp_path):
+    """A crashed writer can leave a directory whose manifest is torn —
+    half-written JSON must read as 'not a checkpoint', not a crash."""
+    save_checkpoint(tmp_path, 5, _state())
+    torn = tmp_path / "step_00000009"
+    torn.mkdir()
+    (torn / "manifest.json").write_text('{"step": 9, "done": tru')  # torn
+    empty = tmp_path / "step_00000012"
+    empty.mkdir()
+    (empty / "manifest.json").write_text("")                        # empty
+    notdict = tmp_path / "step_00000013"
+    notdict.mkdir()
+    (notdict / "manifest.json").write_text("[1, 2]")        # wrong type
+    assert latest_step(tmp_path) == 5
+
+
+# ---------------------------------------------------------------------------
+# AsyncCheckpointer: ordering, error propagation, save-during-save
+# ---------------------------------------------------------------------------
+
+def test_async_checkpointer_wait_is_idempotent(tmp_path):
+    ck = AsyncCheckpointer(tmp_path)
+    ck.wait()                       # nothing in flight: no-op
+    ck.save(1, _state())
+    ck.wait()
+    ck.wait()                       # second wait after join: no-op
+    assert latest_step(tmp_path) == 1
+
+
+def test_async_checkpointer_error_propagates_on_wait(tmp_path):
+    # the checkpoint 'directory' is an existing FILE: the worker thread's
+    # save_checkpoint must fail, and the failure must surface on wait()
+    blocked = tmp_path / "not_a_dir"
+    blocked.write_text("occupied")
+    ck = AsyncCheckpointer(blocked)
+    ck.save(1, {"a": jnp.zeros(2)})
+    with pytest.raises(OSError):
+        ck.wait()
+    # the error is delivered once, then cleared — the writer is reusable
+    ck.wait()
+
+
+def test_async_checkpointer_save_during_save_serializes(tmp_path,
+                                                        monkeypatch):
+    """A save issued while one is in flight waits for it (snapshot
+    ordering): both land, in order, and nothing is lost."""
+    import threading
+    import repro.checkpoint.store as store_mod
+    release = threading.Event()
+    order = []
+    real = store_mod.save_checkpoint
+
+    def slow_save(directory, step, state):
+        if step == 1:
+            release.wait(timeout=30)
+        order.append(step)
+        return real(directory, step, state)
+
+    monkeypatch.setattr(store_mod, "save_checkpoint", slow_save)
+    ck = AsyncCheckpointer(tmp_path)
+    ck.save(1, _state(1))
+    t = threading.Thread(target=lambda: ck.save(2, _state(2)))
+    t.start()                   # blocks in save(2)'s wait() on save(1)
+    assert latest_step(tmp_path) is None    # nothing landed yet
+    release.set()
+    t.join(timeout=30)
+    ck.wait()
+    assert order == [1, 2]
+    assert latest_step(tmp_path) == 2
+
+
+def test_async_checkpointer_overlapping_saves_all_land(tmp_path):
+    ck = AsyncCheckpointer(tmp_path)
+    for s in (1, 2, 3):
+        ck.save(s, _state(s))   # each save waits for the previous write
+    ck.wait()
+    assert latest_step(tmp_path) == 3
+    for s in (1, 2, 3):
+        target = jax.eval_shape(lambda: _state())
+        _, loaded = load_checkpoint(tmp_path, s, target)
+        np.testing.assert_array_equal(
+            np.asarray(_state(s)["params"]["w"]),
+            np.asarray(loaded["params"]["w"]))
+
+
+# ---------------------------------------------------------------------------
+# resharding checkpoints: restore under a different topology
+# ---------------------------------------------------------------------------
+
+def _plans(K):
+    from repro.plan import StarTopology, plan, production_topology
+    plan_prod = plan(production_topology(multi_pod=True, seed=0), K,
+                     quantum=1)           # the (2,16,16) fleet plan
+    plan_star = plan(StarTopology.from_speeds(
+        np.array([1.0, 2.0, 0.5, 1.5, 1.0, 3.0, 0.75])), K, quantum=1)
+    return plan_prod, plan_star
+
+
+def test_reshard_restore_bit_identical_across_topologies(tmp_path):
+    """Acceptance: params saved under the (2,16,16) production plan
+    restore bit-identical under a 7-device star plan (and back)."""
+    from repro.checkpoint import (plan_offsets, restore_resharded,
+                                  save_sharded)
+    K = 1024
+    plan_prod, plan_star = _plans(K)
+    rng = np.random.default_rng(0)
+    state = {"params": {"w": rng.normal(size=(K, 8)).astype(np.float32),
+                        "b": np.arange(8, dtype=np.float32)},
+             "step": np.asarray(7, np.int32)}
+    save_sharded(tmp_path, 3, state, plan_prod)
+    step, full, shards = restore_resharded(tmp_path, 3, state, plan_star)
+    assert step == 3 and len(shards) == plan_star.p
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(full)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    offs = plan_offsets(plan_star)
+    for i, sh in enumerate(shards):
+        np.testing.assert_array_equal(
+            sh["params"]["w"], state["params"]["w"][offs[i]:offs[i + 1]])
+        np.testing.assert_array_equal(sh["params"]["b"],
+                                      state["params"]["b"])   # replicated
+    # ... and the reverse direction: star checkpoint -> production plan
+    save_sharded(tmp_path, 4, state, plan_star)
+    _, full2, shards2 = restore_resharded(tmp_path, 4, state, plan_prod)
+    np.testing.assert_array_equal(full2["params"]["w"],
+                                  state["params"]["w"])
+    assert len(shards2) == plan_prod.p
+    assert sum(s["params"]["w"].shape[0] for s in shards2) == K
+
+
+def test_reshard_load_sharded_roundtrip(tmp_path):
+    from repro.checkpoint import load_sharded, save_sharded
+    _, plan_star = _plans(128)
+    state = {"w": np.arange(128 * 2, dtype=np.int64).reshape(128, 2)}
+    save_sharded(tmp_path, 1, state, plan_star)
+    step, full = load_sharded(tmp_path, 1, state)
+    assert step == 1
+    np.testing.assert_array_equal(full["w"], state["w"])
+
+
+def test_reshard_rejects_mismatched_load(tmp_path):
+    from repro.checkpoint import restore_resharded, save_sharded
+    from repro.plan import StarTopology, plan
+    plan_a = plan(StarTopology.from_speeds(np.array([1.0, 1.0])), 64,
+                  quantum=1)
+    plan_b = plan(StarTopology.from_speeds(np.array([1.0, 1.0])), 128,
+                  quantum=1)
+    state = {"w": np.zeros((64, 2), np.float32)}
+    save_sharded(tmp_path, 1, state, plan_a)
+    with pytest.raises(ValueError, match="load"):
+        restore_resharded(tmp_path, 1, state, plan_b)
+
+
+def test_reshard_atomicity_ignores_partial(tmp_path):
+    from repro.checkpoint import save_sharded
+    from repro.plan import StarTopology, plan
+    p = plan(StarTopology.from_speeds(np.array([1.0, 1.0])), 64, quantum=1)
+    save_sharded(tmp_path, 5, {"w": np.zeros((64,), np.float32)}, p)
+    (tmp_path / "step_00000009.tmp").mkdir()   # crashed writer
+    assert latest_step(tmp_path) == 5

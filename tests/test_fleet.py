@@ -1,0 +1,300 @@
+"""Fleet runtime invariants: exactly-once tokens under any kill/join
+schedule, heartbeat health, backpressure, rescale re-planning.
+
+Scheduling/rescale invariants run against the tensor-light FakeModel
+(hypothesis properties over random workloads and fault schedules); the
+fleet oracle acceptance test runs the real transformer on the reduced
+llama3_2_3b config: 32 heavy-tailed staggered requests on a 3-replica
+heterogeneous fleet with one replica killed mid-decode and one joining
+later, token-identical to per-request ``greedy_generate``.
+"""
+
+import asyncio
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.fleet import (FaultPlan, FleetController, FleetFrontend,
+                         Replica, ReplicaDead, build_engine)
+from repro.serve.engine import EngineConfig, synthetic_workload
+from test_serve_engine import FakeModel
+
+
+def fake_replica(name, rate=1.0, fault=None, n_slots=4):
+    cfg = EngineConfig(n_slots=n_slots, max_prompt_len=32, max_new_cap=16,
+                       cache_len=48)
+    return Replica(name, FakeModel(), cfg, rate=rate, fault=fault)
+
+
+def fake_workload(n, seed=0, stagger=0.5):
+    return synthetic_workload(n, FakeModel.V, lens=(5, 8, 12, 16),
+                              news=(2, 3, 6, 9), stagger=stagger,
+                              seed=seed)
+
+
+def check_oracle(workload, completed):
+    fm = FakeModel()
+    assert set(completed) == set(range(len(workload)))
+    for rid, (p, m, _) in enumerate(workload):
+        toks = completed[rid]
+        assert toks.shape == (m,), (rid, toks.shape, m)
+        np.testing.assert_array_equal(toks, fm.oracle(p, m)), rid
+
+
+# ---------------------------------------------------------------------------
+# engine step-callable surface (the extraction the replica plane wraps)
+# ---------------------------------------------------------------------------
+
+def test_engine_incremental_harvest_and_streaming():
+    eng = build_engine(FakeModel(), EngineConfig(
+        n_slots=2, max_prompt_len=16, max_new_cap=8, cache_len=24))
+    fm = FakeModel()
+    p0, p1 = np.arange(1, 6), np.arange(3, 11)
+    r0, r1 = eng.submit(p0, 6), eng.submit(p1, 3, arrival=2.0)
+    seen = {}
+    streamed = []
+    while eng.step():
+        seen.update(eng.harvest())
+        streamed.append(eng.tokens_so_far(r0).copy())
+        # harvest returns each completion exactly once
+        assert not (set(eng.harvest()) & set(seen))
+    seen.update(eng.harvest())
+    np.testing.assert_array_equal(seen[r0], fm.oracle(p0, 6))
+    np.testing.assert_array_equal(seen[r1], fm.oracle(p1, 3))
+    # streaming prefixes are monotone prefixes of the final tokens
+    for pre in streamed:
+        np.testing.assert_array_equal(pre, seen[r0][:pre.shape[0]])
+    assert eng.outstanding() == []
+    prog = eng.progress()
+    assert prog["n_completed"] == 2 and prog["n_active"] == 0
+
+
+def test_engine_outstanding_is_the_failover_set():
+    eng = build_engine(FakeModel(), EngineConfig(
+        n_slots=1, max_prompt_len=16, max_new_cap=8, cache_len=24))
+    rids = [eng.submit(np.arange(1, 5), 4) for _ in range(3)]
+    assert [r.rid for r in eng.outstanding()] == rids   # all queued
+    eng.step()                                          # admit the first
+    out = eng.outstanding()
+    assert [r.rid for r in out] == rids                 # still owed: all
+    for _ in range(4):
+        eng.step()
+    eng.harvest()
+    assert [r.rid for r in eng.outstanding()] != rids   # first one paid
+
+
+# ---------------------------------------------------------------------------
+# replica plane: faults and heartbeats
+# ---------------------------------------------------------------------------
+
+def test_replica_kill_fault_raises():
+    rep = fake_replica("r", fault=FaultPlan(kill_at=3))
+    rep.submit(np.arange(1, 9), 8)
+    rep.step(0)
+    rep.step(1)
+    with pytest.raises(ReplicaDead):
+        rep.step(2)
+
+
+def test_replica_hang_stops_heartbeat():
+    rep = fake_replica("r", fault=FaultPlan(hang_at=2))
+    rep.submit(np.arange(1, 9), 8)
+    assert rep.step(0)
+    assert rep.last_heartbeat == 0
+    for t in range(1, 5):
+        rep.step(t)
+    assert rep.last_heartbeat == 0      # silent since the hang
+
+
+def test_heartbeat_miss_declares_dead_and_requeues():
+    hung = fake_replica("hung", fault=FaultPlan(hang_at=2))
+    good = fake_replica("good")
+    ctrl = FleetController([hung, good], miss_threshold=2)
+    wl = fake_workload(8, seed=1)
+    for p, m, a in wl:
+        ctrl.submit(p, m, arrival=a)
+    report = ctrl.run()
+    assert [name for _, name in report.kills] == ["hung"]
+    assert "heartbeat-miss" in " ".join(report.events)
+    assert report.requeues >= 1
+    check_oracle(wl, report.completed)
+
+
+# ---------------------------------------------------------------------------
+# controller: exactly-once under kill/join (property over schedules)
+# ---------------------------------------------------------------------------
+
+def test_kill_and_join_token_identical():
+    reps = [fake_replica("a", 1.0, FaultPlan(kill_at=6)),
+            fake_replica("b", 2.0), fake_replica("c", 0.5)]
+    ctrl = FleetController(reps, miss_threshold=3)
+    ctrl.schedule_join(fake_replica("d", 1.5), at_tick=10)
+    wl = fake_workload(32, seed=3)
+    for p, m, a in wl:
+        ctrl.submit(p, m, arrival=a)
+    report = ctrl.run()
+    check_oracle(wl, report.completed)
+    assert report.requeues >= 1
+    assert [n for _, n in report.kills] == ["a"]
+    assert [n for _, n in report.joins] == ["d"]
+    # the joiner actually served (it joined while work remained)
+    assert report.decode_tokens["d"] > 0
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       n=st.integers(4, 24),
+       kill_at=st.integers(1, 20),
+       join_at=st.integers(1, 24),
+       stagger=st.sampled_from([0.0, 0.5, 2.0]))
+def test_fleet_exactly_once_property(seed, n, kill_at, join_at, stagger):
+    """No token lost or duplicated under ANY (kill, join, arrival)
+    schedule: the fleet equals the per-request oracle."""
+    reps = [fake_replica("a", 1.0, FaultPlan(kill_at=kill_at)),
+            fake_replica("b", 1.7)]
+    ctrl = FleetController(reps, miss_threshold=3)
+    ctrl.schedule_join(fake_replica("c", 0.6), at_tick=join_at)
+    wl = fake_workload(n, seed=seed, stagger=stagger)
+    for p, m, a in wl:
+        ctrl.submit(p, m, arrival=a)
+    report = ctrl.run()
+    check_oracle(wl, report.completed)
+
+
+def test_scheduled_kill_drains_via_requeue():
+    reps = [fake_replica("a", 1.0), fake_replica("b", 1.0)]
+    ctrl = FleetController(reps)
+    wl = fake_workload(12, seed=7, stagger=0.0)
+    for p, m, a in wl:
+        ctrl.submit(p, m, arrival=a)
+    ctrl.schedule_kill("a", at_tick=2)
+    report = ctrl.run()
+    check_oracle(wl, report.completed)
+    assert report.kills and report.requeues >= 1
+
+
+def test_all_dead_raises_instead_of_hanging():
+    ctrl = FleetController([fake_replica("a", 1.0,
+                                         FaultPlan(kill_at=1))])
+    ctrl.submit(np.arange(1, 9), 8)
+    with pytest.raises(RuntimeError, match="no live replica"):
+        ctrl.run()
+
+
+def test_rescale_replans_through_runtime_rebalance():
+    reps = [fake_replica("a", 1.0, FaultPlan(kill_at=4)),
+            fake_replica("b", 2.0), fake_replica("c", 1.0)]
+    ctrl = FleetController(reps, virtual_k=1024)
+    k0 = ctrl.rebalance.assignment.k.copy()
+    assert k0.shape == (3,) and k0.sum() == 1024
+    wl = fake_workload(16, seed=5)
+    for p, m, a in wl:
+        ctrl.submit(p, m, arrival=a)
+    ctrl.schedule_join(fake_replica("d", 4.0), at_tick=8)
+    report = ctrl.run()
+    check_oracle(wl, report.completed)
+    k1 = ctrl.rebalance.assignment.k
+    # after kill(a) + join(d): shares cover {b, c, d}, d (fastest) largest
+    assert k1.shape == (3,) and k1.sum() == 1024
+    assert ctrl.alive_names() == ["b", "c", "d"]
+    assert k1[2] == k1.max()
+
+
+# ---------------------------------------------------------------------------
+# async front-end: backpressure and streaming
+# ---------------------------------------------------------------------------
+
+def test_frontend_backpressure_bounds_depth():
+    ctrl = FleetController([fake_replica("a", 1.0, n_slots=2)])
+    fe = FleetFrontend(ctrl, max_pending=3)
+    wl = fake_workload(10, seed=2, stagger=0.0)
+
+    async def go():
+        for p, m, a in wl:
+            await fe.submit(p, m, arrival=a)
+            assert fe.depth <= fe.max_pending
+        return await fe.drain()
+
+    report = asyncio.run(go())
+    check_oracle(wl, report.completed)
+
+
+def test_frontend_stream_exactly_once_across_kill():
+    """Stream a request while its replica is killed mid-decode: the
+    consumer sees every token exactly once (the sent-cursor rides the
+    deterministic regeneration)."""
+    reps = [fake_replica("a", 1.0, FaultPlan(kill_at=4)),
+            fake_replica("b", 1.0)]
+    ctrl = FleetController(reps, miss_threshold=3)
+    fe = FleetFrontend(ctrl, max_pending=16)
+    wl = fake_workload(8, seed=11, stagger=0.0)
+    report = fe.serve(wl, stream_rids=tuple(range(len(wl))))
+    check_oracle(wl, report.completed)
+    assert report.requeues >= 1
+    for rid in range(len(wl)):
+        np.testing.assert_array_equal(
+            np.asarray(fe.streamed[rid], np.int32),
+            report.completed[rid])
+
+
+def test_frontend_serve_matches_controller_run():
+    wl = fake_workload(10, seed=9)
+    reports = []
+    for _ in range(2):
+        ctrl = FleetController([fake_replica("a", 1.0),
+                                fake_replica("b", 2.0)])
+        fe = FleetFrontend(ctrl, max_pending=4)
+        reports.append(fe.serve(wl))
+    # the tick clock makes the whole fleet deterministic run-to-run
+    assert reports[0].ticks == reports[1].ticks
+    assert reports[0].occupancy == reports[1].occupancy
+    for rid in reports[0].completed:
+        np.testing.assert_array_equal(reports[0].completed[rid],
+                                      reports[1].completed[rid])
+
+
+# ---------------------------------------------------------------------------
+# acceptance: real transformer, heterogeneous fleet, kill + join
+# ---------------------------------------------------------------------------
+
+def test_fleet_oracle_acceptance():
+    """32 heavy-tailed staggered requests, 3 heterogeneous replicas
+    (one shared slot adapter), one replica killed mid-decode, one
+    joining later: token-identical to per-request greedy_generate."""
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import transformer as T
+    from repro.serve import TransformerModel, greedy_generate
+    from repro.sharding.rules import Rules
+
+    cfg = get_reduced("llama3_2_3b")
+    rules = Rules.null()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    wl = synthetic_workload(32, cfg.vocab_size, lens=(5, 8, 12, 16),
+                            news=(1, 3, 6, 9), stagger=0.5, seed=0)
+    model = TransformerModel(params, cfg, rules)   # shared: one jit set
+    ec = EngineConfig(n_slots=4, max_prompt_len=16, max_new_cap=9,
+                      cache_len=25, max_prefill_per_step=2)
+    reps = [Replica("r0", model, ec, rate=1.0,
+                    fault=FaultPlan(kill_at=5)),   # dies mid-decode
+            Replica("r1", model, ec, rate=2.0),
+            Replica("r2", model, ec, rate=0.5)]
+    ctrl = FleetController(reps, miss_threshold=3)
+    ctrl.schedule_join(Replica("r3", model, ec, rate=1.5), at_tick=8)
+    fe = FleetFrontend(ctrl, max_pending=12)
+    report = fe.serve(wl, stream_rids=(0,))
+
+    assert report.n_completed == 32
+    assert [n for _, n in report.kills] == ["r0"]
+    assert [n for _, n in report.joins] == ["r3"]
+    assert report.requeues >= 1, "the kill must have caught work in flight"
+    for rid, (prompt, max_new, _) in enumerate(wl):
+        ref = np.asarray(greedy_generate(
+            params, cfg, rules, np.asarray(prompt)[None],
+            max_new=max_new))[0]
+        got = report.completed[rid]
+        assert np.array_equal(ref, got), (
+            f"request {rid}: fleet {got} != oracle {ref}")
+    np.testing.assert_array_equal(
+        np.asarray(fe.streamed[0], np.int32), report.completed[0])

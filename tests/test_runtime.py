@@ -4,7 +4,8 @@ import numpy as np
 import pytest
 
 from repro.core.partition import LayerAssignment
-from repro.runtime.rebalance import drop_devices, measure_speeds, plan_rebalance
+from repro.runtime.rebalance import (drop_devices, join_devices,
+                                     measure_speeds, plan_rebalance)
 
 
 def test_measure_speeds():
@@ -12,6 +13,29 @@ def test_measure_speeds():
     assert s[3] == s.max()
     assert s[1] == s.min()
     assert s.mean() == pytest.approx(1.0)
+
+
+def test_measure_speeds_guards_unmeasured_devices():
+    # a zero step time is "no history", not "infinitely fast": the device
+    # gets the median measured rate instead of a division by zero
+    s = measure_speeds([1.0, 0.0, 2.0])
+    assert np.all(np.isfinite(s)) and np.all(s > 0)
+    assert s.mean() == pytest.approx(1.0)
+    assert s[0] > s[2]          # measured ordering preserved (rate = 1/t)
+    raw = np.array([1.0, np.median([1.0, 0.5]), 0.5])
+    np.testing.assert_allclose(s, raw / raw.mean())
+    # negative times are equally not measurements
+    s2 = measure_speeds([1.0, -3.0, 2.0])
+    np.testing.assert_allclose(s2, s)
+    # a fleet with no history at all degrades to the even split
+    np.testing.assert_allclose(measure_speeds([0.0, 0.0, -1.0]), 1.0)
+
+
+def test_measure_speeds_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        measure_speeds([])
+    with pytest.raises(ValueError):
+        measure_speeds([[1.0, 2.0]])
 
 
 def test_plan_rebalance_proportional():
@@ -42,6 +66,45 @@ def test_drop_devices_resolves():
     assert plan.assignment.p == 6
     assert plan.assignment.K == 4096
     assert np.all(plan.assignment.k % 128 == 0)
+
+
+def test_join_devices_resolves():
+    base = LayerAssignment.even(4096, 4, quantum=128)
+    plan = join_devices(base, [4.0], [1.0] * 4, quantum=128)
+    k = plan.assignment.k
+    assert plan.assignment.p == 5
+    assert k.sum() == 4096
+    assert np.all(k % 128 == 0)
+    assert k[4] == k.max()              # the fast joiner takes the most
+
+
+def test_join_devices_extends_star_topology():
+    from repro.plan import StarTopology
+    base = LayerAssignment.even(4096, 4, quantum=128)
+    topo = StarTopology.from_speeds([1.0, 1.0, 1.0, 1.0])
+    plan = join_devices(base, [2.0, 0.5], [1.0] * 4, quantum=128,
+                        topology=topo)
+    assert plan.assignment.p == 6
+    assert plan.assignment.k.sum() == 4096
+    assert plan.plan.topology_kind == "star"
+    # joiners inherit the per-device speed view: 2x joiner beats the
+    # incumbents, 0.5x joiner trails them
+    k = plan.assignment.k
+    assert k[4] == k.max() and k[5] == k.min()
+
+
+def test_join_devices_error_paths():
+    base = LayerAssignment.even(1024, 2, quantum=1)
+    with pytest.raises(ValueError, match="positive"):
+        join_devices(base, [0.0], [1.0, 1.0], quantum=1)
+    with pytest.raises(ValueError, match="positive"):
+        join_devices(base, [], [1.0, 1.0], quantum=1)
+    from repro.plan import production_topology
+    hier = production_topology(multi_pod=True, seed=0)
+    base512 = LayerAssignment.even(1024, hier.p, quantum=1)
+    with pytest.raises(ValueError, match="rebuild"):
+        join_devices(base512, [1.0], [1.0] * hier.p, quantum=1,
+                     topology=hier)
 
 
 def test_layer_assignment_invariants():
