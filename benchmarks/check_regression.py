@@ -144,6 +144,20 @@ def check_serve(g: Gate, fresh: dict, base: dict) -> None:
     g.equal("serve: fleet kill/join schedule ran",
             (dig(fresh, "fleet.kills"), dig(fresh, "fleet.joins")),
             (dig(base, "fleet.kills"), dig(base, "fleet.joins")))
+    # metrics-plane structural gates: the observability counters must
+    # agree with the fleet report (requeues) and the admission plane must
+    # have counted the exercised rejection — both tick-deterministic
+    g.equal("serve: metrics requeue counter matches fleet report",
+            dig(fresh, "fleet.metrics.requeues"),
+            dig(fresh, "fleet.requeued"))
+    g.equal("serve: fleet requeue count vs baseline",
+            dig(fresh, "fleet.metrics.requeues"),
+            dig(base, "fleet.metrics.requeues"))
+    g.at_least("serve: admission rejections counted",
+               dig(fresh, "fleet.metrics.admission_rejections"), 1)
+    g.equal("serve: admission-rejection count vs baseline",
+            dig(fresh, "fleet.metrics.admission_rejections"),
+            dig(base, "fleet.metrics.admission_rejections"))
 
 
 CHECKS: Tuple[Tuple[str, Callable[[Gate, dict, dict], None]], ...] = (

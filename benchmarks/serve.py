@@ -70,17 +70,11 @@ def run_engine(model, workload, slots: int, page_size=None
         engine.submit(prompt, m, arrival=arrival)
     rep = engine.run()
     assert len(rep.completed) == len(workload)
-    out = {
-        "tokens_per_sec": rep.tokens_per_sec,
-        "decode_tokens_per_sec": rep.decode_tokens_per_sec,
-        "ttft_mean_s": rep.ttft_mean,
-        "occupancy": rep.occupancy,
-        "useful_tokens": rep.total_tokens,
-        "wall_s": rep.wall,
-        "decode_steps": rep.decode_steps,
-    }
-    if page_size is not None:
-        out["page_occupancy"] = rep.page_occupancy
+    # thin reader: the engine's report derives every metric through
+    # obs.metrics.throughput_summary — no bench-side re-derivation
+    out = rep.as_dict()
+    if page_size is None:
+        out.pop("page_occupancy")
     return out
 
 
@@ -121,15 +115,21 @@ def paged_identity(slot_model, paged_model, workload, slots: int,
 
 
 def run_fleet(model, workload, slots: int,
-              reference: Dict[int, np.ndarray]) -> Dict[str, object]:
+              reference: Dict[int, np.ndarray],
+              artifacts_dir=None) -> Dict[str, object]:
     """Elastic-rescale scenario: 3 heterogeneous replicas sharing the
     slot adapter (one compilation set), one killed mid-decode, one
     joining later.  Deterministic by construction (tick clock, seeded
     workload, fixed fault schedule), so everything here is a structural
     gate: the fleet's tokens must equal the single engine's, requests
-    must have been requeued by the kill, and nothing may be lost."""
+    must have been requeued by the kill, and nothing may be lost.
+
+    The run is traced (one shared Tracer on the controller's tick axis)
+    and metered; ``artifacts_dir`` receives ``trace.json`` (Perfetto)
+    and ``metrics.json`` (registry snapshot) — the CI artifacts."""
     from repro.fleet import (FaultPlan, FleetController, FleetFrontend,
                              Replica)
+    from repro.obs import MetricsRegistry, Tracer, write_chrome_trace
     from repro.serve import EngineConfig
     max_len = max(p.shape[0] for p, _, _ in workload)
     max_new = max(m for _, m, _ in workload)
@@ -137,13 +137,17 @@ def run_fleet(model, workload, slots: int,
         n_slots=slots, max_prompt_len=max_len, max_new_cap=max_new,
         cache_len=max_len + max_new,
         max_prefill_per_step=max(2, slots // 2))
+    tracer, metrics = Tracer(), MetricsRegistry()
     replicas = [
-        Replica("r0", model, ec, rate=1.0, fault=FaultPlan(kill_at=4)),
-        Replica("r1", model, ec, rate=2.0),
-        Replica("r2", model, ec, rate=0.5),
+        Replica("r0", model, ec, rate=1.0, fault=FaultPlan(kill_at=4),
+                tracer=tracer, metrics=metrics),
+        Replica("r1", model, ec, rate=2.0, tracer=tracer, metrics=metrics),
+        Replica("r2", model, ec, rate=0.5, tracer=tracer, metrics=metrics),
     ]
-    controller = FleetController(replicas, miss_threshold=3)
-    controller.schedule_join(Replica("r3", model, ec, rate=1.5),
+    controller = FleetController(replicas, miss_threshold=3,
+                                 tracer=tracer, metrics=metrics)
+    controller.schedule_join(Replica("r3", model, ec, rate=1.5,
+                                     tracer=tracer, metrics=metrics),
                              at_tick=8)
     frontend = FleetFrontend(controller, max_pending=2 * slots)
     report = frontend.serve(workload)
@@ -151,6 +155,19 @@ def run_fleet(model, workload, slots: int,
                  and all(np.array_equal(reference[rid],
                                         report.completed[rid])
                          for rid in reference))
+    # exercise the admission-rejection path end to end: an over-budget
+    # prompt must be refused by a live engine and counted by reason
+    from repro.serve.engine.queue import AdmissionError
+    survivor = controller.replicas[controller.alive_names()[0]]
+    try:
+        survivor.engine.submit(np.zeros(max_len + max_new + 1, np.int32), 1)
+    except AdmissionError:
+        pass
+    if artifacts_dir is not None:
+        d = pathlib.Path(artifacts_dir)
+        d.mkdir(parents=True, exist_ok=True)
+        write_chrome_trace(tracer, d / "trace.json")
+        metrics.write_json(d / "metrics.json")
     return {
         "token_identical": bool(identical),
         "completed": int(report.n_completed),
@@ -163,6 +180,17 @@ def run_fleet(model, workload, slots: int,
                                   report.occupancy.items())},
         "replica_decode_tokens": {n: int(v) for n, v in sorted(
             report.decode_tokens.items())},
+        # the metrics-snapshot structural gates (check_regression):
+        # counted requeues must match the report, rejections must be
+        # counted by reason
+        "metrics": {
+            "requeues": int(metrics.counter_value("requeues")),
+            "admission_rejections": int(
+                metrics.counter_total("admission_rejections")),
+            "heartbeat_misses": int(
+                metrics.counter_value("heartbeat_misses")),
+            "trace_events": len(tracer),
+        },
     }
 
 
@@ -199,14 +227,16 @@ def run_fixed_batch(params, cfg, rules, workload, slots: int
     wall = time.perf_counter() - t0
     n_groups = (len(workload) + slots - 1) // slots
     raw = n_groups * slots * new_max
-    return {
-        "tokens_per_sec": useful / wall,
-        "ttft_mean_s": float(np.mean(ttfts)),
-        "occupancy": useful / raw,   # useful fraction of the padded batch
-        "useful_tokens": useful,
-        "wall_s": wall,
-        "decode_steps": n_groups * (new_max - 1),
-    }
+    decode_steps = n_groups * (new_max - 1)
+    # same derivation as the engine report (obs.metrics.throughput_summary):
+    # the fixed batch contributes its useful fraction once per decode step
+    from repro.obs import throughput_summary
+    out = throughput_summary(
+        useful_tokens=useful, wall_s=wall, ttfts_s=ttfts,
+        occupancy_sum=(useful / raw) * decode_steps,
+        decode_steps=decode_steps)
+    out.pop("decode_tokens_per_sec")   # the fixed path times no decode split
+    return out
 
 
 def main(argv=None) -> Dict:
@@ -268,7 +298,10 @@ def main(argv=None) -> Dict:
     for prompt, m, arrival in workload:
         ref_eng.submit(prompt, m, arrival=arrival)
     reference = ref_eng.run().completed
-    fleet = run_fleet(model, workload, slots, reference)
+    # trace.json / metrics.json land beside the BENCH artifact (CI
+    # uploads the whole directory)
+    fleet = run_fleet(model, workload, slots, reference,
+                      artifacts_dir=pathlib.Path(args.out).parent)
     result = {
         "workload": {"requests": n, "slots": slots, "seed": args.seed,
                      "prompt_lens": list(lens), "max_news": list(news),

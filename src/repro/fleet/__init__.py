@@ -17,6 +17,7 @@ requeues (never double-harvests) a dead replica's outstanding work.
 
 from .controller import (FleetController, FleetReport,  # noqa: F401
                          FleetRequest)
-from .frontend import FleetFrontend  # noqa: F401
+from .frontend import (FleetClosed, FleetFrontend,  # noqa: F401
+                       UnknownRequest)
 from .replica import (FaultPlan, Replica, ReplicaDead,  # noqa: F401
                       build_engine)

@@ -39,6 +39,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs.drift import DriftMonitor
+from ..obs.metrics import MetricsRegistry
+from ..obs.trace import NullTracer
 from ..runtime.rebalance import (RebalancePlan, drop_devices, join_devices,
                                  plan_rebalance)
 from ..serve.engine.planner import CapacityPlanner
@@ -77,7 +80,8 @@ class FleetReport:
 class FleetController:
     def __init__(self, replicas: Sequence[Replica], *,
                  miss_threshold: int = 3, route_window: int = 16,
-                 virtual_k: int = 1024, mode: str = "PCCS"):
+                 virtual_k: int = 1024, mode: str = "PCCS",
+                 tracer=None, metrics=None):
         names = [r.name for r in replicas]
         if len(set(names)) != len(names):
             raise ValueError(f"replica names must be unique, got {names}")
@@ -88,6 +92,12 @@ class FleetController:
         self.route_window = int(route_window)
         self.mode = mode
         self.tick_count = 0
+        # observability plane.  The controller is the outermost timeline
+        # owner: it overrides whatever clock the replica engines adopted
+        # so the whole fleet renders on ONE tick axis.
+        self.tracer = tracer if tracer is not None else NullTracer()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer.use_clock(lambda: float(self.tick_count))
         # request bookkeeping
         self.requests: Dict[int, FleetRequest] = {}
         self.results: Dict[int, np.ndarray] = {}
@@ -133,6 +143,7 @@ class FleetController:
         alive = self.alive_names()
         if not alive:
             self._route_seq, self._route_pos = [], 0
+            self._drift, self._drift_names = None, []
             return
         planner = CapacityPlanner(
             rates=[self.replicas[n].rate for n in alive],
@@ -140,6 +151,17 @@ class FleetController:
         plan = planner.plan(max(self.route_window, len(alive)))
         self._route_seq = [alive[i] for i in planner.route(plan)]
         self._route_pos = 0
+        # plan-vs-actual: score decode tokens served SINCE this plan
+        # against the plan's share fractions (obs.drift); the gauge is
+        # the runtime.rebalance re-plan trigger signal
+        self._drift = DriftMonitor(plan.partition, metrics=self.metrics,
+                                   gauge_name="fleet_drift")
+        self._drift_names = list(alive)
+        self._drift_base = {
+            n: self.replicas[n].progress()["decode_tokens"] for n in alive}
+        self.tracer.event("replan", track="controller", lane="routing",
+                          alive=alive)
+        self.metrics.counter("replans").inc()
 
     def _kill(self, name: str, reason: str) -> None:
         rep = self.replicas[name]
@@ -150,7 +172,15 @@ class FleetController:
         # fleet rid — it is never harvested again, so tokens recorded so
         # far plus the survivor's regeneration are exactly-once
         lost = rep.outstanding()
+        self.tracer.event("kill", track="controller", lane="membership",
+                          replica=name, reason=reason, lost=len(lost))
         for r in lost:
+            # the dead engine's open spans for this request will never be
+            # closed by the engine itself — close them here so the trace
+            # shows the residency ending at the kill tick
+            self.tracer.end(("qw", rep.engine.name, r.rid))
+            self.tracer.end(("req", rep.engine.name, r.rid),
+                            outcome="killed")
             rid = self._owner.pop((name, r.rid), None)
             if rid is None or rid in self.results:
                 continue
@@ -159,6 +189,9 @@ class FleetController:
             fr.n_requeues += 1
             self._unassigned.append(fr)
             self.requeues += 1
+            self.metrics.counter("requeues").inc()
+            self.tracer.event("requeue", track="controller",
+                              lane="membership", rid=rid, replica=name)
         self.kills.append((self.tick_count, name))
         self.events.append(
             f"tick {self.tick_count}: kill {name} ({reason}), requeued "
@@ -190,6 +223,8 @@ class FleetController:
         self._rb_names.append(replica.name)
         self.joins.append((self.tick_count, replica.name))
         self.events.append(f"tick {self.tick_count}: join {replica.name}")
+        self.tracer.event("join", track="controller", lane="membership",
+                          replica=replica.name)
         self._replan()
 
     # -- request surface ---------------------------------------------------
@@ -251,6 +286,9 @@ class FleetController:
             fr.replica = name
             fr.local_rid = self.replicas[name].submit(fr.prompt, fr.max_new)
             self._owner[(name, fr.local_rid)] = fr.rid
+            self.tracer.event("route", track="controller", lane="routing",
+                              rid=fr.rid, replica=name,
+                              requeues=fr.n_requeues)
         self._unassigned = rest
 
     # -- the fleet iteration ------------------------------------------------
@@ -282,7 +320,19 @@ class FleetController:
         for name, rep in self.replicas.items():
             if (rep.alive
                     and t - rep.last_heartbeat > self.miss_threshold):
+                self.metrics.counter("heartbeat_misses").inc()
                 self._kill(name, reason="heartbeat-miss")
+        # plan-vs-actual: decode tokens served since the current plan,
+        # scored against its share fractions (skipped when a membership
+        # change mid-tick already rebuilt the monitor)
+        if (self._drift is not None
+                and all(self.replicas[n].alive for n in self._drift_names)):
+            work = [self.replicas[n].progress()["decode_tokens"]
+                    - self._drift_base[n] for n in self._drift_names]
+            if sum(work) > 0:
+                self._drift.observe_shares(work)
+        self.metrics.gauge("fleet_depth").set(self.depth)
+        self.tracer.counter("fleet_depth", self.depth, track="controller")
         self.tick_count += 1
         if self.has_work and not self.alive_names() \
                 and not self._join_schedule:

@@ -30,6 +30,18 @@ import numpy as np
 from .controller import FleetController, FleetReport
 
 
+class UnknownRequest(KeyError):
+    """``stream`` asked for a rid the fleet never issued.  Without this,
+    the streamer would tick the fleet forever waiting for tokens that
+    can never arrive."""
+
+
+class FleetClosed(RuntimeError):
+    """``submit`` after ``drain``: the front-end has retired its fleet
+    and no longer accepts work (a late producer would otherwise enqueue
+    onto a controller nobody is draining)."""
+
+
 class FleetFrontend:
     def __init__(self, controller: FleetController, *,
                  max_pending: int = 64):
@@ -37,6 +49,7 @@ class FleetFrontend:
             raise ValueError(f"max_pending must be >= 1, got {max_pending}")
         self.controller = controller
         self.max_pending = int(max_pending)
+        self._closed = False
 
     @property
     def depth(self) -> int:
@@ -51,14 +64,24 @@ class FleetFrontend:
 
     async def submit(self, prompt, max_new: int,
                      arrival: float = 0.0) -> int:
-        """Enqueue a request, suspending while the fleet is saturated."""
+        """Enqueue a request, suspending while the fleet is saturated.
+        Raises ``FleetClosed`` once ``drain`` has completed."""
+        if self._closed:
+            raise FleetClosed(
+                "submit after drain: this front-end's fleet has been "
+                "drained and accepts no further requests")
         while self.depth >= self.max_pending:
             await self._advance()
         return self.controller.submit(prompt, max_new, arrival=arrival)
 
     async def stream(self, rid: int) -> AsyncIterator[int]:
         """Yield ``rid``'s tokens as they land on the host, exactly once
-        each, driving the fleet forward while waiting."""
+        each, driving the fleet forward while waiting.  Raises
+        ``UnknownRequest`` for a rid the fleet never issued (streaming an
+        unknown rid would otherwise tick forever)."""
+        if rid not in self.controller.requests:
+            raise UnknownRequest(
+                f"rid {rid} was never issued by this fleet")
         sent = 0
         while True:
             toks = self.controller.tokens_so_far(rid)
@@ -71,9 +94,11 @@ class FleetFrontend:
             await self._advance()
 
     async def drain(self) -> FleetReport:
-        """Tick until every submitted request has completed."""
+        """Tick until every submitted request has completed, then close
+        the front-end (later ``submit`` calls raise ``FleetClosed``)."""
         while self.controller.tick():
             await asyncio.sleep(0)
+        self._closed = True
         return self.controller.report()
 
     # -- sync convenience ---------------------------------------------------

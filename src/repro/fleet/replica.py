@@ -31,9 +31,15 @@ from ..serve.engine.request import Request
 
 
 def build_engine(model, config: EngineConfig = EngineConfig(),
-                 clock=None) -> ServingEngine:
-    """Factory for serving engines (slot or paged, per ``config``)."""
-    return ServingEngine(model, config, clock=clock)
+                 clock=None, tracer=None, metrics=None,
+                 name: str = "engine") -> ServingEngine:
+    """Factory for serving engines (slot or paged, per ``config``).
+
+    ``tracer``/``metrics`` thread the observability plane through — the
+    default (None) engine runs on a ``NullTracer`` and a private
+    registry, so tracing is opt-in per engine."""
+    return ServingEngine(model, config, clock=clock, tracer=tracer,
+                         metrics=metrics, name=name)
 
 
 class ReplicaDead(RuntimeError):
@@ -59,14 +65,18 @@ class Replica:
     def __init__(self, name: str, model,
                  config: EngineConfig = EngineConfig(), *,
                  rate: float = 1.0, fault: Optional[FaultPlan] = None,
-                 clock=None):
+                 clock=None, tracer=None, metrics=None):
         if rate <= 0:
             raise ValueError(f"replica {name!r} needs a positive rate "
                              f"(tokens/sec the planner splits by), got "
                              f"{rate}")
         self.name = str(name)
         self.rate = float(rate)
-        self.engine = build_engine(model, config, clock=clock)
+        # the replica's engine shares the fleet tracer/metrics so its
+        # spans land on a per-replica track in the one fleet trace
+        self.engine = build_engine(model, config, clock=clock,
+                                   tracer=tracer, metrics=metrics,
+                                   name=f"replica:{self.name}")
         self.fault = fault if fault is not None else FaultPlan()
         self.alive = True
         self.last_heartbeat = 0   # controller tick of the last live step

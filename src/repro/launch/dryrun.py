@@ -20,12 +20,12 @@ Usage:
 import argparse
 import json
 import pathlib
-import time
 import traceback
 
 import jax
 
 from ..analysis.hlo_cost import analyze_hlo
+from ..obs import clock as obs_clock
 from ..compat import cost_analysis as compat_cost_analysis
 from ..configs import ARCH_IDS
 from ..configs.shapes import cells_for
@@ -45,15 +45,15 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
     plan = make_plan(arch, shape, mesh, profile_override=profile,
                      grad_accum=grad_accum)
 
-    t0 = time.time()
+    t0 = obs_clock.wall_time()
     with mesh:
         jitted = jax.jit(plan.fn, in_shardings=plan.in_shardings,
                          out_shardings=plan.out_shardings,
                          donate_argnums=plan.donate)
         lowered = jitted.lower(*plan.args)
-        t_lower = time.time() - t0
+        t_lower = obs_clock.wall_time() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = obs_clock.wall_time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     cost = compat_cost_analysis(compiled)

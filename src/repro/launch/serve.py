@@ -25,6 +25,7 @@ import numpy as np
 
 from ..configs import ARCH_IDS, get_reduced
 from ..models import transformer as T
+from ..obs import MetricsRegistry, Tracer, write_chrome_trace
 from ..serve import (EngineConfig, PagedTransformerModel, ServingEngine,
                      TransformerModel, greedy_generate)
 from ..sharding.rules import Rules
@@ -87,6 +88,11 @@ def main(argv=None):
                     default=None,
                     help="fleet tick at which a fresh replica joins "
                          "(requires --fleet)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "(open at ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics-registry snapshot as JSON")
     args = ap.parse_args(argv)
     if (args.kill_at or args.join_at) and not args.fleet:
         ap.error("--kill-at/--join-at need --fleet")
@@ -104,15 +110,19 @@ def main(argv=None):
 
     model_cls = PagedTransformerModel if args.paged else TransformerModel
     model = model_cls(params, cfg, rules)
+    tracer = Tracer() if args.trace_out else None
+    metrics = MetricsRegistry() if args.metrics_out else None
     engine = ServingEngine(model, EngineConfig(
         n_slots=args.slots, max_prompt_len=args.prompt_len,
         max_new_cap=args.max_new,
         cache_len=args.prompt_len + args.max_new,
         page_size=args.page_size if args.paged else None,
-        n_pages=args.pages if args.paged else None))
+        n_pages=args.pages if args.paged else None),
+        tracer=tracer, metrics=metrics)
     for prompt, max_new, arrival in workload:
         engine.submit(prompt, max_new, arrival=arrival)
     report = engine.run()
+    _write_obs(args, tracer, metrics)
 
     plane = (f"paged(page_size={args.page_size}, "
              f"pages={engine.pool.n_pages})" if args.paged else "slots")
@@ -146,11 +156,22 @@ def main(argv=None):
         print(f"oracle check: {len(workload)} requests token-identical")
 
 
+def _write_obs(args, tracer, metrics):
+    """Export the observability artifacts the flags asked for."""
+    if tracer is not None:
+        print(f"trace:   {write_chrome_trace(tracer, args.trace_out)} "
+              f"({len(tracer)} events; open at ui.perfetto.dev)")
+    if metrics is not None:
+        print(f"metrics: {metrics.write_json(args.metrics_out)}")
+
+
 def _serve_fleet(args, params, cfg, rules, workload):
     """Serve the workload through N replicas behind the async front-end,
     with optional mid-run kill/join (elastic rescale demo)."""
     from ..fleet import FaultPlan, FleetController, FleetFrontend, Replica
 
+    tracer = Tracer() if args.trace_out else None
+    metrics = MetricsRegistry() if args.metrics_out else None
     ec = EngineConfig(
         n_slots=args.slots, max_prompt_len=args.prompt_len,
         max_new_cap=args.max_new,
@@ -170,21 +191,23 @@ def _serve_fleet(args, params, cfg, rules, workload):
     rates = [1.0, 2.0, 0.5, 1.5]   # heterogeneous fleet, cycled
     replicas = [Replica(f"r{i}", shared if shared is not None
                         else make_model(), ec,
-                        rate=rates[i % len(rates)])
+                        rate=rates[i % len(rates)],
+                        tracer=tracer, metrics=metrics)
                 for i in range(args.fleet)]
-    controller = FleetController(replicas)
+    controller = FleetController(replicas, tracer=tracer, metrics=metrics)
     if args.kill_at:
         controller.schedule_kill("r0", at_tick=args.kill_at)
     if args.join_at:
         controller.schedule_join(
             Replica(f"r{args.fleet}", shared if shared is not None
                     else make_model(), ec, rate=rates[0],
-                    fault=FaultPlan()),
+                    fault=FaultPlan(), tracer=tracer, metrics=metrics),
             at_tick=args.join_at)
     frontend = FleetFrontend(controller, max_pending=4 * args.fleet)
     for prompt, max_new, arrival in workload:
         controller.submit(prompt, max_new, arrival=arrival)
     report = asyncio_run_drain(frontend)
+    _write_obs(args, tracer, metrics)
 
     print(f"arch={cfg.name}  requests={args.batch}  fleet={args.fleet} "
           f"replicas  slots/replica={args.slots}  "

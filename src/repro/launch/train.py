@@ -35,6 +35,11 @@ def main():
                     help="overlapped layer-streaming plane: explicit "
                          "shard_map LBP with stream_* aggregation "
                          "(sequence-parallel train_sp profile)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the "
+                         "training run (open at ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics-registry snapshot as JSON")
     args = ap.parse_args()
 
     if args.overlap:
@@ -42,18 +47,26 @@ def main():
         set_tuning(explicit_lbp_scatter=True, overlap_streaming=True)
 
     if args.demo:
+        from ..obs import MetricsRegistry, Tracer, write_chrome_trace
         cfg = get_reduced(args.arch)
         rules = Rules.null()
         if not args.resume:
             import shutil
             shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+        tracer = Tracer() if args.trace_out else None
+        metrics = MetricsRegistry() if args.metrics_out else None
         tr = Trainer(cfg, rules,
                      TrainerConfig(total_steps=args.steps,
                                    checkpoint_dir=args.ckpt_dir,
                                    grad_accum=args.grad_accum,
                                    checkpoint_every=10),
-                     batch_size=args.batch, seq_len=args.seq)
+                     batch_size=args.batch, seq_len=args.seq,
+                     tracer=tracer, metrics=metrics)
         hist = tr.run()
+        if tracer is not None:
+            print(f"trace:   {write_chrome_trace(tracer, args.trace_out)}")
+        if metrics is not None:
+            print(f"metrics: {metrics.write_json(args.metrics_out)}")
         for m in hist:
             if m["step"] % 5 == 0 or m["step"] == len(hist) - 1:
                 print(f"step {m['step']:4d}  loss {m['loss']:.4f}  "

@@ -1,0 +1,30 @@
+"""Sanctioned wall-clock providers.
+
+The repo's clock-injection policy (CI grep gate): no module outside
+``repro/obs`` may call ``time.time(`` or ``time.monotonic(`` directly —
+deterministic planes (engine steps, fleet ticks, ``ManualClock``) must
+never fall back to the wall clock silently, and the places that
+legitimately need wall time (trainer step timing, dry-run compile timing,
+throughput reports) read it through these names so every wall-clock
+dependency is grep-visible in one module.
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def wall_time() -> float:
+    """Seconds since the epoch (``time.time``): timestamps for humans."""
+    return time.time()
+
+
+def monotonic() -> float:
+    """Monotonic seconds (``time.monotonic``): wall-clock arrival replay
+    when no injectable clock was provided."""
+    return time.monotonic()
+
+
+def perf_counter() -> float:
+    """Highest-resolution monotonic seconds: latency measurement."""
+    return time.perf_counter()

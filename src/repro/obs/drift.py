@@ -1,0 +1,116 @@
+"""Plan-vs-actual drift: score a live run against its ``PartitionPlan``.
+
+The §4 equality-based split predicts per-node finish times (and the
+overlap objective a ``max(comm, compute)`` variant); the LBP byte model
+predicts link volumes.  Static plans hold only while the measured speeds
+hold — Beaumont et al. show they drift under real platform noise — so
+this module turns "how far is reality from the plan" into one normalized
+gauge, the trigger signal ``runtime.rebalance`` re-planning (and ROADMAP
+item 5's dynamic corrector) consumes:
+
+  drift_i = |observed_i - predicted_i| / predicted makespan
+
+An UNDISTURBED run is not expected to hit zero: integer adjustment moves
+each node's share up to one quantum off the real-valued equal-finish
+optimum, so ``tolerance()`` prices exactly that — the worst per-node
+finish shift one quantum of load can cause.  A drift gauge within
+tolerance means "the run matches the plan as closely as an integer split
+can"; past it means the platform moved and the plan is stale.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from ..plan.ir import PartitionPlan
+
+__all__ = ["DriftMonitor", "drift_fractions"]
+
+
+def drift_fractions(predicted: Sequence[float],
+                    observed: Sequence[float]) -> np.ndarray:
+    """Per-node |observed - predicted| normalized by the predicted
+    makespan (NOT per-node predictions: a near-zero-share node would
+    otherwise blow up the ratio while being irrelevant to the finish)."""
+    pred = np.asarray(predicted, dtype=np.float64)
+    obs = np.asarray(observed, dtype=np.float64)
+    if pred.shape != obs.shape:
+        raise ValueError(
+            f"predicted and observed describe different node sets: "
+            f"{pred.shape} vs {obs.shape}")
+    scale = max(float(pred.max(initial=0.0)), 1e-12)
+    return np.abs(obs - pred) / scale
+
+
+class DriftMonitor:
+    """Scores observed finishes/shares against one plan's predictions.
+
+    ``overlap=True`` scores against ``finish_times_overlap`` (the
+    streamed plane's max(comm, compute) prediction) when the plan
+    carries it.
+    """
+
+    def __init__(self, plan: PartitionPlan, *, overlap: bool = False,
+                 metrics=None, gauge_name: str = "plan_drift"):
+        self.plan = plan
+        pred = (plan.finish_times_overlap
+                if overlap and plan.finish_times_overlap is not None
+                else plan.finish_times)
+        self.predicted = np.asarray(pred, dtype=np.float64)
+        self.metrics = metrics
+        self.gauge_name = gauge_name
+        self.last_drift: Optional[float] = None
+
+    # -- the quantum tolerance ------------------------------------------
+    def tolerance(self) -> float:
+        """Largest normalized finish shift one quantum of load causes:
+        quantum * max per-unit service time / predicted makespan.  The
+        per-unit time of node i is recovered from the plan itself
+        (finish_i / k_i over loaded nodes), so the tolerance needs no
+        access to the solver's raw ``w``."""
+        loaded = self.plan.k > 0
+        if not loaded.any():
+            return 0.0
+        per_unit = self.predicted[loaded] / self.plan.k[loaded]
+        scale = max(float(self.predicted[loaded].max()), 1e-12)
+        return float(self.plan.quantum) * float(per_unit.max()) / scale
+
+    # -- observation surfaces -------------------------------------------
+    def observe_finish(self, observed: Sequence[float]) -> float:
+        """Record observed per-node finish times; returns (and gauges)
+        the max normalized drift."""
+        d = drift_fractions(self.predicted, observed)
+        return self._record(float(d.max(initial=0.0)))
+
+    def observe_shares(self, observed_work: Sequence[float]) -> float:
+        """Record observed per-node work (any proportional unit: tokens
+        served, layers multiplied) against the plan's share fractions —
+        the serving-plane signal, where "finish time" is continuous
+        throughput rather than a single makespan."""
+        work = np.asarray(observed_work, dtype=np.float64)
+        if work.shape != self.plan.k.shape:
+            raise ValueError(
+                f"observed work describes {work.shape[0]} nodes, plan has "
+                f"{self.plan.p}")
+        total = float(work.sum())
+        obs_frac = work / total if total > 0 else np.zeros_like(work)
+        d = np.abs(obs_frac - self.plan.fractions())
+        return self._record(float(d.max(initial=0.0)))
+
+    def _record(self, drift: float) -> float:
+        self.last_drift = drift
+        if self.metrics is not None:
+            self.metrics.gauge(self.gauge_name).set(drift)
+        return drift
+
+    # -- the re-plan trigger --------------------------------------------
+    def should_replan(self, threshold: Optional[float] = None) -> bool:
+        """True once observed drift exceeds ``threshold`` (default: the
+        quantum tolerance — anything beyond what integer adjustment can
+        explain is platform movement)."""
+        if self.last_drift is None:
+            return False
+        t = self.tolerance() if threshold is None else float(threshold)
+        return self.last_drift > t

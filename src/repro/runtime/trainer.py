@@ -19,7 +19,6 @@ is the production one):
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -29,6 +28,9 @@ from ..checkpoint.store import AsyncCheckpointer, latest_step, load_checkpoint
 from ..data.pipeline import SyntheticTokens
 from ..models import transformer as T
 from ..models.config import ModelConfig
+from ..obs import clock as obs_clock
+from ..obs.metrics import MetricsRegistry
+from ..obs.trace import NullTracer
 from ..optim.adamw import AdamWConfig
 from ..sharding.rules import Rules
 from ..train.step import init_train_state, make_train_step
@@ -53,10 +55,17 @@ class TrainerConfig:
 class Trainer:
     def __init__(self, cfg: ModelConfig, rules: Rules,
                  tcfg: TrainerConfig, opt_cfg: Optional[AdamWConfig] = None,
-                 batch_size: int = 8, seq_len: int = 64):
+                 batch_size: int = 8, seq_len: int = 64,
+                 tracer=None, metrics=None):
         self.cfg = cfg
         self.rules = rules
         self.tcfg = tcfg
+        # observability plane: the trainer's timeline is its step counter
+        self.tracer = tracer if tracer is not None else NullTracer()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._tick = 0
+        if self.tracer.enabled and self.tracer.clock is None:
+            self.tracer.use_clock(lambda: float(self._tick))
         self.opt_cfg = opt_cfg or AdamWConfig(
             warmup_steps=5, total_steps=tcfg.total_steps)
         self.data = SyntheticTokens(
@@ -97,17 +106,25 @@ class Trainer:
                 if "prefix_embeds" in batch:
                     batch["prefix_embeds"] = batch["prefix_embeds"].astype(
                         jax.numpy.bfloat16)
-                t0 = time.time()
-                state, metrics = self.step_fn(state, batch)
+                self._tick = step
+                t0 = obs_clock.wall_time()
+                with self.tracer.span("train_step", track="trainer",
+                                      lane="steps", step=step):
+                    state, metrics = self.step_fn(state, batch)
                 metrics = {k: float(v) for k, v in metrics.items()}
                 metrics["step"] = step
-                metrics["dt"] = time.time() - t0
+                metrics["dt"] = obs_clock.wall_time() - t0
                 self.history.append(metrics)
+                self.metrics.counter("train_steps").inc()
+                self.metrics.gauge("loss").set(metrics["loss"])
                 step += 1
                 if step % self.tcfg.checkpoint_every == 0:
                     self.ckpt.save(step, state)
             except DeviceFailure:
                 self.recoveries += 1
+                self.metrics.counter("recoveries").inc()
+                self.tracer.event("device_failure", track="trainer",
+                                  lane="faults", step=step)
                 if self.recoveries > self.tcfg.max_recoveries:
                     raise
                 # production: drop dead devices from the network graph,

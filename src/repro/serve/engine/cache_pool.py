@@ -69,6 +69,11 @@ class SlotCachePool:
     def drained(self) -> bool:
         return not self._used
 
+    @property
+    def occupancy(self) -> float:
+        """Instantaneous used fraction (the metrics-plane gauge)."""
+        return len(self._used) / self.n_slots
+
     def active_slots(self) -> Tuple[int, ...]:
         return tuple(sorted(self._used))
 
@@ -175,6 +180,11 @@ class PagedCachePool:
     @property
     def drained(self) -> bool:
         return not self._live
+
+    @property
+    def occupancy(self) -> float:
+        """Instantaneous used-page fraction (the metrics-plane gauge)."""
+        return self.used_pages / self.n_pages
 
     def pages_needed(self, prompt_len: int, max_new: int) -> int:
         """Worst-case pages a request can ever hold: prompt positions plus

@@ -40,11 +40,18 @@ import numpy as np
 
 from ...models import transformer as T
 from ...models.config import ModelConfig
+from ...obs import clock as obs_clock
+from ...obs.metrics import MetricsRegistry, throughput_summary
+from ...obs.trace import NullTracer
 from ...sharding.rules import Rules
 from .cache_pool import PagedCachePool, SlotCachePool, write_slot
-from .queue import AdmissionLimits, RequestQueue
+from .queue import AdmissionError, AdmissionLimits, RequestQueue
 from .request import Request
 from .scheduler import Scheduler
+
+# fixed deterministic bucket edges for the TTFT histogram (seconds) —
+# fixed edges keep per-replica histograms mergeable order-invariantly
+TTFT_EDGES = (0.001, 0.003, 0.01, 0.03, 0.1, 0.3, 1.0, 3.0, 10.0)
 
 
 class TransformerModel:
@@ -366,16 +373,39 @@ class EngineReport:
     def ttft_mean(self) -> float:
         return float(np.mean(list(self.ttft.values()))) if self.ttft else 0.0
 
+    def as_dict(self) -> Dict[str, float]:
+        """Benchmark-facing view via the ONE metric derivation
+        (``obs.metrics.throughput_summary``) — benchmarks read this dict
+        instead of re-deriving tok/s / TTFT / occupancy themselves, so
+        bench-vs-engine metric skew is impossible by construction."""
+        out = throughput_summary(
+            useful_tokens=self.total_tokens, wall_s=self.wall,
+            ttfts_s=self.ttft.values(),
+            occupancy_sum=self.occupancy * self.decode_steps,
+            decode_steps=self.decode_steps,
+            decode_tokens=self.decode_tokens,
+            decode_wall_s=self.decode_wall)
+        out.update(steps=self.steps, prefill_count=self.prefill_count,
+                   n_completed=len(self.completed),
+                   page_occupancy=self.page_occupancy)
+        return out
+
 
 class ServingEngine:
     def __init__(self, model, config: EngineConfig = EngineConfig(),
-                 clock=None):
+                 clock=None, tracer=None, metrics=None,
+                 name: str = "engine"):
         if config.arrival_mode not in ("steps", "seconds"):
             raise ValueError(
                 f"arrival_mode must be 'steps' or 'seconds', got "
                 f"{config.arrival_mode!r}")
         self.model = model
         self.config = config
+        self.name = name
+        # observability plane (host-side only — hooks never add a jitted
+        # dispatch; the NullTracer default makes every hook one no-op)
+        self.tracer = tracer if tracer is not None else NullTracer()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.queue = RequestQueue(AdmissionLimits(
             max_prompt_len=config.max_prompt_len,
             max_new_cap=config.max_new_cap,
@@ -396,7 +426,8 @@ class ServingEngine:
             self.pool = SlotCachePool(config.n_slots)
             self.cache = model.init_pool(config.n_slots, config.pool_len)
         self.scheduler = Scheduler(self.queue, self.pool,
-                                   config.max_prefill_per_step)
+                                   config.max_prefill_per_step,
+                                   metrics=self.metrics)
         self._tok, self._pos = model.token_state(config.n_slots)
         self._trace = []                  # (k_i, n_slots) next-token blocks
         self._rows = 0                    # total trace rows so far
@@ -410,10 +441,16 @@ class ServingEngine:
         self.steps = 0
         self.clock = 0.0
         # wall-clock arrival replay: arrivals are seconds on an injectable
-        # monotonic clock (tests pass ManualClock; None = time.monotonic)
+        # monotonic clock (tests pass ManualClock; the default comes from
+        # obs.clock, the one sanctioned home of wall-clock reads)
         self._wall_arrivals = config.arrival_mode == "seconds"
-        self._clock_fn = clock if clock is not None else time.monotonic
+        self._clock_fn = clock if clock is not None else obs_clock.monotonic
         self._clock_t0: Optional[float] = None
+        # timeline adoption: if the tracer has no clock yet, this engine's
+        # arrival clock becomes the timeline (a fleet controller built
+        # later overrides it with its tick counter — last owner wins)
+        if self.tracer.enabled and self.tracer.clock is None:
+            self.tracer.use_clock(lambda: self.clock)
         self._stats = dict(decode_steps=0, prefill_count=0, decode_tokens=0,
                            prefill_tokens=0, occupancy_sum=0.0,
                            prefill_wall=0.0, decode_wall=0.0,
@@ -431,7 +468,22 @@ class ServingEngine:
         sleep(dt)
 
     def submit(self, prompt, max_new: int, arrival: float = 0.0) -> int:
-        return self.queue.submit(prompt, max_new, arrival).rid
+        try:
+            req = self.queue.submit(prompt, max_new, arrival)
+        except AdmissionError as e:
+            self.metrics.counter("admission_rejections",
+                                 reason=e.reason).inc()
+            raise
+        self.metrics.counter("requests_submitted").inc()
+        # queue-wait span: opened at submit, closed when the scheduler
+        # admits the request (a keyed cross-step span).  Keys carry the
+        # engine name: fleet replicas share one tracer and local rids
+        # collide across engines.
+        self.tracer.begin("queue_wait", track=self.name,
+                          lane=f"req:{req.rid}",
+                          key=("qw", self.name, req.rid),
+                          rid=req.rid, arrival=req.arrival)
+        return req.rid
 
     @property
     def has_work(self) -> bool:
@@ -464,8 +516,21 @@ class ServingEngine:
         for r in plan.retired:
             r.finish_wall = r.finish_wall or wall
             self.completed[r.rid] = r
+            # close the residency span opened at admit
+            self.tracer.end(("req", self.name, r.rid), tokens=r.max_new)
+            self.tracer.event("retire", track=self.name,
+                              lane=f"req:{r.rid}", rid=r.rid)
 
         if plan.admit:
+            for r in plan.admit:
+                self.tracer.end(("qw", self.name, r.rid))
+                self.tracer.begin("serve", track=self.name,
+                                  lane=f"req:{r.rid}",
+                                  key=("req", self.name, r.rid),
+                                  rid=r.rid, prompt_len=r.prompt_len,
+                                  max_new=r.max_new, slot=r.slot)
+            pf_key = self.tracer.begin("prefill", track=self.name,
+                                       lane="engine", n=len(plan.admit))
             t0 = time.perf_counter()
             self.cache, firsts, self._tok, self._pos = self.model.prefill(
                 self.cache, [r.prompt for r in plan.admit],
@@ -482,8 +547,15 @@ class ServingEngine:
                                    else r.eligible_wall)
                 r.first_token_wall = t1
                 self._stats["prefill_tokens"] += r.prompt_len
+                # TTFT lands in the metrics plane as an observed value
+                # (wall seconds never enter the trace timeline)
+                self.metrics.histogram("ttft_s", TTFT_EDGES).observe(
+                    r.first_token_wall - r.eligible_wall)
             self._stats["prefill_count"] += len(plan.admit)
             self._stats["prefill_wall"] += t1 - t0
+            self.tracer.end(pf_key)
+            self.metrics.counter("prefill_tokens").inc(
+                sum(r.prompt_len for r in plan.admit))
 
         # the decode batch was planned BEFORE prefill handed max_new == 1
         # admits their first (and only) token — drop the already-done ones
@@ -506,6 +578,8 @@ class ServingEngine:
             # BEFORE the dispatch (the page map is an argument of the
             # fused call); reservations make the claims infallible
             self.pool.prepare_decode(live, k)
+            dk_key = self.tracer.begin("decode", track=self.name,
+                                       lane="engine", k=k, batch=len(live))
             t0 = time.perf_counter()
             self.cache, rows, self._tok, self._pos = self.model.decode_multi(
                 self.cache, self._tok, self._pos, k)
@@ -522,8 +596,18 @@ class ServingEngine:
                 self._stats["page_occupancy_sum"] += (
                     k * self.pool.used_pages / self.pool.n_pages)
             self._stats["decode_wall"] += t1 - t0
+            self.metrics.counter("decode_tokens").inc(k * len(live))
         if not self._wall_arrivals:   # wall mode reads the clock per step
             self.clock += float(max(k, 1) if live else 1)
+        if live:
+            # close after the clock advance so a fused k-step decode spans
+            # k ticks on the trace timeline
+            self.tracer.end(dk_key)
+        # end-of-step gauges: queue depth + pool occupancy (host state the
+        # loop already owns — no device sync, no extra dispatch)
+        self.metrics.gauge("queue_depth").set(len(self.queue))
+        self.metrics.gauge("pool_occupancy").set(self.pool.occupancy)
+        self.tracer.counter("queue_depth", len(self.queue), track=self.name)
         return True
 
     # -- host materialization (incremental: the fleet drain surface) ----
@@ -612,7 +696,9 @@ class ServingEngine:
                     prefill_count=s["prefill_count"], occupancy=occ,
                     n_queued=len(self.queue),
                     n_active=len(self.scheduler.active),
-                    n_completed=len(self.completed))
+                    n_completed=len(self.completed),
+                    n_rejected=self.queue.n_rejected,
+                    pool_occupancy=self.pool.occupancy)
 
     def _materialize(self) -> Dict[int, np.ndarray]:
         """Pull the step trace from device and slice per request."""

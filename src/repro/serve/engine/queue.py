@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -19,7 +19,17 @@ from .request import QUEUED, Request
 
 
 class AdmissionError(ValueError):
-    """Request rejected at submit time (budget or capacity violation)."""
+    """Request rejected at submit time (budget or capacity violation).
+
+    ``reason`` is a stable machine-readable tag (``empty_prompt`` /
+    ``prompt_len`` / ``max_new`` / ``total_len`` / ``queue_full``) — the
+    label the metrics plane counts rejections by, so dashboards and the
+    bench-regression gate never parse the human message.
+    """
+
+    def __init__(self, message: str, reason: str = "other"):
+        super().__init__(message)
+        self.reason = reason
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +57,9 @@ class RequestQueue:
         self._next_rid = 0
         self.n_submitted = 0
         self.n_rejected = 0
+        # rejection counts by AdmissionError.reason (the metrics plane's
+        # admission-rejections-by-reason series reads this)
+        self.n_rejected_by_reason: Dict[str, int] = {}
 
     def __len__(self) -> int:
         return len(self._pending)
@@ -56,28 +69,35 @@ class RequestQueue:
         lim = self.limits
         try:
             if prompt.shape[0] < 1:
-                raise AdmissionError("prompt must contain at least 1 token")
+                raise AdmissionError("prompt must contain at least 1 token",
+                                     reason="empty_prompt")
             if prompt.shape[0] > lim.max_prompt_len:
                 raise AdmissionError(
                     f"prompt length {prompt.shape[0]} exceeds the admission "
-                    f"budget max_prompt_len={lim.max_prompt_len}")
+                    f"budget max_prompt_len={lim.max_prompt_len}",
+                    reason="prompt_len")
             if max_new < 1:
-                raise AdmissionError(f"max_new must be >= 1, got {max_new}")
+                raise AdmissionError(f"max_new must be >= 1, got {max_new}",
+                                     reason="max_new")
             if max_new > lim.max_new_cap:
                 raise AdmissionError(
                     f"max_new {max_new} exceeds the admission budget "
-                    f"max_new_cap={lim.max_new_cap}")
+                    f"max_new_cap={lim.max_new_cap}", reason="max_new")
             total_cap = (lim.max_total_len if lim.max_total_len is not None
                          else lim.max_prompt_len + lim.max_new_cap)
             if prompt.shape[0] + max_new > total_cap:
                 raise AdmissionError(
                     f"prompt_len + max_new = {prompt.shape[0] + max_new} "
-                    f"exceeds the cache slot length {total_cap}")
+                    f"exceeds the cache slot length {total_cap}",
+                    reason="total_len")
             if len(self._pending) >= lim.max_queue:
                 raise AdmissionError(
-                    f"queue full ({lim.max_queue} pending requests)")
-        except AdmissionError:
+                    f"queue full ({lim.max_queue} pending requests)",
+                    reason="queue_full")
+        except AdmissionError as e:
             self.n_rejected += 1
+            self.n_rejected_by_reason[e.reason] = (
+                self.n_rejected_by_reason.get(e.reason, 0) + 1)
             raise
         req = Request(rid=self._next_rid, prompt=prompt, max_new=int(max_new),
                       arrival=float(arrival), state=QUEUED)

@@ -46,12 +46,16 @@ class StepPlan:
 
 class Scheduler:
     def __init__(self, queue: RequestQueue, pool,
-                 max_prefill_per_step: int = 2):
+                 max_prefill_per_step: int = 2, metrics=None):
         assert max_prefill_per_step >= 1
         self.queue = queue
         self.pool = pool   # SlotCachePool or PagedCachePool (same surface)
         self.max_prefill_per_step = int(max_prefill_per_step)
         self.active: Dict[int, Request] = {}
+        # optional obs.MetricsRegistry: per-plan retire/admit counters and
+        # the head-of-queue blocked counter (FIFO capacity stalls) — all
+        # host-side dict bumps, nothing touches the dispatch path
+        self.metrics = metrics
 
     @property
     def has_work(self) -> bool:
@@ -70,8 +74,15 @@ class Scheduler:
         admit: List[Request] = []
         while len(admit) < self.max_prefill_per_step:
             r = self.queue.peek_ready(now)
-            if r is None or not self.pool.can_admit(r):
-                break   # FIFO: a head request that doesn't fit waits
+            if r is None:
+                break
+            if not self.pool.can_admit(r):
+                # FIFO: a head request that doesn't fit waits (and blocks
+                # everyone behind it — worth counting: a high stall count
+                # with low occupancy means the pool is mis-sized)
+                if self.metrics is not None:
+                    self.metrics.counter("head_of_queue_stalls").inc()
+                break
             self.queue.pop_ready(now)
             r.slot = self.pool.admit(r)
             r.state = PREFILL
@@ -84,4 +95,7 @@ class Scheduler:
             if not r.done:       # max_new==1 requests finish at prefill
                 r.state = DECODE
                 decode.append(r)
+        if self.metrics is not None and (retired or admit):
+            self.metrics.counter("requests_retired").inc(len(retired))
+            self.metrics.counter("requests_admitted").inc(len(admit))
         return StepPlan(retired=retired, admit=admit, decode=decode)
