@@ -10,8 +10,12 @@ the shared runner's wall clock:
 
   overlap  HLO shape of the streamed plane: ppermute count, monolithic
            all-gathers eliminated, HLO-vs-analytic byte parity, oracle
-           identity (max_abs_err == 0), and the predicted speedups of the
-           plan model (pure arithmetic -> tight tolerance).
+           identity (max_abs_err == 0), the predicted speedups of the
+           plan model (pure arithmetic -> tight tolerance), the
+           bidirectional ring's per-direction permute split and halved
+           hop depth, and the dynamic-correction contention verdicts
+           (zero steals undisturbed, bounded steals + spread convergence
+           under the injected slowdown).
   plan     hierarchical-vs-flat predicted finish speedup, DCN volume
            reduction, pod shares (all solver outputs, deterministic).
   serve    workload-shape invariants (useful tokens, paged token
@@ -96,6 +100,31 @@ def check_overlap(g: Gate, fresh: dict, base: dict) -> None:
     g.close("overlap: roofline collective-bound speedup",
             dig(fresh, "prediction.roofline_split.overlap_speedup"),
             dig(base, "prediction.roofline_split.overlap_speedup"), 0.02)
+    # bidirectional half-rings: same op count/bytes as the unidirectional
+    # ring, permutes split ceil((p-1)/2)/floor((p-1)/2) per direction
+    br = dig(fresh, "structure.bidir_ring")
+    p = br["p"]
+    g.equal("overlap: bidir ppermute count unchanged",
+            br["ppermutes"], dig(fresh, "structure.model_ring.ppermutes"))
+    g.equal("overlap: bidir per-direction split",
+            (br["forward"], br["backward"]),
+            (-(-(p - 1) // 2), (p - 1) // 2))
+    g.equal("overlap: bidir byte parity with registry",
+            br["link_bytes_hlo"],
+            dig(fresh, "structure.model_ring.link_bytes_analytic"))
+    g.check("overlap: bidir halves the sequential hop depth",
+            br["hop_depth"] == -(-(p - 1) // 2)
+            and br["hop_depth"] < br["hop_depth_unidir"],
+            f"depth={br['hop_depth']} unidir={br['hop_depth_unidir']}")
+    # dynamic correction: the contention scenario's own booleans (spread
+    # vs tolerance is computed in the bench process — the committed JSON
+    # only carries the verdicts, so rounding can't flip a gate here)
+    for plane in ("train", "overlap"):
+        gates = dig(fresh, f"contention.{plane}.gates")
+        for key in ("steals_undisturbed_zero", "plan_identical_undisturbed",
+                    "steals_bounded", "spread_converged",
+                    "makespan_improved"):
+            g.equal(f"overlap: contention[{plane}] {key}", gates[key], True)
 
 
 def check_plan(g: Gate, fresh: dict, base: dict) -> None:
@@ -158,6 +187,14 @@ def check_serve(g: Gate, fresh: dict, base: dict) -> None:
     g.equal("serve: admission-rejection count vs baseline",
             dig(fresh, "fleet.metrics.admission_rejections"),
             dig(base, "fleet.metrics.admission_rejections"))
+    # work stealing is enabled in the fleet scenario but the injected
+    # faults are kill/join, not contention: the corrector's hysteresis
+    # must hold at zero steals on this schedule
+    g.equal("serve: fleet steals zero on uncontended schedule",
+            dig(fresh, "fleet.steals"), 0)
+    g.equal("serve: steal counter agrees with fleet report",
+            dig(fresh, "fleet.metrics.steals"),
+            dig(fresh, "fleet.steals"))
 
 
 CHECKS: Tuple[Tuple[str, Callable[[Gate, dict, dict], None]], ...] = (

@@ -1,15 +1,19 @@
 """Overlapped layer-streaming plane vs blocking collectives.
 
-  PYTHONPATH=src python -m benchmarks.overlap [--smoke] [--out BENCH_overlap.json]
+  PYTHONPATH=src python -m benchmarks.overlap [--smoke] [--contention]
+                                              [--out BENCH_overlap.json]
   (re-executes itself with 8 host devices)
 
-Three sections, emitted to ``BENCH_overlap.json`` (CI runs ``--smoke``):
+Four sections, emitted to ``BENCH_overlap.json`` (CI runs ``--smoke``):
 
   structure   the lowered overlapped ``lbp_row_parallel`` contains ZERO
               monolithic all-gathers and exactly p-1 collective-permutes
               whose link bytes equal the ``core.collectives`` registry's
               analytic table for the stream_* modes (verified via
-              ``analysis.hlo_collectives.collective_summary``).
+              ``analysis.hlo_collectives.collective_summary``); the
+              bidirectional flavour additionally splits them
+              ceil((p-1)/2) forward / floor((p-1)/2) backward at
+              identical bytes (``permute_direction_counts``).
   identity    streamed outputs == blocking outputs on the miniature
               (pod=2, data=2, model=2) production mesh; wall time of both
               planes (best-of-reps; CPU hosts have no async collectives,
@@ -18,6 +22,10 @@ Three sections, emitted to ``BENCH_overlap.json`` (CI runs ``--smoke``):
               2x16x16 shape — finish governed by max(comm, compute)
               rather than the sum — plus the ICI-vs-DCN roofline split of
               the aggregation bytes (``serial_vs_overlap``).
+  contention  the dynamic-correction scenario: a mid-run 2x slowdown on
+              the biggest-share node of the canonical 8-node star, serial
+              and overlap planes, static plan vs drift-triggered work
+              stealing (``--contention`` runs just this section).
 """
 
 from __future__ import annotations
@@ -43,7 +51,8 @@ def _structure_section(n_dev: int) -> Dict:
     """HLO of the overlapped plane: no all-gather, p-1 ppermutes, exact
     byte match with the registry."""
     import jax
-    from repro.analysis.hlo_collectives import collective_summary
+    from repro.analysis.hlo_collectives import (collective_summary,
+                                                permute_direction_counts)
     from repro.compat import make_mesh
     from repro.core import collectives, overlap
     from repro.models import lbp_linear
@@ -71,6 +80,27 @@ def _structure_section(n_dev: int) -> Dict:
     assert pp["count"] == expect_n, (pp, expect_n)
     assert abs(pp["link_bytes"] - analytic) < 1e-6, (pp, analytic)
 
+    # bidirectional half-rings: same op count and bytes, permutes split
+    # ceil((p-1)/2) forward / floor((p-1)/2) backward — the structural
+    # signature of the halved sequential hop depth
+    set_tuning(overlap_bidir=True)
+    compb = jax.jit(lambda h, w: lbp_linear.lbp_row_parallel(h, w, rules)
+                    ).lower(h, w).compile()
+    hlob = compb.as_text()
+    summb = collective_summary(hlob, n_dev)
+    per_opb = summb["per_op"]
+    assert "all-gather" not in per_opb, per_opb
+    assert "reduce-scatter" not in per_opb and "all-reduce" not in per_opb
+    ppb = per_opb["collective-permute"]
+    assert ppb["count"] == overlap.expected_ppermutes(
+        "stream_scatter_bidir", n_dev)
+    assert abs(ppb["link_bytes"] - analytic) < 1e-6, (ppb, analytic)
+    dirs = permute_direction_counts(hlob, n_dev)
+    hf, hb = overlap.expected_direction_counts("stream_scatter_bidir", n_dev)
+    assert (dirs["forward"], dirs["backward"]) == (hf, hb), (dirs, hf, hb)
+    assert dirs["other"] == 0, dirs
+    set_tuning(overlap_bidir=False)
+
     # full (pod, data, model) mesh: the FSDP weight ring joins in and the
     # module still lowers with zero monolithic all-gathers
     mesh3 = make_mesh((2, 2, 2), ("pod", "data", "model"))
@@ -86,6 +116,15 @@ def _structure_section(n_dev: int) -> Dict:
         "model_ring": {"p": n_dev, "ppermutes": pp["count"],
                        "link_bytes_hlo": pp["link_bytes"],
                        "link_bytes_analytic": analytic},
+        "bidir_ring": {
+            "p": n_dev, "ppermutes": ppb["count"],
+            "link_bytes_hlo": ppb["link_bytes"],
+            "forward": dirs["forward"], "backward": dirs["backward"],
+            "hop_depth": overlap.sequential_hop_depth(
+                "stream_scatter_bidir", n_dev),
+            "hop_depth_unidir": overlap.sequential_hop_depth(
+                "stream_scatter", n_dev),
+        },
         "pod_mesh": {"per_op": summ3["per_op"]},
         "allgather_free": True,
     }
@@ -175,10 +214,80 @@ def _prediction_section(load: int) -> Dict:
     }
 
 
+def _contention_section() -> Dict:
+    """Drift-triggered work stealing over the static plan: the
+    deterministic mid-run 2x slowdown scenario (``runtime.correct.
+    simulate_correction``) on the canonical 8-node star.
+
+    Emits the booleans ``check_regression.py`` gates on:
+
+      steals_undisturbed_zero  hysteresis: unperturbed run never steals
+      plan_identical_undisturbed  and its shares stay bit-identical
+      steals_bounded           event count <= the policy budget
+      spread_converged         final per-step finish spread back inside
+                               the plan's own quantization tolerance
+                               (computed HERE, same process as the sim)
+
+    ``makespan_static`` is the static plan riding out the slowdown;
+    ``makespan`` is the corrected run — serial vs overlap planes both
+    reported, with the bidir hop depth for the streamed ring.
+    """
+    import numpy as np
+    from repro.core.overlap import bidir_hops, sequential_hop_depth
+    from repro.plan import StarTopology, plan
+    from repro.runtime.correct import CorrectionPolicy, simulate_correction
+
+    speeds = [1.0, 2.0, 4.0, 1.0, 1.0, 1.0, 2.0, 1.0]
+    load, quantum = 8192, 128
+    topo = StarTopology(w=1.0 / np.asarray(speeds),
+                        z=np.full(len(speeds), 1e-9))
+    pol = CorrectionPolicy(hysteresis=1.25, cooldown=1, max_corrections=12)
+    out: Dict = {"speeds": speeds, "load": load, "quantum": quantum,
+                 "slow_node": 2, "slow_factor": 2.0}
+    for plane, objective, ring in (("train", "PCSS", 1),
+                                   ("overlap", "overlap", 4)):
+        pp = plan(topo, load, quantum=quantum, objective=objective)
+        quiet = simulate_correction(pp, slow_node=None, n_steps=32,
+                                    plane=plane, ring=ring, policy=pol)
+        hot = simulate_correction(pp, slow_node=2, slow_at_frac=0.3,
+                                  slow_factor=2.0, n_steps=32,
+                                  plane=plane, ring=ring, policy=pol)
+        out[plane] = {
+            "undisturbed": quiet,
+            "contended": hot,
+            "serial_vs_corrected": {
+                "makespan_static": hot["makespan_static"],
+                "makespan_corrected": hot["makespan"],
+                "speedup": hot["makespan_static"] / max(hot["makespan"],
+                                                        1e-12),
+            },
+            "gates": {
+                "steals_undisturbed_zero": quiet["steals"] == 0,
+                "plan_identical_undisturbed":
+                    quiet["final_k"] == quiet["seed_k"],
+                "steals_bounded": hot["steals"] <= hot["steal_bound"],
+                "spread_converged":
+                    hot["spread_final"] <= hot["unit_tolerance"] + 1e-9,
+                "makespan_improved":
+                    hot["makespan"] < hot["makespan_static"],
+            },
+        }
+    p = len(speeds)
+    hf, hb = bidir_hops(p)
+    out["bidir_hops"] = {
+        "p": p, "forward": hf, "backward": hb,
+        "depth_unidir": sequential_hop_depth("stream_scatter", p),
+        "depth_bidir": sequential_hop_depth("stream_scatter_bidir", p),
+    }
+    return out
+
+
 def main(argv=None) -> Dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small load + few reps for CI")
+    ap.add_argument("--contention", action="store_true",
+                    help="run only the work-stealing contention scenario")
     ap.add_argument("--load", type=int, default=8192)
     ap.add_argument("--reps", type=int, default=5)
     ap.add_argument("--out", default=DEFAULT_OUT)
@@ -192,6 +301,24 @@ def main(argv=None) -> Dict:
 
     load, reps = (2048, 2) if args.smoke else (args.load, args.reps)
 
+    contention = _contention_section()
+    if args.contention:
+        tr = contention["train"]
+        print(f"contention: steals {tr['contended']['steals']} <= "
+              f"{tr['contended']['steal_bound']}  spread "
+              f"{tr['contended']['spread_final']:.4f} (tol "
+              f"{tr['contended']['tolerance']:.4f})  makespan "
+              f"{tr['serial_vs_corrected']['makespan_corrected']:.1f} vs "
+              f"static {tr['serial_vs_corrected']['makespan_static']:.1f}")
+        # a contention-only run is a PARTIAL artifact: never clobber the
+        # committed full baseline at the default path (the regression
+        # gate would fail on the missing sections)
+        if args.out != DEFAULT_OUT:
+            with open(args.out, "w") as f:
+                json.dump({"contention": contention}, f, indent=2)
+            print(f"wrote {args.out}")
+        return {"contention": contention}
+
     structure = _structure_section(8)
     identity = _identity_section(reps)
     prediction = _prediction_section(load)
@@ -201,12 +328,23 @@ def main(argv=None) -> Dict:
         "structure": structure,
         "identity": identity,
         "prediction": prediction,
+        "contention": contention,
     }
 
     mr = structure["model_ring"]
+    br = structure["bidir_ring"]
     print(f"\nstructure : {mr['ppermutes']:.0f} ppermutes, "
           f"{mr['link_bytes_hlo']:.0f} B/device "
           f"(analytic {mr['link_bytes_analytic']:.0f} B), 0 all-gathers")
+    print(f"bidir     : {br['forward']}+{br['backward']} fwd/bwd permutes, "
+          f"hop depth {br['hop_depth']} vs {br['hop_depth_unidir']} unidir, "
+          f"bytes identical")
+    tr = contention["train"]
+    print(f"contention: undisturbed {tr['undisturbed']['steals']} steals; "
+          f"2x slowdown -> {tr['contended']['steals']} steals, spread "
+          f"{tr['contended']['spread_final']:.4f} <= tol "
+          f"{tr['contended']['tolerance']:.4f}, makespan x"
+          f"{tr['serial_vs_corrected']['speedup']:.2f}")
     print(f"identity  : max |streamed - blocking| = "
           f"{identity['max_abs_err']:.2e}  "
           f"wall {identity['wall_streamed_s']*1e3:.1f}ms vs "

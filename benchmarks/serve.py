@@ -144,7 +144,10 @@ def run_fleet(model, workload, slots: int,
         Replica("r1", model, ec, rate=2.0, tracer=tracer, metrics=metrics),
         Replica("r2", model, ec, rate=0.5, tracer=tracer, metrics=metrics),
     ]
-    controller = FleetController(replicas, miss_threshold=3,
+    # stealing is ON but must stay invisible: this scenario injects
+    # kill/join faults, never contention, so the drift corrector's
+    # hysteresis has to hold at zero steals (gated by check_regression)
+    controller = FleetController(replicas, miss_threshold=3, steal=True,
                                  tracer=tracer, metrics=metrics)
     controller.schedule_join(Replica("r3", model, ec, rate=1.5,
                                      tracer=tracer, metrics=metrics),
@@ -174,6 +177,7 @@ def run_fleet(model, workload, slots: int,
         "requeued": int(report.requeues),
         "kills": len(report.kills),
         "joins": len(report.joins),
+        "steals": int(report.steals),
         "ticks": int(report.ticks),
         "replica_occupancy": {n: round(float(v), 4)
                               for n, v in sorted(
@@ -189,6 +193,7 @@ def run_fleet(model, workload, slots: int,
                 metrics.counter_total("admission_rejections")),
             "heartbeat_misses": int(
                 metrics.counter_value("heartbeat_misses")),
+            "steals": int(metrics.counter_value("steals")),
             "trace_events": len(tracer),
         },
     }
@@ -339,6 +344,7 @@ def main(argv=None) -> Dict:
     print(f"fleet:       {fleet['completed']} completed in "
           f"{fleet['ticks']} ticks, {fleet['kills']} kill / "
           f"{fleet['joins']} join, requeued {fleet['requeued']}, "
+          f"steals {fleet['steals']}, "
           f"identical={fleet['token_identical']}")
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)

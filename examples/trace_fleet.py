@@ -3,8 +3,9 @@
     PYTHONPATH=src python examples/trace_fleet.py [--arch llama3_2_3b]
 
 Runs the elastic-rescale fleet scenario (3 heterogeneous replicas, one
-killed mid-decode, one joining later) with ONE shared ``obs.Tracer`` and
-``obs.MetricsRegistry`` threaded through every layer:
+killed mid-decode, one CONTENDED at 3x from step 2 — alive but slow —
+and one joining later) with work stealing enabled and ONE shared
+``obs.Tracer`` and ``obs.MetricsRegistry`` threaded through every layer:
 
   * each replica's engine records per-request lanes (queue-wait ->
     serve -> retire) and an ``engine`` lane (prefill / fused-decode
@@ -12,9 +13,18 @@ killed mid-decode, one joining later) with ONE shared ``obs.Tracer`` and
   * the controller records routing, kill/join/requeue and replan events
     on a ``controller`` track, and overrides the timeline with its tick
     counter so the whole fleet renders on one axis;
-  * the registry counts requeues, admission rejections by reason,
-    heartbeat misses, and gauges queue depth / pool occupancy / the
-    plan-vs-actual ``fleet_drift`` signal.
+  * the drift corrector marks every work steal on the SAME controller
+    track, lane ``correction``: a ``steal`` instant (src/dst/amount/
+    drift, from ``runtime.correct``) when the ``fleet_drift`` gauge
+    trips its hysteresis threshold, and one ``shed`` instant per
+    requeued request — in Perfetto, look for the correction lane's
+    instants lining up with the contended replica's stalled engine
+    spans, followed by the replan that rebuilds the shares;
+  * the registry counts requeues, steals, admission rejections by
+    reason, heartbeat misses, and gauges queue depth / pool occupancy /
+    the plan-vs-actual ``fleet_drift`` signal (reset to 0 at every
+    replan instant, so the sawtooth in the gauge track IS the
+    replan history).
 
 Because every timestamp comes from the tick clock (never the wall
 clock), re-running this script produces a byte-identical trace.json —
@@ -29,6 +39,7 @@ import jax
 
 from repro.configs import ARCH_IDS, get_reduced
 from repro.fleet import FaultPlan, FleetController, FleetFrontend, Replica
+from repro.runtime.correct import CorrectionPolicy
 from repro.models import transformer as T
 from repro.obs import MetricsRegistry, Tracer, write_chrome_trace
 from repro.serve import EngineConfig, TransformerModel
@@ -39,7 +50,7 @@ from repro.sharding.rules import Rules
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="llama3_2_3b")
-    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--requests", type=int, default=48)
     ap.add_argument("--trace-out", default="/tmp/fleet_trace.json")
     ap.add_argument("--metrics-out", default="/tmp/fleet_metrics.json")
     args = ap.parse_args()
@@ -47,9 +58,12 @@ def main():
     cfg = get_reduced(args.arch)
     rules = Rules.null()
     params = T.init_params(cfg, jax.random.PRNGKey(0))
+    # saturated uniform shapes keep the contended replica's queue backed
+    # up long enough for the drift window to fill — the regime where the
+    # corrector is designed (and tier-1-tested) to fire
     workload = synthetic_workload(args.requests, cfg.vocab_size,
-                                  lens=(6, 10, 16), news=(3, 6, 9),
-                                  stagger=0.5)
+                                  lens=(8,), news=(6,),
+                                  stagger=0.25)
 
     tracer, metrics = Tracer(), MetricsRegistry()
     model = TransformerModel(params, cfg, rules)   # shared adapter
@@ -59,10 +73,21 @@ def main():
         Replica("r0", model, ec, rate=1.0, fault=FaultPlan(kill_at=5),
                 tracer=tracer, metrics=metrics),
         Replica("r1", model, ec, rate=2.0, tracer=tracer, metrics=metrics),
-        Replica("r2", model, ec, rate=0.5, tracer=tracer, metrics=metrics),
+        # contended, not dead: cataloged healthy (rate 1.0) but from step
+        # 2 on it beats its heartbeat while only working every 4th step —
+        # the drift corrector's case, not the health plane's
+        Replica("r2", model, ec, rate=1.0,
+                fault=FaultPlan(slow_at=2, slow_factor=4),
+                tracer=tracer, metrics=metrics),
     ]
-    controller = FleetController(replicas, miss_threshold=3,
-                                 tracer=tracer, metrics=metrics)
+    # an eager steal policy so the short demo trips visibly; production
+    # default (steal_policy=None) waits for a larger drift window
+    controller = FleetController(
+        replicas, miss_threshold=8, steal=True,
+        steal_policy=CorrectionPolicy(hysteresis=1.25, cooldown=2,
+                                      max_corrections=8, persistence=2,
+                                      min_window=24.0),
+        tracer=tracer, metrics=metrics)
     controller.schedule_join(
         Replica("r3", model, ec, rate=1.5, tracer=tracer, metrics=metrics),
         at_tick=8)
@@ -70,14 +95,27 @@ def main():
     report = frontend.serve(workload)
 
     print(f"{cfg.name}: {args.requests} requests, kill r0 @ step 5, "
-          f"join r3 @ tick 8 -> {report.n_completed} completed in "
-          f"{report.ticks} ticks, {report.requeues} requeued")
+          f"slow r2 4x @ step 2, join r3 @ tick 8 -> "
+          f"{report.n_completed} completed in "
+          f"{report.ticks} ticks, {report.requeues} requeued, "
+          f"{report.steals} stolen")
     requeues = [e for e in tracer.events if e["name"] == "requeue"]
+    steal_marks = [e for e in tracer.events
+                   if e.get("lane") == "correction"
+                   and e["name"] == "steal"]
+    shed_marks = [e for e in tracer.events
+                  if e.get("lane") == "correction" and e["name"] == "shed"]
     print(f"trace: {len(tracer)} events on "
           f"{len({e['track'] for e in tracer.events})} tracks "
-          f"({len(requeues)} requeue marks at the kill tick)")
+          f"({len(requeues)} requeue marks at the kill tick; correction "
+          f"lane: {len(steal_marks)} steal + {len(shed_marks)} shed "
+          f"instants)")
     snap = metrics.snapshot()
+    # the counter counts corrector TRIPS; the report counts APPLIED
+    # steals — a trip with no queued backlog to shed is suppressed
     print(f"metrics: requeues={snap['counters'].get('requeues', 0)} "
+          f"steal_trips={snap['counters'].get('steals', 0)} "
+          f"applied={report.steals} "
           f"fleet_drift={snap['gauges'].get('fleet_drift', 0.0):.4f}")
     print(f"wrote {write_chrome_trace(tracer, args.trace_out)} "
           f"— open at https://ui.perfetto.dev")

@@ -89,6 +89,35 @@ def _split_tuple(s: str) -> List[str]:
 _GROUPS_EXPLICIT = re.compile(r"replica_groups=\{\{([^}]*)\}")
 _GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 
+_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)+)\}")
+_PAIR_RE = re.compile(r"\{(\d+),(\d+)\}")
+
+
+def permute_direction_counts(hlo: str, p: int) -> Dict[str, int]:
+    """Classify every collective-permute in ``hlo`` by ring direction.
+
+    A permute whose source_target_pairs all step +1 mod ``p`` is a
+    "forward" ring hop, all -1 mod ``p`` is "backward", anything else
+    (or a mix) is "other".  The bidirectional streaming modes
+    (``core/overlap.py`` *_bidir) are gated on exactly ceil((p-1)/2)
+    forward and floor((p-1)/2) backward hops per ring — this is the
+    structural check's parser.  Counts are static occurrences in the
+    module text (no while-loop multiplier): the gates compare ring
+    SHAPE, not executed volume.
+    """
+    counts = {"forward": 0, "backward": 0, "other": 0}
+    for m in _PAIRS_RE.finditer(hlo):
+        pairs = [(int(a), int(b)) for a, b in _PAIR_RE.findall(m.group(1))]
+        if not pairs:
+            continue
+        if all(t == (s + 1) % p for s, t in pairs):
+            counts["forward"] += 1
+        elif all(t == (s - 1) % p for s, t in pairs):
+            counts["backward"] += 1
+        else:
+            counts["other"] += 1
+    return counts
+
 
 def _group_size(line: str, default: int) -> int:
     m = _GROUPS_IOTA.search(line)

@@ -44,6 +44,19 @@ Aggregation-registry modes (drop-in for "allreduce"/"scatter" anywhere the
                          across pods (the DCN trunk hop), tile ring
                          all-gather within the pod.  Byte model identical
                          to "hierarchical".  axis=(pod_axis, inner_axis).
+  "stream_scatter_bidir" the reduce-scatter ring split into two half-rings
+                         permuting in opposite directions: contributions
+                         behind this device ride the forward ring
+                         (ceil((p-1)/2) hops), those ahead ride the
+                         backward ring (floor((p-1)/2) hops), and the two
+                         partial accumulations meet at the owner.  Total
+                         ppermutes stay p-1 — byte-exact with "scatter" —
+                         but the longest dependent chain is halved, so a
+                         duplex link drains in ceil((p-1)/2) hop times.
+  "stream_gather_bidir"  replicated result via the bidirectional RS ring
+                         followed by a bidirectional AG ring: 2(p-1)
+                         ppermutes (bytes == allreduce), sequential depth
+                         2*ceil((p-1)/2).
 
 Streaming requires the tiled dim to divide evenly by the axis size (the
 same constraint ``psum_scatter(tiled=True)`` imposes); a clear error is
@@ -63,6 +76,19 @@ def _ring_perm(p: int) -> list:
     """Forward ring: device i sends to i+1 (chunk held by i at step s was
     originally chunk (i - s) mod p)."""
     return [(i, (i + 1) % p) for i in range(p)]
+
+
+def _rev_perm(p: int) -> list:
+    """Backward ring: device i sends to i-1 (chunk held by i at step s was
+    originally chunk (i + s) mod p)."""
+    return [(i, (i - 1) % p) for i in range(p)]
+
+
+def bidir_hops(p: int) -> tuple:
+    """(forward, backward) hop counts of one bidirectional half-ring pass:
+    ceil((p-1)/2) forward + floor((p-1)/2) backward == p-1 total."""
+    hf = p // 2
+    return hf, (p - 1) - hf
 
 
 def _chunk_size(dim: int, p: int, what: str) -> int:
@@ -100,6 +126,59 @@ def _ag_ring(buf: jax.Array, block, out: jax.Array, cs: int, sd: int,
                                                   axis=sd)
         if s < p - 1:
             buf = jax.lax.ppermute(buf, axis, perm)
+    return out
+
+
+def _rs_ring_bidir(tile, axis: str, p: int) -> jax.Array:
+    """Bidirectional accumulate-and-forward reduce-scatter.
+
+    Chunk i's contributions from devices i-hf..i-1 ride the forward ring
+    (hf = ceil((p-1)/2) hops), those from i+1..i+hb ride the backward ring
+    (hb = floor((p-1)/2) hops), and the owner adds its own contribution
+    locally.  hf + hb = p - 1 so every device contributes exactly once and
+    the total ppermute count (and bytes) match the unidirectional ring,
+    but the two chains are independent — XLA can keep both link directions
+    busy, halving the sequential hop depth."""
+    idx = jax.lax.axis_index(axis)
+    hf, hb = bidir_hops(p)
+    # forward chain: start hf behind the destination, accumulate towards it
+    acc_f = tile(jnp.mod(idx + hf, p))
+    for s in range(1, hf + 1):
+        acc_f = jax.lax.ppermute(acc_f, axis, _ring_perm(p))
+        if s < hf:
+            acc_f = acc_f + tile(jnp.mod(idx + hf - s, p))
+    out = acc_f + tile(idx)                  # owner's own contribution
+    if hb > 0:
+        acc_b = tile(jnp.mod(idx - hb, p))
+        for s in range(1, hb + 1):
+            acc_b = jax.lax.ppermute(acc_b, axis, _rev_perm(p))
+            if s < hb:
+                acc_b = acc_b + tile(jnp.mod(idx - hb + s, p))
+        out = out + acc_b
+    return out
+
+
+def _ag_ring_bidir(buf: jax.Array, block, out: jax.Array, cs: int, sd: int,
+                   axis: str, p: int) -> jax.Array:
+    """Bidirectional all-gather: two copies of ``buf`` rotate in opposite
+    directions; the forward copy delivers the hf tiles behind this device,
+    the backward copy the hb tiles ahead, the own tile is placed locally.
+    p-1 ppermutes total (bytes == unidirectional ring), depth halved."""
+    idx = jax.lax.axis_index(axis)
+    hf, hb = bidir_hops(p)
+    out = jax.lax.dynamic_update_slice_in_dim(out, block(buf), idx * cs,
+                                              axis=sd)
+    fwd = bwd = buf
+    for s in range(1, hf + 1):
+        fwd = jax.lax.ppermute(fwd, axis, _ring_perm(p))
+        c = jnp.mod(idx - s, p)              # original owner of fwd
+        out = jax.lax.dynamic_update_slice_in_dim(out, block(fwd), c * cs,
+                                                  axis=sd)
+    for s in range(1, hb + 1):
+        bwd = jax.lax.ppermute(bwd, axis, _rev_perm(p))
+        c = jnp.mod(idx + s, p)              # original owner of bwd
+        out = jax.lax.dynamic_update_slice_in_dim(out, block(bwd), c * cs,
+                                                  axis=sd)
     return out
 
 
@@ -190,12 +269,46 @@ def ring_all_gather(tile: jax.Array, axis: str, sd: int) -> jax.Array:
     return _ag_ring(tile, lambda b: b, out, cs, sd, axis, p)
 
 
+def ring_reduce_scatter_bidir(partial: jax.Array, axis: str, sd: int
+                              ) -> jax.Array:
+    """Bidirectional tile ring == psum_scatter(tiled=True): still p-1
+    ppermutes of bytes(out)/p per device, but split ceil((p-1)/2) forward /
+    floor((p-1)/2) backward so the dependent chain is halved."""
+    p = _axis_size(axis)
+    if p == 1:
+        return partial
+    cs = _chunk_size(partial.shape[sd], p, "scattered output")
+    return _rs_ring_bidir(
+        lambda c: jax.lax.dynamic_slice_in_dim(partial, c * cs, cs, axis=sd),
+        axis, p)
+
+
+def ring_all_gather_bidir(tile: jax.Array, axis: str, sd: int) -> jax.Array:
+    """Bidirectional all-gather == all_gather(tiled=True): p-1 ppermutes of
+    bytes(tile) per device split over the two ring directions."""
+    p = _axis_size(axis)
+    if p == 1:
+        return tile
+    cs = tile.shape[sd]
+    shape = tile.shape[:sd] + (p * cs,) + tile.shape[sd + 1:]
+    out = jnp.zeros(shape, tile.dtype)
+    return _ag_ring_bidir(tile, lambda b: b, out, cs, sd, axis, p)
+
+
 def _stream_gather_combine(partial: jax.Array, axis: str, sd: int
                            ) -> jax.Array:
     """Replicated result via RS-ring + AG-ring (the all-reduce ring
     unrolled into 2(p-1) interleavable hops)."""
     tile = ring_reduce_scatter(partial, axis, sd)
     return ring_all_gather(tile, axis, sd)
+
+
+def _stream_gather_bidir_combine(partial: jax.Array, axis: str, sd: int
+                                 ) -> jax.Array:
+    """Replicated result via bidirectional RS-ring + bidirectional AG-ring:
+    2(p-1) ppermutes (bytes == allreduce), depth 2*ceil((p-1)/2)."""
+    tile = ring_reduce_scatter_bidir(partial, axis, sd)
+    return ring_all_gather_bidir(tile, axis, sd)
 
 
 def _stream_hier_combine(partial: jax.Array, axis, sd: int) -> jax.Array:
@@ -236,6 +349,24 @@ collectives.register_mode(AggregationMode(
 ))
 
 collectives.register_mode(AggregationMode(
+    name="stream_scatter_bidir",
+    combine=ring_reduce_scatter_bidir,
+    out_spec=_scatter_spec,
+    link_byte_factor=lambda p: 1.0 * (p - 1) / p,   # == "scatter"
+    description="bidirectional streamed reduce-scatter: two opposing "
+                "half-rings, ceil((p-1)/2) hops deep (bytes == scatter)",
+))
+
+collectives.register_mode(AggregationMode(
+    name="stream_gather_bidir",
+    combine=_stream_gather_bidir_combine,
+    out_spec=lambda axis, base, _sd: collectives.P(*base),
+    link_byte_factor=lambda p: 2.0 * (p - 1) / p,   # == "allreduce"
+    description="bidirectional streamed replicated aggregation: bidir "
+                "RS-ring + bidir AG-ring (bytes == allreduce)",
+))
+
+collectives.register_mode(AggregationMode(
     name="stream_hierarchical",
     combine=_stream_hier_combine,
     out_spec=lambda axis, base, _sd: collectives.P(*base),
@@ -252,6 +383,33 @@ def expected_ppermutes(mode: str, p: int, fsdp_ring: int = 1) -> int:
     weight-shard hops when the FSDP gather is streamed too.  The
     structural check ``benchmarks/overlap.py`` asserts against this."""
     agg = {"stream_scatter": p - 1,
+           "stream_scatter_bidir": p - 1,
            "stream_gather": 2 * (p - 1),
+           "stream_gather_bidir": 2 * (p - 1),
            "stream_hierarchical": 2 * (p - 1)}[mode]
     return agg + max(0, fsdp_ring - 1)
+
+
+def expected_direction_counts(mode: str, p: int) -> tuple:
+    """(forward, backward) ppermute counts of one bidirectional aggregation
+    — the per-direction structural metric ``check_regression.py`` gates:
+    forward count is ceil((p-1)/2) per ring pass (halved vs the p-1 of the
+    unidirectional modes)."""
+    hf, hb = bidir_hops(p)
+    try:
+        return {"stream_scatter_bidir": (hf, hb),
+                "stream_gather_bidir": (2 * hf, 2 * hb)}[mode]
+    except KeyError:
+        raise ValueError(f"{mode!r} is not a bidirectional streaming mode")
+
+
+def sequential_hop_depth(mode: str, p: int) -> int:
+    """Longest dependent ppermute chain of one aggregation — the latency
+    model the bidirectional split improves: p-1 -> ceil((p-1)/2) per ring
+    pass (total bytes unchanged)."""
+    hf, _ = bidir_hops(p)
+    return {"stream_scatter": p - 1,
+            "stream_gather": 2 * (p - 1),
+            "stream_hierarchical": 2 * (p - 1),
+            "stream_scatter_bidir": hf,
+            "stream_gather_bidir": 2 * hf}[mode]

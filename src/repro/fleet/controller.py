@@ -42,6 +42,7 @@ import numpy as np
 from ..obs.drift import DriftMonitor
 from ..obs.metrics import MetricsRegistry
 from ..obs.trace import NullTracer
+from ..runtime.correct import CorrectionPolicy, WorkStealingCorrector
 from ..runtime.rebalance import (RebalancePlan, drop_devices, join_devices,
                                  plan_rebalance)
 from ..serve.engine.planner import CapacityPlanner
@@ -71,6 +72,7 @@ class FleetReport:
     occupancy: Dict[str, float]          # per-replica mean decode occupancy
     decode_tokens: Dict[str, int]
     events: List[str]
+    steals: int = 0                      # drift-triggered work steals
 
     @property
     def n_completed(self) -> int:
@@ -81,6 +83,8 @@ class FleetController:
     def __init__(self, replicas: Sequence[Replica], *,
                  miss_threshold: int = 3, route_window: int = 16,
                  virtual_k: int = 1024, mode: str = "PCCS",
+                 steal: bool = False,
+                 steal_policy: Optional[CorrectionPolicy] = None,
                  tracer=None, metrics=None):
         names = [r.name for r in replicas]
         if len(set(names)) != len(names):
@@ -106,6 +110,12 @@ class FleetController:
         self._owner: Dict[Tuple[str, int], int] = {}  # (name, local) -> rid
         # rescale bookkeeping
         self.requeues = 0
+        # dynamic correction (runtime.correct): drift-tripped replicas
+        # shed queued work through the exactly-once requeue path
+        self.steal = bool(steal)
+        self.steal_policy = steal_policy
+        self.steals = 0
+        self._corrector: Optional[WorkStealingCorrector] = None
         self.kills: List[Tuple[int, str]] = []
         self.joins: List[Tuple[int, str]] = []
         self.events: List[str] = []
@@ -137,16 +147,29 @@ class FleetController:
             raise ValueError(f"replica {replica.name!r} already exists")
         self._join_schedule.append((int(at_tick), replica))
 
-    def _replan(self) -> None:
+    def _replan(self, rates: Optional[Dict[str, float]] = None) -> None:
         """Rebuild the routing sequence from the live replicas' rates via
-        the capacity planner (the §4 equal-finish split + smooth WRR)."""
+        the capacity planner (the §4 equal-finish split + smooth WRR).
+
+        ``rates`` overrides the nominal per-replica rates (the steal path
+        passes observation-smoothed rates so routing follows the measured
+        platform, not the stale catalogue numbers).  The ``fleet_drift``
+        gauge resets with the plan: drift is plan-relative, so a stale
+        pre-replan value must never outlive the plan it scored.
+        """
+        # the gauge baseline resets with the plan on EVERY replan path
+        # (corrector, kill, join) — first post-replan observation scores
+        # against the fresh plan, not the old one's residue
+        self.metrics.gauge("fleet_drift").set(0.0)
         alive = self.alive_names()
         if not alive:
             self._route_seq, self._route_pos = [], 0
             self._drift, self._drift_names = None, []
+            self._corrector = None
             return
+        rate_of = rates if rates is not None else {}
         planner = CapacityPlanner(
-            rates=[self.replicas[n].rate for n in alive],
+            rates=[rate_of.get(n, self.replicas[n].rate) for n in alive],
             mode=self.mode, quantum=1)
         plan = planner.plan(max(self.route_window, len(alive)))
         self._route_seq = [alive[i] for i in planner.route(plan)]
@@ -159,6 +182,25 @@ class FleetController:
         self._drift_names = list(alive)
         self._drift_base = {
             n: self.replicas[n].progress()["decode_tokens"] for n in alive}
+        self._drift_lbase = {
+            n: self.replicas[n].slot_ticks for n in alive}
+        self._drift_tick = self.tick_count
+        # dynamic correction: a serve-plane corrector seeded on THIS plan.
+        # The steal budget is fleet-lifetime, not plan-lifetime — each
+        # fresh corrector gets only what the fleet has not yet spent, so
+        # the correction count is bounded across any replan sequence.
+        self._corrector = None
+        if self.steal and len(alive) > 1:
+            pol = self.steal_policy if self.steal_policy is not None else \
+                CorrectionPolicy(hysteresis=1.5, cooldown=2,
+                                 max_corrections=8, persistence=2,
+                                 min_window=32.0 * len(alive))
+            pol = dataclasses.replace(
+                pol, max_corrections=max(0, pol.max_corrections - self.steals))
+            self._corrector = WorkStealingCorrector(
+                plan.partition, plane="serve", policy=pol,
+                metrics=self.metrics, tracer=self.tracer,
+                gauge_name="fleet_drift")
         self.tracer.event("replan", track="controller", lane="routing",
                           alive=alive)
         self.metrics.counter("replans").inc()
@@ -226,6 +268,88 @@ class FleetController:
         self.tracer.event("join", track="controller", lane="membership",
                           replica=replica.name)
         self._replan()
+
+    # -- dynamic correction ------------------------------------------------
+    def _effective_rates(self, work: Sequence[float]) -> List[float]:
+        """Utilization-normalized work vector for the corrector: tokens
+        per ACTIVE-SLOT tick (per-slot throughput — ~1 healthy at any
+        occupancy, 1/slow_factor contended), re-scaled so the vector's
+        total equals the window's token mass (the policy's ``min_window``
+        is a token mass).  A replica with no slot tick in the window has
+        no measurement — it is pinned to its planned fraction (neutral:
+        contributes zero drift, the ``measure_speeds`` median trick)."""
+        names = self._drift_names
+        rates: List[Optional[float]] = []
+        for n, dt in zip(names, work):
+            st = self.replicas[n].slot_ticks - self._drift_lbase[n]
+            # a loaded-but-silent replica is measured as (nearly)
+            # stalled, not unmeasured — floor at half a token so the
+            # corrector can rank it instead of dividing by zero
+            rates.append(max(float(dt), 0.5) / st if st > 0 else None)
+        frac = self._corrector.plan.k / max(float(self._corrector.plan.load),
+                                            1.0)
+        s_m = sum(r for r in rates if r is not None)
+        f_m = sum(f for r, f in zip(rates, frac) if r is not None)
+        if f_m <= 0 or s_m <= 0:
+            return [float(f) for f in frac]   # nothing measured: on-plan
+        full = [r if r is not None else float(f) * s_m / f_m
+                for r, f in zip(rates, frac)]
+        scale = max(float(sum(work)), 0.0) / sum(full)
+        return [r * scale for r in full]
+
+    def _apply_steal(self, ev, work: Sequence[float]) -> None:
+        """Apply one corrector event: the straggler sheds queued (never
+        in-flight) requests into the exactly-once requeue path, then the
+        router is re-planned on observation-smoothed rates so new work
+        stops piling onto the contended replica.  Shed requests were
+        never admitted — zero tokens generated — so the greedy fleet
+        oracle survives their regeneration elsewhere, exactly like the
+        kill path's requeues."""
+        names = self._drift_names
+        src, dst = names[ev.src], names[ev.dst]
+        # steal-half: the corrector's event grants ONE correction; the
+        # controller sheds half the straggler's queued backlog (the
+        # classic work-stealing amount — enough to matter, never the
+        # FIFO head, bounded by what is actually queued)
+        n_shed = max(ev.amount, (self.replicas[src].queued() + 1) // 2)
+        shed = self.replicas[src].shed(n_shed)
+        if not shed:
+            # the straggler had nothing queued to give up — the trip is
+            # recorded by the corrector but no steal is applied
+            self.events.append(
+                f"tick {self.tick_count}: steal {src}->{dst} suppressed "
+                f"(no queued backlog)")
+            return
+        self.steals += 1
+        for r in shed:
+            rid = self._owner.pop((src, r.rid), None)
+            if rid is None or rid in self.results:
+                continue
+            # same exactly-once bookkeeping as the kill path's requeue —
+            # but placed straight onto the corrector's absorber replica,
+            # not back through the router (which would hand a share of
+            # them straight back to the straggler)
+            fr = self.requests[rid]
+            fr.replica = dst
+            fr.local_rid = self.replicas[dst].submit(fr.prompt, fr.max_new)
+            fr.n_requeues += 1
+            self._owner[(dst, fr.local_rid)] = rid
+            self.requeues += 1
+            self.metrics.counter("requeues").inc()
+            self.tracer.event("shed", track="controller", lane="correction",
+                              rid=rid, src=src, dst=dst)
+        self.events.append(
+            f"tick {self.tick_count}: steal {src}->{dst} "
+            f"(drift {ev.drift:.3f}), shed {len(shed)}")
+        # smoothed observed rates: same total capacity as the catalogue,
+        # split the way the fleet actually served — half-weight blended
+        # so one noisy window cannot whipsaw the router
+        nominal = np.array([self.replicas[n].rate for n in names],
+                           dtype=np.float64)
+        w = np.asarray(work, dtype=np.float64)
+        observed = w / w.sum() * nominal.sum()
+        blended = 0.5 * nominal + 0.5 * observed
+        self._replan(rates=dict(zip(names, blended)))
 
     # -- request surface ---------------------------------------------------
     def submit(self, prompt, max_new: int, arrival: float = 0.0) -> int:
@@ -324,13 +448,29 @@ class FleetController:
                 self._kill(name, reason="heartbeat-miss")
         # plan-vs-actual: decode tokens served since the current plan,
         # scored against its share fractions (skipped when a membership
-        # change mid-tick already rebuilt the monitor)
+        # change mid-tick already rebuilt the monitor).  With stealing
+        # on, the corrector's monitor IS the fleet_drift publisher — and
+        # a tripped observation sheds work off the straggler.
         if (self._drift is not None
                 and all(self.replicas[n].alive for n in self._drift_names)):
             work = [self.replicas[n].progress()["decode_tokens"]
                     - self._drift_base[n] for n in self._drift_names]
             if sum(work) > 0:
-                self._drift.observe_shares(work)
+                reps = [self.replicas[n] for n in self._drift_names]
+                if (self._corrector is not None
+                        and any(r.queued() > 0 for r in reps)):
+                    # corrector observations are gated on the existence
+                    # of QUEUED (stealable) backlog — without one there
+                    # is neither congestion nor anything to shed.  The
+                    # work vector is utilization-normalized (tokens per
+                    # LOADED tick) so an idle-for-lack-of-work replica
+                    # keeps its measured speed instead of looking slow.
+                    rates = self._effective_rates(work)
+                    ev = self._corrector.observe(rates)
+                    if ev is not None:
+                        self._apply_steal(ev, rates)
+                else:
+                    self._drift.observe_shares(work)
         self.metrics.gauge("fleet_depth").set(self.depth)
         self.tracer.counter("fleet_depth", self.depth, track="controller")
         self.tick_count += 1
@@ -360,4 +500,4 @@ class FleetController:
             completed=dict(self.results), ticks=self.tick_count,
             requeues=self.requeues, kills=list(self.kills),
             joins=list(self.joins), occupancy=occ, decode_tokens=dec,
-            events=list(self.events))
+            events=list(self.events), steals=self.steals)

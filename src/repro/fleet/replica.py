@@ -53,10 +53,16 @@ class FaultPlan:
     kill_at: the step raises ``ReplicaDead`` once this many steps ran.
     hang_at: the step silently stops (no heartbeat, no progress) — the
     controller must catch this via heartbeat-miss, not an exception.
+    slow_at: from this step on, only every ``slow_factor``-th step does
+    engine work (the others beat the heartbeat and return idle) — a
+    CONTENDED replica: alive and healthy, at 1/slow_factor throughput.
+    The drift corrector, not the health plane, must handle this one.
     """
 
     kill_at: Optional[int] = None
     hang_at: Optional[int] = None
+    slow_at: Optional[int] = None
+    slow_factor: int = 2
 
 
 class Replica:
@@ -81,6 +87,12 @@ class Replica:
         self.alive = True
         self.last_heartbeat = 0   # controller tick of the last live step
         self.ticks = 0            # replica-local step count (fault clock)
+        # active-slot ticks: the utilization denominator the corrector
+        # divides decode tokens by.  tokens/slot_ticks is PER-SLOT
+        # throughput — ~1 for a healthy replica at any batch occupancy,
+        # 1/slow_factor for a contended one — so neither idle phases nor
+        # ramp-up occupancy skew masquerade as slowness
+        self.slot_ticks = 0
 
     # -- request surface -------------------------------------------------
     def submit(self, prompt, max_new: int) -> int:
@@ -93,6 +105,10 @@ class Replica:
         return (len(self.engine.queue)
                 + len(self.engine.scheduler.active))
 
+    def queued(self) -> int:
+        """Requests waiting un-admitted — the stealable backlog."""
+        return len(self.engine.queue)
+
     # -- step surface ------------------------------------------------------
     def step(self, tick: int) -> bool:
         """One engine iteration under the fault plan.
@@ -104,6 +120,7 @@ class Replica:
         if not self.alive:
             return False
         self.ticks += 1
+        n_act = len(self.engine.scheduler.active)
         if (self.fault.kill_at is not None
                 and self.ticks >= self.fault.kill_at):
             raise ReplicaDead(
@@ -112,7 +129,19 @@ class Replica:
         if (self.fault.hang_at is not None
                 and self.ticks >= self.fault.hang_at):
             return False          # silent: no heartbeat, no progress
+        if (self.fault.slow_at is not None
+                and self.ticks >= self.fault.slow_at
+                and self.ticks % max(2, self.fault.slow_factor) != 0):
+            # a contended step holds its slots without producing — that
+            # IS the utilization signal the drift corrector keys on
+            if self.load() > 0:
+                self.slot_ticks += max(1, n_act)
+            self.last_heartbeat = tick   # contended, not dead
+            return False
         worked = self.engine.step()
+        if self.load() > 0 or worked:
+            self.slot_ticks += max(1, n_act,
+                                   len(self.engine.scheduler.active))
         self.last_heartbeat = tick
         return worked
 
@@ -127,6 +156,13 @@ class Replica:
     def outstanding(self) -> List[Request]:
         """What this replica still owes: everything not harvested."""
         return self.engine.outstanding()
+
+    def shed(self, n: int) -> List[Request]:
+        """Give up ``n`` queued (never in-flight) requests, latest-arrival
+        first — the work-stealing path.  Shed requests were never
+        admitted, so zero tokens were generated for them and the greedy
+        oracle survives their requeue on another replica."""
+        return self.engine.shed_queued(n)
 
     def progress(self) -> Dict[str, float]:
         return self.engine.progress()

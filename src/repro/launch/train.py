@@ -35,6 +35,11 @@ def main():
                     help="overlapped layer-streaming plane: explicit "
                          "shard_map LBP with stream_* aggregation "
                          "(sequence-parallel train_sp profile)")
+    ap.add_argument("--bidir", action="store_true",
+                    help="bidirectional half-rings on the streamed "
+                         "plane (stream_*_bidir modes: same bytes, "
+                         "ceil((p-1)/2) sequential hops); implies "
+                         "--overlap")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a Chrome-trace/Perfetto JSON of the "
                          "training run (open at ui.perfetto.dev)")
@@ -42,9 +47,12 @@ def main():
                     help="write the metrics-registry snapshot as JSON")
     args = ap.parse_args()
 
+    if args.bidir:
+        args.overlap = True
     if args.overlap:
         from ..models.tuning import set_tuning
-        set_tuning(explicit_lbp_scatter=True, overlap_streaming=True)
+        set_tuning(explicit_lbp_scatter=True, overlap_streaming=True,
+                   overlap_bidir=args.bidir)
 
     if args.demo:
         from ..obs import MetricsRegistry, Tracer, write_chrome_trace

@@ -49,16 +49,22 @@ def applicable(rules: Rules) -> bool:
             and isinstance(_axis_or_none(rules.ff), str))
 
 
-def aggregation_mode(rules: Rules, *, streaming: Optional[bool] = None) -> str:
+def aggregation_mode(rules: Rules, *, streaming: Optional[bool] = None,
+                     bidir: Optional[bool] = None) -> str:
     """The registry mode this layer aggregates with under ``rules``:
     deferred (sequence-sharded) when rules.seq is set, replicated
-    otherwise; the stream_* variant when the overlap plane is on."""
+    otherwise; the stream_* variant when the overlap plane is on, and
+    its *_bidir half-ring flavour when ``TUNING.overlap_bidir`` asks for
+    direction-split permute chains."""
+    from .tuning import TUNING
     if streaming is None:
-        from .tuning import TUNING
         streaming = TUNING.overlap_streaming
+    if bidir is None:
+        bidir = TUNING.overlap_bidir
+    suffix = "_bidir" if bidir else ""
     if rules.seq is not None:
-        return "stream_scatter" if streaming else "scatter"
-    return "stream_gather" if streaming else "allreduce"
+        return "stream_scatter" + suffix if streaming else "scatter"
+    return "stream_gather" + suffix if streaming else "allreduce"
 
 
 def lbp_row_parallel(h: jax.Array, w: jax.Array, rules: Rules) -> jax.Array:

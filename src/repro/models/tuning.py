@@ -42,6 +42,14 @@ class Tuning:
     # Only takes effect on the explicit path (explicit_lbp_scatter=True);
     # requires the streamed dims to divide by the ring sizes.
     overlap_streaming: bool = False
+    # bidirectional rings for the streamed aggregation (core/overlap.py
+    # stream_scatter_bidir / stream_gather_bidir): the permute chain is
+    # split into two half-rings circulating in opposite directions, so
+    # the sequential hop depth halves (ceil((p-1)/2) per direction) at
+    # identical total bytes — wins when both link directions are free
+    # (full-duplex ICI) and latency, not bandwidth, bounds the ring.
+    # Only takes effect with overlap_streaming=True.
+    overlap_bidir: bool = False
     # per-data-row MoE dispatch (no cross-row token gather).  Measured
     # REFUTED with GSPMD (it cannot prove the combine scatter-add local and
     # inserts full activation all-reduces) — kept for the record + the

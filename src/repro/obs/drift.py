@@ -77,6 +77,15 @@ class DriftMonitor:
         scale = max(float(self.predicted[loaded].max()), 1e-12)
         return float(self.plan.quantum) * float(per_unit.max()) / scale
 
+    def share_tolerance(self) -> float:
+        """Quantization tolerance in SHARE-FRACTION space — the scale
+        ``observe_shares`` drift lives on: integer adjustment moves each
+        node at most one quantum off the real optimum, i.e. quantum/load
+        of share fraction.  ``tolerance()`` is the finish-time-space
+        counterpart for ``observe_finish`` (one quantum on the slowest
+        node can shift its finish much further than its share)."""
+        return float(self.plan.quantum) / max(int(self.plan.load), 1)
+
     # -- observation surfaces -------------------------------------------
     def observe_finish(self, observed: Sequence[float]) -> float:
         """Record observed per-node finish times; returns (and gauges)

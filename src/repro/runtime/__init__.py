@@ -1,3 +1,6 @@
-from .rebalance import (drop_devices, join_devices,  # noqa: F401
-                        measure_speeds, plan_rebalance)
+from .correct import (CorrectionPolicy, StealEvent,  # noqa: F401
+                      WorkStealingCorrector, corrected_plan,
+                      simulate_correction, steal_unit)
+from .rebalance import (correct_shares, drop_devices,  # noqa: F401
+                        join_devices, measure_speeds, plan_rebalance)
 from .trainer import Trainer, TrainerConfig  # noqa: F401

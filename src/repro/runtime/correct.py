@@ -1,0 +1,327 @@
+"""Dynamic-correction scheduling: drift-triggered work stealing over a
+static LBP plan (ROADMAP open item 5).
+
+The §4/§5 plans are static: they assume the measured speeds hold for the
+whole run.  On contended hardware they do not — the tail device becomes
+the makespan.  Beaumont et al. ("Analysis of Dynamic Scheduling
+Strategies for Matrix Multiplication on Heterogeneous Platforms") show
+the winning strategy is a HYBRID: keep the static seed plan, add a
+bounded runtime corrector, and steal at the granularity the partition
+already uses ("Revisiting Matrix Product on Master-Worker Platforms"
+motivates layer-block steals).  This module is that corrector:
+
+  * detection is NEVER invented here — the corrector consumes
+    ``obs.DriftMonitor`` skew (``observe_finish`` / ``observe_shares``
+    + ``should_replan``), the exact signal PR 7 landed;
+  * a correction moves ONE steal unit of load from the straggler (the
+    node with the highest predicted relative finish under the current
+    shares) to whichever node minimizes the post-steal makespan — list
+    scheduling at steal-unit granularity;
+  * a hysteresis bound (trip threshold = ``hysteresis x`` the plan's own
+    quantization tolerance) guarantees an UNDISTURBED run performs zero
+    steals and stays bit-identical to the static path;
+  * a cooldown + global budget bound the number of corrections, and an
+    improvement guard (the predicted makespan must strictly drop)
+    prevents oscillation.
+
+Two observation surfaces, matching the two drift signals:
+
+  observe_times(busy)  the TRAIN/OVERLAP plane: per-node busy seconds of
+                       one synchronous step.  Work shares cannot drift
+                       there (every node processes exactly its assigned
+                       rows), so skew lives in finish-time space —
+                       scored against ``plan.finish_times`` with the
+                       finish-space ``tolerance()``.  A uniform platform
+                       slowdown scores zero drift (nothing to rebalance).
+  observe(work)        the SERVE plane: per-replica work (decode tokens)
+                       since the current plan — share-fraction space,
+                       scored with ``share_tolerance()``.
+
+Steal units per execution plane (``steal_unit``):
+
+  train    one quantum layer block (the §4.5 alignment unit — shares
+           stay MXU-aligned through any number of corrections)
+  overlap  one whole ring tile (quantum x ring size) so the streamed
+           matmul's per-device tiling stays divisible by the ring
+  serve    one queued request (the fleet controller sheds it through
+           the exactly-once requeue path)
+
+``simulate_correction`` is the deterministic per-step loop used by the
+contention benchmark and the tier-1 acceptance tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from ..obs.drift import DriftMonitor
+from ..plan.ir import PartitionPlan
+
+__all__ = ["CorrectionPolicy", "StealEvent", "WorkStealingCorrector",
+           "corrected_plan", "simulate_correction", "steal_unit"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StealEvent:
+    """One correction: ``amount`` load units moved src -> dst at the
+    observation step where drift ``drift`` tripped the threshold."""
+
+    step: int
+    src: int
+    dst: int
+    amount: int
+    drift: float
+
+
+@dataclasses.dataclass(frozen=True)
+class CorrectionPolicy:
+    """Bounds on the corrector (all three are load-bearing for the
+    zero-steals-when-undisturbed and bounded-convergence guarantees)."""
+
+    hysteresis: float = 1.25  # trip at hysteresis x plan tolerance (>= 1)
+    cooldown: int = 1         # observations between corrections
+    max_corrections: int = 8  # global steal budget for the plan's lifetime
+    min_window: float = 0.0   # minimum observed mass before scoring
+    persistence: int = 1      # consecutive over-threshold obs before a steal
+
+    def __post_init__(self):
+        assert self.hysteresis >= 1.0, \
+            "hysteresis < 1 would steal on quantization noise alone"
+        assert self.cooldown >= 1 and self.max_corrections >= 0
+        assert self.persistence >= 1
+
+
+def steal_unit(plan: PartitionPlan, plane: str, *, ring: int = 1) -> int:
+    """Load units one correction moves, per execution plane (see module
+    docstring).  Always a multiple of ``plan.quantum`` for the partition
+    planes, so corrected shares stay quantum-aligned."""
+    if plane == "train":
+        return int(plan.quantum)
+    if plane == "overlap":
+        return int(plan.quantum) * max(1, int(ring))
+    if plane == "serve":
+        return 1
+    raise ValueError(f"unknown execution plane {plane!r} "
+                     f"(expected train | overlap | serve)")
+
+
+def corrected_plan(plan: PartitionPlan, new_k: np.ndarray) -> PartitionPlan:
+    """The plan with shares ``new_k`` and finish times re-scaled by the
+    share ratio (per-unit service times are recovered from the plan
+    itself, the same trick ``DriftMonitor.tolerance`` uses).  ``k_real``
+    keeps the solver's original optimum — provenance of the seed."""
+    k = np.asarray(new_k, dtype=np.int64)
+    assert int(k.sum()) == int(plan.load) and np.all(k >= 0)
+    old = plan.k.astype(np.float64)
+    loaded = plan.k > 0
+    per_unit = (float(np.median(plan.finish_times[loaded] / old[loaded]))
+                if loaded.any() else 0.0)
+
+    def rescale(ft):
+        ratio = np.where(old > 0, k / np.maximum(old, 1.0), 0.0)
+        return np.where(old > 0, np.asarray(ft) * ratio, k * per_unit)
+
+    fo = (rescale(plan.finish_times_overlap)
+          if plan.finish_times_overlap is not None else None)
+    meta = dict(plan.meta)
+    meta["corrections"] = int(meta.get("corrections", 0)) + 1
+    return dataclasses.replace(plan, k=k,
+                               finish_times=rescale(plan.finish_times),
+                               finish_times_overlap=fo, meta=meta)
+
+
+class WorkStealingCorrector:
+    """Seeds from a static plan, consumes DriftMonitor skew, re-assigns
+    marginal blocks straggler -> fastest-absorber under a hysteresis
+    bound.  ``self.plan`` always carries the shares to execute; the
+    caller resets its observation accumulator whenever an event is
+    returned (the monitor is reseeded on the corrected plan)."""
+
+    def __init__(self, plan: PartitionPlan, *, plane: str = "train",
+                 ring: int = 1, overlap: bool = False,
+                 policy: Optional[CorrectionPolicy] = None,
+                 metrics=None, tracer=None, track: str = "controller",
+                 gauge_name: str = "plan_drift"):
+        self.seed_plan = plan
+        self.plan = plan
+        self.plane = plane
+        self.unit = steal_unit(plan, plane, ring=ring)
+        self.policy = policy or CorrectionPolicy()
+        self.metrics = metrics
+        self.tracer = tracer
+        self.track = track
+        self._overlap = overlap
+        self._gauge_name = gauge_name
+        self.monitor = DriftMonitor(plan, overlap=overlap, metrics=metrics,
+                                    gauge_name=gauge_name)
+        self.events: List[StealEvent] = []
+        self.steps = 0
+        self._last_correction = -10 ** 9
+        self._over = 0   # consecutive over-threshold observations
+
+    # -- observation surfaces -------------------------------------------
+    def observe_times(self, busy: Sequence[float]) -> Optional[StealEvent]:
+        """Train/overlap plane: per-node busy seconds of one synchronous
+        step.  Observed times are scaled so their loaded-node total
+        matches the plan's (a uniformly slower platform is NOT drift),
+        then scored against ``finish_times`` with the finish-space
+        tolerance."""
+        self.steps += 1
+        busy = np.asarray(busy, dtype=np.float64)
+        loaded = self.plan.k > 0
+        obs_mass = float(busy[loaded].sum())
+        if obs_mass <= 0:
+            return None
+        scale = float(self.monitor.predicted[loaded].sum()) / obs_mass
+        drift = self.monitor.observe_finish(busy * scale)
+        if not self._tripped(
+                self.policy.hysteresis * self.monitor.tolerance()):
+            return None
+        # per-unit service time estimate straight from the measurement
+        with np.errstate(divide="ignore", invalid="ignore"):
+            w_hat = np.where(loaded, busy / np.maximum(self.plan.k, 1),
+                             np.inf)
+        return self._correct(w_hat, drift)
+
+    def observe(self, work: Sequence[float]) -> Optional[StealEvent]:
+        """Serve plane: per-node work (tokens, requests) since the
+        current plan — share-fraction space, share-space tolerance."""
+        self.steps += 1
+        work = np.asarray(work, dtype=np.float64)
+        drift = self.monitor.observe_shares(work)
+        if float(work.sum()) < max(self.policy.min_window, 1e-12):
+            return None           # not enough mass to score yet
+        if not self._tripped(
+                self.policy.hysteresis * self.monitor.share_tolerance()):
+            return None
+        # observed work per unit time fraction -> per-unit service time
+        with np.errstate(divide="ignore", invalid="ignore"):
+            w_hat = np.where(work > 0, 1.0 / work, np.inf)
+        return self._correct(w_hat, drift)
+
+    def _tripped(self, threshold: float) -> bool:
+        """Hysteresis + persistence: the monitor must sit over the trip
+        threshold for ``persistence`` CONSECUTIVE observations — one
+        noisy window never moves load."""
+        if not self.monitor.should_replan(threshold):
+            self._over = 0
+            return False
+        self._over += 1
+        return self._over >= self.policy.persistence
+
+    # -- the correction -------------------------------------------------
+    def _correct(self, w_hat: np.ndarray, drift: float
+                 ) -> Optional[StealEvent]:
+        if len(self.events) >= self.policy.max_corrections:
+            return None
+        if self.steps - self._last_correction < self.policy.cooldown:
+            return None
+        k = self.plan.k.astype(np.float64)
+        t = np.where(k > 0, k * w_hat, 0.0)       # predicted rel. finish
+        t = np.where(np.isnan(t), np.inf, t)
+        src = int(np.argmax(t))
+        if not np.isfinite(t[src]):
+            return None                           # straggler unmeasured
+        amount = min(self.unit, int(self.plan.k[src]))
+        amount -= amount % max(1, int(self.plan.quantum))
+        if amount <= 0:
+            return None
+        t_recv = (k + amount) * w_hat             # finish if j absorbs it
+        t_recv[src] = np.inf
+        dst = int(np.argmin(t_recv))
+        if not np.isfinite(t_recv[dst]):
+            return None
+        # improvement guard: predicted makespan must strictly drop, else
+        # a too-coarse unit would oscillate around the optimum
+        t_new = t.copy()
+        t_new[src] = (k[src] - amount) * w_hat[src]
+        t_new[dst] = t_recv[dst]
+        if float(np.max(t_new)) >= float(np.max(t)):
+            return None
+        new_k = self.plan.k.copy()
+        new_k[src] -= amount
+        new_k[dst] += amount
+        self.plan = corrected_plan(self.plan, new_k)
+        self.monitor = DriftMonitor(self.plan, overlap=self._overlap,
+                                    metrics=self.metrics,
+                                    gauge_name=self._gauge_name)
+        ev = StealEvent(step=self.steps, src=src, dst=dst, amount=amount,
+                        drift=drift)
+        self.events.append(ev)
+        self._last_correction = self.steps
+        self._over = 0
+        if self.metrics is not None:
+            self.metrics.counter("steals").inc()
+            self.metrics.gauge(self._gauge_name).set(0.0)
+        if self.tracer is not None:
+            self.tracer.event("steal", track=self.track, lane="correction",
+                              src=int(src), dst=int(dst), amount=int(amount),
+                              drift=round(float(drift), 6))
+        return ev
+
+
+def simulate_correction(plan: PartitionPlan, *,
+                        slow_node: Optional[int] = None,
+                        slow_at_frac: float = 0.3, slow_factor: float = 2.0,
+                        n_steps: int = 32, plane: str = "train",
+                        ring: int = 1, steal: bool = True,
+                        policy: Optional[CorrectionPolicy] = None) -> dict:
+    """Deterministic contention simulation (the bench/test harness).
+
+    Runs ``n_steps`` synchronous steps: node i is busy ``k_i * w_i`` per
+    step, with per-unit times ``w`` recovered from the plan itself, so
+    an UNDISTURBED run observes exactly the predicted finish times —
+    zero drift, provably zero steals, shares bit-identical to the seed.
+    With ``slow_node`` set, that node's ``w`` is multiplied by
+    ``slow_factor`` from step ``slow_at_frac * n_steps`` on; the
+    corrector sees each step's busy times and converges the realized
+    per-step finish spread back inside the plan's quantization
+    tolerance within its steal budget.
+    """
+    corr = WorkStealingCorrector(plan, plane=plane, ring=ring, policy=policy)
+    loaded = plan.k > 0
+    w = np.where(loaded, plan.finish_times / np.maximum(plan.k, 1), 0.0)
+    slow_at = int(round(slow_at_frac * n_steps))
+    total_time = total_static = 0.0
+    spread = 0.0
+    convergence_step = None
+    for step in range(1, n_steps + 1):
+        w_eff = w.copy()
+        if slow_node is not None and step > slow_at:
+            w_eff[slow_node] *= slow_factor
+        k = corr.plan.k
+        busy = k * w_eff
+        total_time += float(busy.max())
+        total_static += float((plan.k * w_eff).max())
+        live = k > 0
+        spread = float((busy[live].max() - busy[live].min())
+                       / max(busy[live].max(), 1e-12)) if live.any() else 0.0
+        if steal:
+            ev = corr.observe_times(busy)
+            if ev is not None:
+                convergence_step = step
+    tol = float(corr.monitor.tolerance())
+    # the corrector re-assigns in whole steal units, so the spread it can
+    # converge to is the one-UNIT shift, not the one-quantum shift: the
+    # plan tolerance scaled by unit/quantum (identical on the train
+    # plane, x ring on the overlap plane)
+    unit_tol = tol * corr.unit / max(1, int(plan.quantum))
+    return {
+        "n_steps": int(n_steps),
+        "slow_at": int(slow_at) if slow_node is not None else None,
+        "makespan": round(total_time, 6),
+        "makespan_static": round(total_static, 6),
+        "spread_final": round(spread, 6),
+        "steals": len(corr.events),
+        "steal_bound": int(corr.policy.max_corrections),
+        "convergence_step": convergence_step,
+        "tolerance": round(tol, 6),
+        "unit_tolerance": round(unit_tol, 6),
+        "unit": int(corr.unit),
+        "final_k": [int(x) for x in corr.plan.k],
+        "seed_k": [int(x) for x in plan.k],
+        "events": [dataclasses.asdict(e) for e in corr.events],
+    }

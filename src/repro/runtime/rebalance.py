@@ -105,6 +105,36 @@ def plan_rebalance(K: int, speeds: Optional[Sequence[float]] = None, *,
                          plan=pp)
 
 
+def correct_shares(rb: RebalancePlan, src: int, dst: int,
+                   amount: int) -> RebalancePlan:
+    """Apply ONE work-stealing correction (``runtime.correct``) to a
+    rebalance plan: move ``amount`` contraction units from device ``src``
+    to ``dst`` WITHOUT re-solving — the per-step share correction the
+    dynamic corrector performs on the virtual-load assignment.  The
+    amount must keep the quantum alignment (the corrector's steal units
+    guarantee it); the carried ``PartitionPlan`` is re-scaled the same
+    way the corrector re-scales its own plan."""
+    from .correct import corrected_plan
+    k = rb.assignment.k.copy()
+    p = k.shape[0]
+    if not (0 <= src < p and 0 <= dst < p) or src == dst:
+        raise ValueError(f"bad correction {src}->{dst} for {p} devices")
+    amount = int(amount)
+    if not 0 < amount <= int(k[src]):
+        raise ValueError(
+            f"cannot move {amount} units from device {src} holding {k[src]}")
+    k[src] -= amount
+    k[dst] += amount
+    assign = LayerAssignment(k, rb.assignment.quantum)
+    even = np.full(p, assign.K / p)
+    t_even = float(np.max(even / rb.speeds))
+    t_new = float(np.max(np.where(k > 0, k / rb.speeds, 0.0)))
+    return RebalancePlan(
+        assignment=assign, speeds=rb.speeds,
+        predicted_speedup=t_even / max(t_new, 1e-12),
+        plan=corrected_plan(rb.plan, k) if rb.plan is not None else None)
+
+
 def drop_devices(assign: LayerAssignment, dead: Sequence[int],
                  speeds: Sequence[float], quantum: int = 128, *,
                  mode: str = "PCSS",

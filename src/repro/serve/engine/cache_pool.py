@@ -128,7 +128,14 @@ class PagedCachePool:
         self.page_size = int(page_size)
         self.n_slots = int(n_slots)
         self.pages_per_slot = int(pages_per_slot)
-        self._free_pages: List[int] = list(range(n_pages))
+        # free-page STACK (LIFO), not a heap: page identity is
+        # interchangeable (the table indirection absorbs any order), so
+        # claims are O(1) pops off the end instead of O(log n) sifts —
+        # the allocator sits on the per-decode-step path via
+        # prepare_decode.  Seeded descending so the first claims still
+        # hand out low page ids.  Rows stay a min-heap: slot order is
+        # test-pinned.
+        self._free_pages: List[int] = list(range(n_pages - 1, -1, -1))
         self._free_rows: List[int] = list(range(n_slots))
         # rid -> (slot, reserved page count, claimed physical page list)
         self._live: Dict[int, Tuple[int, int, List[int]]] = {}
@@ -211,7 +218,7 @@ class PagedCachePool:
                 "page pool exhausted despite reservations — allocator "
                 "invariant broken (claimed pages must never exceed the "
                 "reserved total)")
-        page = heapq.heappop(self._free_pages)
+        page = self._free_pages.pop()
         pages.append(page)
         self.table[slot, len(pages) - 1] = page
         self.n_allocated += 1
@@ -264,8 +271,10 @@ class PagedCachePool:
             raise RuntimeError(f"request {rid} holds no pages")
         slot, reserved, pages = self._live.pop(rid)
         self.page_history[rid] = tuple(pages)
-        for page in pages:
-            heapq.heappush(self._free_pages, page)
+        # push in reverse so the request's FIRST page is on top of the
+        # stack — the next claim reuses the hottest line first
+        for page in reversed(pages):
+            self._free_pages.append(page)
             self.n_freed += 1
         self._reserved_total -= reserved
         self.table[slot, :] = self.trash_page

@@ -674,6 +674,18 @@ class ServingEngine:
         dec = trace[r.trace_start:r.trace_start + n_dec, r.trace_slot]
         return np.concatenate([self._firsts(r), dec]).astype(np.int32)
 
+    def shed_queued(self, n: int) -> List[Request]:
+        """Give up ``n`` still-QUEUED requests, latest-arrival first — the
+        work-stealing shed surface.  Only un-admitted requests are
+        sheddable: they have generated zero tokens, so requeuing them on
+        another replica preserves the greedy oracle byte-for-byte.  Their
+        queue-wait spans are closed ``outcome="stolen"`` (the thief opens
+        a fresh one on its own track)."""
+        victims = self.queue.steal_latest(n)
+        for r in victims:
+            self.tracer.end(("qw", self.name, r.rid), outcome="stolen")
+        return victims
+
     def outstanding(self) -> List[Request]:
         """Every request whose tokens are NOT yet harvested to the host:
         queued, in flight, and completed-but-unharvested, in rid order.

@@ -137,3 +137,21 @@ class RequestQueue:
         removing them — failover introspection: a fleet controller
         requeues a dead replica's queue onto the survivors."""
         return [r for _, r in sorted(self._pending)]
+
+    def steal_latest(self, n: int) -> List[Request]:
+        """Remove and return up to ``n`` pending requests, LATEST
+        (arrival, rid) first — the work-stealing shed surface: a
+        drift-tripped replica gives up the work it would serve last (the
+        head of the FIFO keeps its place; stolen requests re-enter
+        another replica's queue through the fleet requeue path).  Stale
+        ``_unstamped`` entries are left behind on purpose: eligibility is
+        stamped at most once per request, so a dangling entry is a no-op.
+        """
+        if n <= 0 or not self._pending:
+            return []
+        victims = heapq.nlargest(min(n, len(self._pending)), self._pending,
+                                 key=lambda kr: kr[0])
+        keys = {kr[0] for kr in victims}
+        self._pending = [kr for kr in self._pending if kr[0] not in keys]
+        heapq.heapify(self._pending)
+        return [r for _, r in victims]

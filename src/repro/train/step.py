@@ -44,7 +44,8 @@ def batch_specs(cfg: ModelConfig, rules: Rules):
 
 def make_train_step(cfg: ModelConfig, rules: Rules, opt_cfg: AdamWConfig,
                     grad_accum: int = 1, *,
-                    overlap_streaming: Optional[bool] = None):
+                    overlap_streaming: Optional[bool] = None,
+                    overlap_bidir: Optional[bool] = None):
     """Returns step(state, batch) -> (state, metrics).
 
     ``overlap_streaming`` (None = leave the global tuning untouched)
@@ -54,20 +55,27 @@ def make_train_step(cfg: ModelConfig, rules: Rules, opt_cfg: AdamWConfig,
     step contains no monolithic all-gather and is bounded by
     max(comm, compute) per the paper's simultaneous-start analysis.  It
     implies the explicit shard_map LBP path — a plain einsum cannot
-    stream.  The flag is applied around the TRACE of ``step`` (set on
-    entry, restored on exit), so steps built with different settings
-    coexist and the process-global tuning is left untouched.
+    stream.  ``overlap_bidir`` additionally splits the aggregation rings
+    into two opposite-direction half-rings (halved sequential hop depth
+    at identical bytes).  The flags are applied around the TRACE of
+    ``step`` (set on entry, restored on exit), so steps built with
+    different settings coexist and the process-global tuning is left
+    untouched.
     """
 
     def _apply_tuning() -> Dict[str, bool]:
-        if overlap_streaming is None:
+        if overlap_streaming is None and overlap_bidir is None:
             return {}
         from ..models.tuning import TUNING, set_tuning
         saved = {"overlap_streaming": TUNING.overlap_streaming,
-                 "explicit_lbp_scatter": TUNING.explicit_lbp_scatter}
-        set_tuning(overlap_streaming=bool(overlap_streaming))
-        if overlap_streaming:
-            set_tuning(explicit_lbp_scatter=True)
+                 "explicit_lbp_scatter": TUNING.explicit_lbp_scatter,
+                 "overlap_bidir": TUNING.overlap_bidir}
+        if overlap_streaming is not None:
+            set_tuning(overlap_streaming=bool(overlap_streaming))
+            if overlap_streaming:
+                set_tuning(explicit_lbp_scatter=True)
+        if overlap_bidir is not None:
+            set_tuning(overlap_bidir=bool(overlap_bidir))
         return saved
 
     def _restore_tuning(saved: Dict[str, bool]) -> None:

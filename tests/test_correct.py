@@ -1,0 +1,199 @@
+"""Dynamic-correction scheduling: the drift-triggered work-stealing
+corrector over static LBP plans (``runtime/correct.py``).
+
+The contract under test (ROADMAP §Dynamic correction):
+
+  * an UNDISTURBED run performs ZERO steals and executes shares
+    bit-identical to the static seed plan (hysteresis bound);
+  * an injected mid-run slowdown trips the DriftMonitor, the corrector
+    re-assigns marginal blocks straggler -> fastest absorber, and the
+    realized finish spread converges back inside the plan's quantization
+    tolerance within the steal budget;
+  * steals move whole steal units (quantum / quantum x ring / request)
+    so corrected shares stay aligned for their plane;
+  * cooldown, budget, and the strict-improvement guard bound the event
+    count and prevent oscillation.
+"""
+
+import numpy as np
+import pytest
+
+from repro.plan import StarTopology, plan
+from repro.runtime.correct import (CorrectionPolicy, WorkStealingCorrector,
+                                   corrected_plan, simulate_correction,
+                                   steal_unit)
+
+SPEEDS = [1.0, 2.0, 4.0, 1.0, 1.0, 1.0, 2.0, 1.0]
+
+
+def star_plan(load=8192, quantum=128, objective="PCSS"):
+    topo = StarTopology(w=1.0 / np.asarray(SPEEDS),
+                        z=np.full(len(SPEEDS), 1e-9))
+    return plan(topo, load, quantum=quantum, objective=objective)
+
+
+# ---------------------------------------------------------------------------
+# policy + units + plan surgery
+# ---------------------------------------------------------------------------
+
+def test_policy_validation():
+    with pytest.raises(AssertionError, match="hysteresis"):
+        CorrectionPolicy(hysteresis=0.9)
+    with pytest.raises(AssertionError):
+        CorrectionPolicy(cooldown=0)
+    with pytest.raises(AssertionError):
+        CorrectionPolicy(persistence=0)
+
+
+def test_steal_unit_per_plane():
+    pp = star_plan(quantum=128)
+    assert steal_unit(pp, "train") == 128
+    assert steal_unit(pp, "overlap", ring=4) == 512   # whole ring tiles
+    assert steal_unit(pp, "serve") == 1               # one queued request
+    with pytest.raises(ValueError, match="plane"):
+        steal_unit(pp, "warp")
+
+
+def test_corrected_plan_rescales_and_counts():
+    pp = star_plan()
+    k = pp.k.copy()
+    src = int(np.argmax(k))
+    dst = int(np.argmin(k))
+    k[src] -= pp.quantum
+    k[dst] += pp.quantum
+    cp = corrected_plan(pp, k)
+    assert int(cp.k.sum()) == int(pp.load)
+    assert cp.meta["corrections"] == 1
+    np.testing.assert_array_equal(cp.k_real, pp.k_real)   # seed provenance
+    # finish times scale with the share ratio on the touched nodes
+    assert cp.finish_times[src] == pytest.approx(
+        pp.finish_times[src] * k[src] / pp.k[src])
+    assert corrected_plan(cp, cp.k.copy()).meta["corrections"] == 2
+
+
+def test_corrected_plan_rejects_bad_shares():
+    pp = star_plan()
+    with pytest.raises(AssertionError):
+        corrected_plan(pp, pp.k + pp.quantum)   # sum != load
+
+
+# ---------------------------------------------------------------------------
+# corrector trip discipline (hysteresis / persistence / cooldown / budget)
+# ---------------------------------------------------------------------------
+
+def test_observe_times_zero_drift_never_trips():
+    """Exact predicted busy times — and any uniform scaling of them —
+    score zero drift: a uniformly slower platform has nothing to
+    rebalance."""
+    pp = star_plan()
+    corr = WorkStealingCorrector(pp)
+    for scale in (1.0, 3.0, 0.25):
+        for _ in range(8):
+            assert corr.observe_times(pp.finish_times * scale) is None
+    assert corr.events == [] and corr.plan is pp
+
+
+def test_persistence_requires_consecutive_trips():
+    pp = star_plan()
+    pol = CorrectionPolicy(hysteresis=1.1, persistence=3)
+    corr = WorkStealingCorrector(pp, policy=pol)
+    skew = pp.finish_times.copy()
+    skew[2] *= 2.0                       # clear straggler
+    assert corr.observe_times(skew) is None      # over #1
+    assert corr.observe_times(pp.finish_times) is None   # resets the streak
+    assert corr.observe_times(skew) is None      # over #1 again
+    assert corr.observe_times(skew) is None      # over #2
+    assert corr.observe_times(skew) is not None  # over #3 -> steal
+
+
+def test_budget_and_cooldown_bound_steals():
+    pp = star_plan()
+    pol = CorrectionPolicy(hysteresis=1.05, cooldown=2, max_corrections=3)
+    corr = WorkStealingCorrector(pp, policy=pol)
+    skew_node = 2
+    events = 0
+    for _ in range(40):
+        busy = corr.plan.k * (pp.finish_times / np.maximum(pp.k, 1))
+        busy = busy.astype(float)
+        busy[skew_node] *= 4.0
+        if corr.observe_times(busy) is not None:
+            events += 1
+    assert events == len(corr.events) <= pol.max_corrections
+    # cooldown: no two events on consecutive observations
+    steps = [e.step for e in corr.events]
+    assert all(b - a >= pol.cooldown for a, b in zip(steps, steps[1:]))
+
+
+def test_steal_moves_quantum_from_straggler():
+    pp = star_plan()
+    corr = WorkStealingCorrector(
+        pp, policy=CorrectionPolicy(hysteresis=1.05))
+    w = pp.finish_times / np.maximum(pp.k, 1)
+    busy = (pp.k * w).astype(float)
+    busy[2] *= 2.0                       # node 2 (fastest, biggest share)
+    ev = None
+    while ev is None:
+        ev = corr.observe_times(busy)
+    assert ev.src == 2 and ev.amount == pp.quantum
+    assert corr.plan.k[2] == pp.k[2] - pp.quantum
+    assert int(corr.plan.k.sum()) == int(pp.load)
+    assert np.all(corr.plan.k % pp.quantum == 0)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the deterministic contention simulation
+# ---------------------------------------------------------------------------
+
+def test_simulate_undisturbed_is_bit_identical():
+    pp = star_plan()
+    res = simulate_correction(pp, slow_node=None, n_steps=32)
+    assert res["steals"] == 0
+    assert res["final_k"] == res["seed_k"]
+    assert res["makespan"] == pytest.approx(res["makespan_static"])
+
+
+def test_simulate_contention_converges_within_budget():
+    """Injected 2x mid-run slowdown on the biggest-share node: the
+    corrector trips, re-assigns, and the final per-step finish spread is
+    back inside the plan's quantization tolerance — in bounded steps,
+    with a strictly better makespan than the static plan."""
+    pp = star_plan()
+    pol = CorrectionPolicy(hysteresis=1.25, cooldown=1, max_corrections=12)
+    res = simulate_correction(pp, slow_node=2, slow_at_frac=0.3,
+                              slow_factor=2.0, n_steps=32, policy=pol)
+    assert 1 <= res["steals"] <= res["steal_bound"]
+    assert res["convergence_step"] is not None
+    assert res["unit_tolerance"] == res["tolerance"]   # unit == quantum
+    assert res["spread_final"] <= res["tolerance"] + 1e-9
+    assert res["makespan"] < res["makespan_static"]
+    assert res["final_k"] != res["seed_k"]
+    assert sum(res["final_k"]) == sum(res["seed_k"])
+    # every event drains the straggler
+    assert all(e["src"] == 2 for e in res["events"])
+
+
+def test_simulate_steal_off_leaves_plan_static():
+    pp = star_plan()
+    res = simulate_correction(pp, slow_node=2, steal=False, n_steps=32)
+    assert res["steals"] == 0 and res["final_k"] == res["seed_k"]
+    assert res["makespan"] == pytest.approx(res["makespan_static"])
+
+
+def test_simulate_overlap_plane_moves_ring_tiles():
+    """The overlap plane steals whole ring tiles (quantum x ring) so the
+    streamed per-device tiling stays divisible by the ring size."""
+    pp = star_plan(objective="overlap")
+    ring = 4
+    res = simulate_correction(pp, slow_node=2, slow_factor=2.0,
+                              plane="overlap", ring=ring, n_steps=32,
+                              policy=CorrectionPolicy(hysteresis=1.25,
+                                                      max_corrections=12))
+    assert res["unit"] == pp.quantum * ring
+    assert all(e["amount"] % pp.quantum == 0 for e in res["events"])
+    # convergence is bounded by the one-UNIT shift: ring x the quantum
+    # tolerance (the coarser unit cannot land closer than its own size)
+    assert res["unit_tolerance"] == pytest.approx(res["tolerance"] * ring,
+                                                  abs=1e-5)
+    assert res["spread_final"] <= res["unit_tolerance"] + 1e-9
+    if res["steals"]:
+        assert res["makespan"] <= res["makespan_static"] + 1e-9

@@ -255,6 +255,126 @@ def test_frontend_serve_matches_controller_run():
 
 
 # ---------------------------------------------------------------------------
+# dynamic correction: drift-triggered work stealing over the fleet plan
+# ---------------------------------------------------------------------------
+
+def saturated_workload(n=48, seed=7, stagger=0.25):
+    """Uniform shapes + tight arrivals: every replica keeps a queued
+    backlog (the stealable resource) and per-slot throughput is the clean
+    contention signal."""
+    return synthetic_workload(n, FakeModel.V, lens=(8,), news=(6,),
+                              stagger=stagger, seed=seed)
+
+
+def test_fleet_steal_zero_when_undisturbed():
+    """Hysteresis contract: a healthy fleet with stealing ON performs
+    zero steals and serves the exact greedy-oracle tokens — the corrector
+    must be invisible on the unperturbed path."""
+    reps = [fake_replica("a"), fake_replica("b"), fake_replica("c")]
+    ctrl = FleetController(reps, steal=True)
+    wl = saturated_workload()
+    for p, m, a in wl:
+        ctrl.submit(p, m, arrival=a)
+    report = ctrl.run()
+    assert report.steals == 0
+    assert not any("steal" in e for e in report.events)
+    check_oracle(wl, report.completed)
+
+
+def test_fleet_steal_corrects_contended_replica():
+    """Injected 4x contention on one replica (alive, beating its
+    heartbeat — the health plane must NOT kill it): the drift corrector
+    trips, sheds queued backlog to the healthy replicas through the
+    exactly-once requeue path, and the fleet drains strictly faster than
+    the same run without stealing."""
+    def build(steal):
+        reps = [fake_replica("a", fault=FaultPlan(slow_at=2,
+                                                  slow_factor=4)),
+                fake_replica("b"), fake_replica("c")]
+        ctrl = FleetController(reps, miss_threshold=6, steal=steal)
+        for p, m, a in saturated_workload():
+            ctrl.submit(p, m, arrival=a)
+        return ctrl
+    static = build(steal=False)
+    rs = static.run()
+    corrected = build(steal=True)
+    rc = corrected.run()
+    assert rs.kills == [] and rc.kills == []   # contended != dead
+    assert rc.steals >= 1
+    assert rc.requeues >= 1                    # shed rode the requeue path
+    assert any("steal" in e for e in rc.events)
+    assert corrected.tick_count < static.tick_count, (
+        corrected.tick_count, static.tick_count)
+    check_oracle(saturated_workload(), rc.completed)
+    check_oracle(saturated_workload(), rs.completed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       slow_factor=st.sampled_from([0, 2, 3, 4]),
+       stagger=st.sampled_from([0.25, 0.5, 1.0]),
+       n_reps=st.integers(2, 4))
+def test_fleet_steal_contention_property(seed, slow_factor, stagger,
+                                         n_reps):
+    """Property over contention schedules: (a) the steal count never
+    exceeds the fleet-lifetime budget, (b) the token stream is identical
+    to per-request greedy_generate regardless of how work moved, and
+    (c) NO steal fires when no slowdown was injected (slow_factor=0)."""
+    fault = (FaultPlan(slow_at=2, slow_factor=slow_factor)
+             if slow_factor else None)
+    names = ["a", "b", "c", "d"][:n_reps]
+    reps = [fake_replica(names[0], fault=fault)] + \
+        [fake_replica(n) for n in names[1:]]
+    ctrl = FleetController(reps, miss_threshold=6, steal=True)
+    wl = saturated_workload(seed=seed, stagger=stagger)
+    for p, m, a in wl:
+        ctrl.submit(p, m, arrival=a)
+    report = ctrl.run()
+    assert report.kills == []                  # contended replicas live
+    assert report.steals <= 8                  # default budget
+    if slow_factor == 0:
+        assert report.steals == 0, report.events
+    check_oracle(wl, report.completed)
+
+
+def test_fleet_drift_gauge_resets_baseline_on_replan():
+    """Satellite bugfix: every replan (kill/join/steal) must reset the
+    ``fleet_drift`` baseline.  A replica planned at 3x rate but serving
+    at 1x drives the gauge far past tolerance; killing it replans onto
+    the two well-modeled survivors — the gauge must read 0.0 at the
+    replan instant and return within the quantization tolerance within
+    the first post-replan observation windows instead of dragging the
+    dead plan's accumulated skew forever."""
+    reps = [fake_replica("a", 3.0, FaultPlan(kill_at=8)),
+            fake_replica("b"), fake_replica("c")]
+    ctrl = FleetController(reps, miss_threshold=3)
+    for p, m, a in saturated_workload():
+        ctrl.submit(p, m, arrival=a)
+    g = ctrl.metrics.gauge("fleet_drift")
+    replans = ctrl.metrics.counter("replans")
+    seen = replans.value
+    stale, post = None, []
+    while ctrl.tick():
+        if replans.value > seen:
+            seen = replans.value
+            stale, post = (post[-1] if post else None), []
+        post.append(g.value)
+    tol = ctrl._drift.share_tolerance()
+    assert stale is not None and stale > 2 * tol   # plan was visibly wrong
+    assert len(post) >= 4
+    assert min(post[:4]) <= tol                    # back inside tolerance
+    assert max(post[2:]) <= 2 * tol, post          # stale level never returns
+    # the reset surface itself: gauge cleared, monitor reseeded, baseline
+    # moved to the current decode counters
+    ctrl._replan()
+    assert g.value == 0.0
+    assert ctrl._drift is None or ctrl._drift.last_drift is None
+    for n in ctrl._drift_names:
+        assert ctrl._drift_base[n] == \
+            ctrl.replicas[n].progress()["decode_tokens"]
+
+
+# ---------------------------------------------------------------------------
 # acceptance: real transformer, heterogeneous fleet, kill + join
 # ---------------------------------------------------------------------------
 

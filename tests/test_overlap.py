@@ -57,9 +57,13 @@ def test_stream_modes_registered():
 
 def test_stream_bytes_match_blocking_counterparts():
     """Streaming changes the op shape, never the bytes: each stream mode's
-    per-device link bytes equal its blocking counterpart for every p."""
+    per-device link bytes equal its blocking counterpart for every p —
+    including the bidirectional half-ring variants (direction split moves
+    hops between links, never adds bytes)."""
     pairs = [("stream_scatter", "scatter"), ("stream_gather", "allreduce"),
-             ("stream_hierarchical", "hierarchical")]
+             ("stream_hierarchical", "hierarchical"),
+             ("stream_scatter_bidir", "scatter"),
+             ("stream_gather_bidir", "allreduce")]
     for out_elems in (1, 4096, 1 << 20):
         for p in (2, 4, 8, 64):
             for itemsize in (1, 2, 4):
@@ -90,6 +94,63 @@ def test_expected_ppermutes():
     assert expected_ppermutes("stream_scatter", 8) == 7
     assert expected_ppermutes("stream_gather", 8) == 14
     assert expected_ppermutes("stream_scatter", 4, fsdp_ring=2) == 4
+    # direction split never changes the op count, only the chain depth
+    assert expected_ppermutes("stream_scatter_bidir", 8) == 7
+    assert expected_ppermutes("stream_gather_bidir", 8) == 14
+
+
+# ---------------------------------------------------------------------------
+# bidirectional half-rings: hop split, depth, mode selection
+# ---------------------------------------------------------------------------
+
+def test_bidir_modes_registered():
+    for name in ("stream_scatter_bidir", "stream_gather_bidir"):
+        assert name in collectives.available_modes()
+        assert not collectives.get_mode(name).adds_device_axis
+    # out specs match the unidirectional flavour exactly
+    assert collectives.out_spec("stream_scatter_bidir", "model",
+                                ("data", None, None)) == \
+        collectives.out_spec("stream_scatter", "model", ("data", None, None))
+    assert collectives.out_spec("stream_gather_bidir", "model",
+                                ("data", None, None)) == P("data", None, None)
+
+
+def test_bidir_hop_split_and_depth():
+    """ceil((p-1)/2) forward + floor((p-1)/2) backward hops, summing to the
+    unidirectional p-1; the dependent chain halves."""
+    from repro.core.overlap import (bidir_hops, expected_direction_counts,
+                                    sequential_hop_depth)
+    for p in (2, 3, 4, 5, 8, 16):
+        hf, hb = bidir_hops(p)
+        assert hf + hb == p - 1
+        assert hf == -(-(p - 1) // 2) and hb == (p - 1) // 2
+        assert expected_direction_counts("stream_scatter_bidir", p) == (hf, hb)
+        assert expected_direction_counts("stream_gather_bidir", p) == \
+            (2 * hf, 2 * hb)
+        assert sequential_hop_depth("stream_scatter_bidir", p) == hf
+        assert sequential_hop_depth("stream_gather_bidir", p) == 2 * hf
+        assert sequential_hop_depth("stream_scatter", p) == p - 1
+    with pytest.raises(ValueError, match="bidirectional"):
+        expected_direction_counts("stream_scatter", 4)
+
+
+def test_aggregation_mode_selects_bidir_suffix():
+    """TUNING.overlap_bidir (or the explicit kwarg) appends _bidir to the
+    stream modes; blocking modes never grow the suffix."""
+    import dataclasses
+    from repro.models.lbp_linear import aggregation_mode
+    from repro.sharding.rules import Rules
+    sp = dataclasses.replace(Rules.null(), seq="model")
+    rep = Rules.null()
+    assert aggregation_mode(sp, streaming=True, bidir=True) == \
+        "stream_scatter_bidir"
+    assert aggregation_mode(rep, streaming=True, bidir=True) == \
+        "stream_gather_bidir"
+    assert aggregation_mode(sp, streaming=True, bidir=False) == \
+        "stream_scatter"
+    # bidir without streaming: the blocking modes have no bidir flavour
+    assert aggregation_mode(sp, streaming=False, bidir=True) == "scatter"
+    assert aggregation_mode(rep, streaming=False, bidir=True) == "allreduce"
 
 
 # ---------------------------------------------------------------------------
@@ -299,6 +360,107 @@ def test_overlapped_hlo_structure_and_bytes():
     assert "HLO-OK" in out
 
 
+def test_bidir_rings_match_blocking_multi_device():
+    """Bidirectional half-ring primitives == their blocking collectives on
+    8 host devices, and the bidir registry modes reproduce the reference
+    matmul for p in {2, 4, 8} (odd backward ring exercised at p=2: zero
+    backward hops)."""
+    out = run_sub("""
+        import jax, numpy as np, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
+        from repro.core import overlap
+        from repro.core.lbp_matmul import lbp_matmul, lbp_matmul_reference
+        assert len(jax.devices()) == 8
+        mesh = make_mesh((8,), ("model",))
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 64))
+
+        def rs_bidir(xl):
+            return overlap.ring_reduce_scatter_bidir(xl, "model", sd=1)
+        def rs_block(xl):
+            return jax.lax.psum_scatter(xl, "model", scatter_dimension=1,
+                                        tiled=True)
+        specs = dict(in_specs=(P(None, None, "model"),),
+                     out_specs=P(None, "model", None))
+        a = jax.jit(shard_map(rs_bidir, mesh=mesh, check_vma=False,
+                              **specs))(x)
+        b = jax.jit(shard_map(rs_block, mesh=mesh, check_vma=False,
+                              **specs))(x)
+        assert np.abs(np.asarray(a) - np.asarray(b)).max() < 1e-5
+
+        def ag_bidir(xl):
+            return overlap.ring_all_gather_bidir(xl, "model", sd=1)
+        def ag_block(xl):
+            return jax.lax.all_gather(xl, "model", axis=1, tiled=True)
+        specs = dict(in_specs=(P(None, "model", None),),
+                     out_specs=P(None, None, None))
+        a = jax.jit(shard_map(ag_bidir, mesh=mesh, check_vma=False,
+                              **specs))(x)
+        b = jax.jit(shard_map(ag_block, mesh=mesh, check_vma=False,
+                              **specs))(x)
+        assert np.abs(np.asarray(a) - np.asarray(b)).max() < 1e-5
+
+        # registry modes end-to-end, even/odd ring sizes
+        w = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+        ref = np.asarray(lbp_matmul_reference(x, w))
+        for p in (2, 4, 8):
+            msh = make_mesh((p,), ("model",))
+            for mode in ("stream_scatter_bidir", "stream_gather_bidir"):
+                got = jax.jit(lambda x, w: lbp_matmul(
+                    x, w, msh, axis="model", mode=mode))(x, w)
+                assert np.abs(np.asarray(got) - ref).max() < 1e-4, (p, mode)
+        print("BIDIR-OK")
+    """)
+    assert "BIDIR-OK" in out
+
+
+def test_bidir_hlo_structure_direction_counts():
+    """The lowered bidir lbp_row_parallel stays all-gather-free with the
+    SAME ppermute count and link bytes as the unidirectional plane, but
+    the permutes split ceil((p-1)/2) forward / floor((p-1)/2) backward —
+    the halved-chain-depth structure the mode exists for."""
+    out = run_sub("""
+        import jax, numpy as np
+        from repro.analysis.hlo_collectives import (collective_summary,
+                                                    permute_direction_counts)
+        from repro.compat import make_mesh
+        from repro.core import collectives, overlap
+        from repro.models import lbp_linear
+        from repro.models.tuning import set_tuning
+        from repro.sharding.rules import Rules
+        B, S, K, d, p = 2, 16, 64, 32, 8
+        mesh = make_mesh((p,), ("model",))
+        rules = Rules(seq="model", ff="model", mesh=mesh)
+        h = jax.random.normal(jax.random.PRNGKey(0), (B, S, K))
+        w = jax.random.normal(jax.random.PRNGKey(1), (K, d))
+        set_tuning(explicit_lbp_scatter=True, overlap_streaming=True,
+                   overlap_bidir=True)
+        assert lbp_linear.aggregation_mode(rules) == "stream_scatter_bidir"
+        comp = jax.jit(lambda h, w: lbp_linear.lbp_row_parallel(h, w, rules)
+                       ).lower(h, w).compile()
+        hlo = comp.as_text()
+        summ = collective_summary(hlo, p)
+        per_op = summ["per_op"]
+        assert "all-gather" not in per_op, per_op
+        assert "all-reduce" not in per_op, per_op
+        assert "reduce-scatter" not in per_op, per_op
+        pp = per_op["collective-permute"]
+        assert pp["count"] == overlap.expected_ppermutes(
+            "stream_scatter_bidir", p)
+        analytic = collectives.collective_bytes_per_device(
+            B * S * d, p, "stream_scatter_bidir", itemsize=4)
+        assert abs(pp["link_bytes"] - analytic) < 1e-6, (pp, analytic)
+        dirs = permute_direction_counts(hlo, p)
+        hf, hb = overlap.expected_direction_counts("stream_scatter_bidir", p)
+        assert dirs["forward"] == hf and dirs["backward"] == hb, dirs
+        assert dirs["other"] == 0, dirs
+        set_tuning(explicit_lbp_scatter=False, overlap_streaming=False,
+                   overlap_bidir=False)
+        print("BIDIR-HLO-OK")
+    """)
+    assert "BIDIR-HLO-OK" in out
+
+
 def test_train_step_restores_global_tuning():
     """make_train_step(overlap_streaming=...) must not leak the flags into
     the process-global TUNING: they are set around the trace and restored,
@@ -314,10 +476,11 @@ def test_train_step_restores_global_tuning():
     st = init_train_state(cfg, jax.random.PRNGKey(0))
     batch = {"tokens": np.zeros((2, 16), np.int32)}
     step = make_train_step(cfg, Rules.null(), AdamWConfig(), 1,
-                           overlap_streaming=True)
+                           overlap_streaming=True, overlap_bidir=True)
     jax.jit(step)(st, batch)
     assert not TUNING.overlap_streaming, "flag leaked past the trace"
     assert not TUNING.explicit_lbp_scatter, "flag leaked past the trace"
+    assert not TUNING.overlap_bidir, "flag leaked past the trace"
 
 
 def test_train_step_overlap_parity_pod_mesh():
@@ -340,9 +503,11 @@ def test_train_step_overlap_parity_pod_mesh():
                                               cfg.vocab_size)}
         mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         losses = {}
-        for name, prof, ov in [("default", "train", None),
-                               ("overlap", "train_sp", True)]:
-            set_tuning(explicit_lbp_scatter=False, overlap_streaming=False)
+        for name, prof, ov, bd in [("default", "train", None, None),
+                                   ("overlap", "train_sp", True, None),
+                                   ("bidir", "train_sp", True, True)]:
+            set_tuning(explicit_lbp_scatter=False, overlap_streaming=False,
+                       overlap_bidir=False)
             rules = make_rules(prof, mesh)
             with mesh:
                 st = init_train_state(cfg, key)
@@ -352,10 +517,13 @@ def test_train_step_overlap_parity_pod_mesh():
                     is_leaf=lambda s: isinstance(
                         s, jax.sharding.PartitionSpec)))
                 step = make_train_step(cfg, rules, opt, 2,
-                                       overlap_streaming=ov)
+                                       overlap_streaming=ov,
+                                       overlap_bidir=bd)
                 _, m = jax.jit(step)(st, batch)
             losses[name] = float(m["loss"])
         assert np.isclose(losses["default"], losses["overlap"],
+                          rtol=2e-3), losses
+        assert np.isclose(losses["default"], losses["bidir"],
                           rtol=2e-3), losses
         print("TRAIN-OK", losses)
     """)

@@ -89,7 +89,8 @@ def test_paged_pool_admission_gated_on_pages_not_rows():
 def test_paged_pool_fragmentation_reuses_freed_pages():
     """Interleaved release/claim fragments the pool: a later request's
     pages span a freed hole plus the tail — non-contiguous — and no page
-    is ever aliased."""
+    is ever aliased.  Freed pages come back LIFO (the free list is a
+    stack, not a sorted heap), so the hole is reused before the tail."""
     pool = PagedCachePool(n_pages=8, page_size=2, n_slots=4,
                           pages_per_slot=3)
     a, b, c = (_req(i, prompt_len=4, max_new=1) for i in range(3))
@@ -98,13 +99,38 @@ def test_paged_pool_fragmentation_reuses_freed_pages():
     pool.release(b)                                 # hole at {2,3}
     d = _req(3, prompt_len=2, max_new=5)            # reserve 3, claim 1
     d.slot = pool.admit(d)
-    assert pool.live_pages(3) == (2,)               # lowest freed page
+    assert pool.live_pages(3) == (2,)     # top of the LIFO stack = b's
+    # first page (releases push a request's pages reversed)
     pool.grow_to(3, 3)
     pool.grow_to(3, 5)
     # d spans the freed hole {2,3} then jumps the live c to page 6
     assert pool.live_pages(3) == (2, 3, 6)
     flat = [p for r in (a, c, d) for p in pool.live_pages(r.rid)]
     assert len(flat) == len(set(flat))              # no aliasing
+
+
+def test_paged_pool_free_pages_are_a_lifo_stack():
+    """Pin the allocator discipline: page claims pop the most recently
+    freed page first (O(1) stack, no ordering guarantee beyond LIFO),
+    and a fresh pool hands out ascending ids.  Page identity is
+    interchangeable through the table indirection, so the ONLY contract
+    is exclusivity + LIFO reuse — anything asserting globally-lowest-
+    first would be over-pinning."""
+    pool = PagedCachePool(n_pages=6, page_size=2, n_slots=3,
+                          pages_per_slot=3)
+    a = _req(0, prompt_len=4, max_new=1)            # claims {0, 1}
+    b = _req(1, prompt_len=4, max_new=1)            # claims {2, 3}
+    a.slot = pool.admit(a)
+    b.slot = pool.admit(b)
+    assert pool.live_pages(0) == (0, 1)             # fresh pool: ascending
+    assert pool.live_pages(1) == (2, 3)
+    pool.release(a)                                 # stack top: 0, then 1
+    c = _req(2, prompt_len=6, max_new=1)
+    c.slot = pool.admit(c)
+    # c reuses a's pages in a's original order, THEN falls through to the
+    # untouched tail — LIFO, not lowest-id-first across the whole pool
+    assert pool.live_pages(2) == (0, 1, 4)
+    assert pool.free_page_count == 1
 
 
 @settings(max_examples=40, deadline=None)
