@@ -195,6 +195,35 @@ def check_serve(g: Gate, fresh: dict, base: dict) -> None:
     g.equal("serve: steal counter agrees with fleet report",
             dig(fresh, "fleet.metrics.steals"),
             dig(fresh, "fleet.steals"))
+    # chaos smoke: the composite fault schedule's structural verdicts.
+    # Every transient scheduled to clear must have recovered through
+    # retry/backoff, every rescale must have restored the checkpointed
+    # state (falling back past the torn snapshots, which must have been
+    # DETECTED, not loaded), tokens must equal the single-engine
+    # reference, and nothing may be silently dropped.
+    ch = dig(fresh, "fleet.chaos")
+    for key in ("recovered_all_transients", "restores_match_rescales",
+                "token_identical", "zero_silent_drops"):
+        g.equal(f"serve: chaos gate {key}", ch["gates"][key], True)
+    g.equal("serve: chaos recoveries == injected transients",
+            ch["recoveries"], ch["transients_injected"])
+    g.equal("serve: chaos restores == rescales (kills + joins)",
+            ch["restores"], ch["kills"] + ch["joins"])
+    g.equal("serve: chaos completed everything",
+            ch["completed"], dig(fresh, "workload.requests"))
+    g.at_least("serve: chaos torn snapshots detected", ch["corrupt_shards"],
+               1)
+    g.at_least("serve: chaos retry path exercised", ch["retries"], 1)
+    g.equal("serve: chaos fault schedule vs baseline",
+            (ch["kills"], ch["joins"], ch["retries"], ch["recoveries"],
+             ch["restores"], ch["corrupt_shards"], ch["requeues"]),
+            tuple(dig(base, "fleet.chaos")[k] for k in
+                  ("kills", "joins", "retries", "recoveries", "restores",
+                   "corrupt_shards", "requeues")))
+    g.equal("serve: chaos metrics counters agree with report",
+            (ch["metrics"]["retries"], ch["metrics"]["recoveries"],
+             ch["metrics"]["restores"]),
+            (ch["retries"], ch["recoveries"], ch["restores"]))
 
 
 CHECKS: Tuple[Tuple[str, Callable[[Gate, dict, dict], None]], ...] = (

@@ -24,6 +24,12 @@ for ``benchmarks/check_regression.py`` — and the ``fleet`` section: the
 same workload through a 3-replica heterogeneous fleet with one replica
 killed mid-decode and one joining later, checked token-identical to the
 single engine (requeue counts and per-replica occupancy recorded).
+``fleet.chaos`` is the fault-domain smoke: the same workload through a
+fixed-seed COMPOSITE fault schedule (kill x transient x contention x
+torn-shard x join) with retry/backoff and live checkpoint-recovery on,
+reduced to structural verdicts (recoveries == injected transients,
+restores == rescales, token identity, zero silent drops) that
+``check_regression.py`` gates.
 """
 
 from __future__ import annotations
@@ -199,6 +205,72 @@ def run_fleet(model, workload, slots: int,
     }
 
 
+def run_chaos_scenario(model, workload, slots: int,
+                       reference: Dict[int, np.ndarray],
+                       artifacts_dir=None) -> Dict[str, object]:
+    """Chaos smoke: one fixed-seed COMPOSITE fault schedule through the
+    shared chaos harness — kill + transient(retry/backoff) + contention
+    + torn checkpoint shards + join, with live checkpoint-recovery on.
+    Tick-driven and fully fault-scheduled, so every emitted number is a
+    structural verdict for check_regression: recoveries must equal the
+    injected transients, every rescale must restore the checkpointed
+    state (falling back past the torn snapshots), tokens must equal the
+    single-engine reference, and nothing may be silently dropped."""
+    import tempfile
+    from repro.fleet import (ChaosReplicaSpec, ChaosSchedule, FaultPlan,
+                             Replica, RetryPolicy, chaos_verdicts,
+                             run_chaos)
+    from repro.obs import MetricsRegistry, Tracer, write_chrome_trace
+    from repro.serve import EngineConfig
+    max_len = max(p.shape[0] for p, _, _ in workload)
+    max_new = max(m for _, m, _ in workload)
+    ec = EngineConfig(
+        n_slots=slots, max_prompt_len=max_len, max_new_cap=max_new,
+        cache_len=max_len + max_new,
+        max_prefill_per_step=max(2, slots // 2))
+    tracer, metrics = Tracer(), MetricsRegistry()
+
+    def mk(name, rate, fault):
+        return Replica(name, model, ec, rate=rate, fault=fault,
+                       tracer=tracer, metrics=metrics)
+
+    schedule = ChaosSchedule(
+        replicas=(
+            ChaosReplicaSpec("c0", 1.0, FaultPlan(kill_at=6)),
+            ChaosReplicaSpec("c1", 2.0, FaultPlan(transient_at=3,
+                                                  transient_for=2)),
+            # contended AND tearing its shard of every snapshot from its
+            # step 2 on — restores must fall back to an intact epoch
+            ChaosReplicaSpec("c2", 1.0, FaultPlan(slow_at=2, slow_factor=2,
+                                                  torn_shard_at=2)),
+        ),
+        join_at=10, join_name="c3", join_rate=1.5, checkpoint_every=4)
+    # the co-hosted LBP state the controller snapshots/restores: one
+    # load-sized leaf (sharded by the rebalance plan) + one replicated
+    state = {"w": np.arange(1024 * 4, dtype=np.float32).reshape(1024, 4),
+             "bias": np.arange(8, dtype=np.float32)}
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        ctrl, report = run_chaos(
+            schedule, mk, workload,
+            retry=RetryPolicy(max_retries=3, backoff_base=1, backoff_cap=8),
+            checkpoint_dir=ckpt_dir, checkpoint_state=state,
+            tracer=tracer, metrics=metrics)
+    v = chaos_verdicts(schedule, report, workload, reference)
+    if artifacts_dir is not None:
+        d = pathlib.Path(artifacts_dir)
+        d.mkdir(parents=True, exist_ok=True)
+        write_chrome_trace(tracer, d / "chaos_trace.json")
+    v["metrics"] = {
+        "retries": int(metrics.counter_value("retries")),
+        "recoveries": int(metrics.counter_value("recoveries")),
+        "restores": int(metrics.counter_value("restores")),
+        "corrupt_shards": int(metrics.counter_value("corrupt_shards")),
+        "checkpoints": int(metrics.counter_value("checkpoints")),
+        "trace_events": len(tracer),
+    }
+    return v
+
+
 def run_fixed_batch(params, cfg, rules, workload, slots: int
                     ) -> Dict[str, float]:
     """The seed serving path: fixed batches, padded to the workload max."""
@@ -307,6 +379,9 @@ def main(argv=None) -> Dict:
     # uploads the whole directory)
     fleet = run_fleet(model, workload, slots, reference,
                       artifacts_dir=pathlib.Path(args.out).parent)
+    fleet["chaos"] = run_chaos_scenario(
+        model, workload, slots, reference,
+        artifacts_dir=pathlib.Path(args.out).parent)
     result = {
         "workload": {"requests": n, "slots": slots, "seed": args.seed,
                      "prompt_lens": list(lens), "max_news": list(news),
@@ -346,6 +421,13 @@ def main(argv=None) -> Dict:
           f"{fleet['joins']} join, requeued {fleet['requeued']}, "
           f"steals {fleet['steals']}, "
           f"identical={fleet['token_identical']}")
+    ch = fleet["chaos"]
+    print(f"chaos:       {ch['completed']} completed under composite "
+          f"faults: {ch['retries']} retries -> {ch['recoveries']} "
+          f"recovered, {ch['kills']} kill / {ch['joins']} join -> "
+          f"{ch['restores']} restores ({ch['corrupt_shards']} torn "
+          f"snapshots skipped), identical={ch['token_identical']}, "
+          f"gates={'all pass' if all(ch['gates'].values()) else ch['gates']}")
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     print(f"wrote {args.out}")

@@ -1,4 +1,5 @@
-from .reshard import (load_sharded, plan_offsets,  # noqa: F401
-                      reshard_state, restore_resharded, save_sharded)
+from .reshard import (CorruptShard, load_sharded, plan_offsets,  # noqa: F401
+                      reshard_state, restore_resharded, save_sharded,
+                      verify_sharded)
 from .store import (AsyncCheckpointer, latest_step, load_checkpoint,  # noqa: F401
                     save_checkpoint)

@@ -19,11 +19,21 @@ readers trust only ``done`` manifests):
         manifest.json   {"step", "done", "axis", "shares", "load",
                          "solver", "topology_kind", "leaves": {...}}
         <leaf>__shard000.npy ...   partitioned leaves, one file per device
+        <leaf>__shard000.npy.sha256  checksum sidecar, one per payload
         <leaf>.npy                 replicated leaves, whole
+
+Shard integrity: the ``done`` manifest only proves the *directory*
+rename landed; a torn or bit-flipped ``.npy`` payload inside it would
+still load as garbage (or crash deep in ``np.load``).  ``save_sharded``
+therefore writes a sha256 sidecar next to every payload file, and every
+read path verifies payload-vs-sidecar before deserializing — a mismatch,
+truncation, unreadable array, or missing file raises the typed
+``CorruptShard`` instead of handing corrupt params to the fleet.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import pathlib
@@ -34,6 +44,34 @@ import numpy as np
 
 from ..plan import PartitionPlan
 from .store import _flatten, _key_str, _write_json_atomic
+
+
+class CorruptShard(RuntimeError):
+    """A shard payload failed integrity verification (torn write,
+    truncation, bit corruption, or a missing file).  Raised by the read
+    paths instead of returning garbage; the fleet's recovery scan treats
+    it as "fall back to an older checkpoint"."""
+
+
+def _digest(path: pathlib.Path) -> str:
+    return hashlib.sha256(path.read_bytes()).hexdigest()
+
+
+def _verify_payload(d: pathlib.Path, fn: str) -> None:
+    """Payload-vs-sidecar check for one ``.npy`` file in ``d``."""
+    f = d / fn
+    if not f.exists():
+        raise CorruptShard(f"{d.name}/{fn}: shard payload missing")
+    side = d / (fn + ".sha256")
+    if not side.exists():
+        raise CorruptShard(f"{d.name}/{fn}: checksum sidecar missing "
+                           f"(pre-integrity checkpoint or torn write)")
+    want = side.read_text().strip()
+    got = _digest(f)
+    if got != want:
+        raise CorruptShard(
+            f"{d.name}/{fn}: sha256 mismatch (stored {want[:12]}…, "
+            f"recomputed {got[:12]}…) — torn or corrupt shard")
 
 
 def plan_offsets(plan: PartitionPlan) -> np.ndarray:
@@ -60,6 +98,11 @@ def save_sharded(directory, step: int, state, plan: PartitionPlan, *,
 
     offs = plan_offsets(plan)
     leaves_meta: Dict[str, Any] = {}
+
+    def _save(fn: str, arr: np.ndarray) -> None:
+        np.save(tmp / fn, arr)
+        (tmp / (fn + ".sha256")).write_text(_digest(tmp / fn) + "\n")
+
     for name, leaf in _flatten(state).items():
         arr = np.asarray(leaf)   # gathers device arrays to host
         base = name.replace("/", "__")
@@ -69,14 +112,14 @@ def save_sharded(directory, step: int, state, plan: PartitionPlan, *,
                 fn = f"{base}__shard{i:03d}.npy"
                 shard = np.take(arr, np.arange(offs[i], offs[i + 1]),
                                 axis=axis)
-                np.save(tmp / fn, shard)
+                _save(fn, shard)
                 files.append(fn)
             leaves_meta[name] = {"shape": list(arr.shape),
                                  "dtype": str(arr.dtype),
                                  "partitioned": True, "files": files}
         else:
             fn = base + ".npy"
-            np.save(tmp / fn, arr)
+            _save(fn, arr)
             leaves_meta[name] = {"shape": list(arr.shape),
                                  "dtype": str(arr.dtype),
                                  "partitioned": False, "files": [fn]}
@@ -94,16 +137,51 @@ def save_sharded(directory, step: int, state, plan: PartitionPlan, *,
 def _assemble(d: pathlib.Path, meta: Dict[str, Any],
               name: str) -> np.ndarray:
     """Full host leaf from its manifest entry (concatenate the shards
-    the saving plan produced — order is the plan's device order)."""
+    the saving plan produced — order is the plan's device order).
+    Every payload is checksum-verified before deserializing; any
+    integrity failure raises ``CorruptShard``."""
     lm = meta["leaves"].get(name)
     if lm is None:
         raise KeyError(f"checkpoint missing leaf {name}")
-    parts = [np.load(d / fn) for fn in lm["files"]]
+    parts = []
+    for fn in lm["files"]:
+        _verify_payload(d, fn)
+        try:
+            parts.append(np.load(d / fn))
+        except Exception as e:   # checksum passed but np.load choked:
+            # the sidecar itself was torn alongside the payload
+            raise CorruptShard(
+                f"{d.name}/{fn}: undeserializable shard ({e})") from e
     arr = (np.concatenate(parts, axis=int(meta["axis"]))
            if lm["partitioned"] else parts[0])
-    assert list(arr.shape) == list(lm["shape"]), (name, arr.shape,
-                                                  lm["shape"])
+    if list(arr.shape) != list(lm["shape"]):
+        raise CorruptShard(
+            f"{d.name}: leaf {name} reassembled to {list(arr.shape)}, "
+            f"manifest recorded {lm['shape']}")
     return arr
+
+
+def verify_sharded(directory, step: int) -> int:
+    """Checksum-verify every payload file of a sharded checkpoint
+    without deserializing any of them.  Returns the number of files
+    verified; raises ``CorruptShard`` on the first integrity failure
+    (missing payload, missing sidecar, digest mismatch)."""
+    d = pathlib.Path(directory) / f"step_{step:08d}"
+    if not d.exists():
+        raise CorruptShard(f"step_{step:08d}: checkpoint directory missing")
+    try:
+        meta = json.loads((d / "manifest.json").read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        raise CorruptShard(f"step_{step:08d}: unreadable manifest "
+                           f"({e})") from e
+    if not meta.get("done"):
+        raise CorruptShard(f"step_{step:08d}: manifest not marked done")
+    n = 0
+    for lm in meta["leaves"].values():
+        for fn in lm["files"]:
+            _verify_payload(d, fn)
+            n += 1
+    return n
 
 
 def load_sharded(directory, step: int, target_tree) -> Tuple[int, Any]:

@@ -1,23 +1,35 @@
 """Fleet runtime: N serving replicas behind one async service.
 
-Three explicit layers (ROADMAP "Fleet runtime"):
+Four explicit layers (ROADMAP "Fleet runtime"):
 
-  frontend.py    async submit / stream / drain with backpressure
+  frontend.py    async submit / stream / drain with backpressure and
+                 typed graceful degradation (FleetDegraded + retry-after,
+                 drain deadline, stream liveness)
   controller.py  routing (CapacityPlanner), health, rescale via
                  runtime.rebalance drop_devices/join_devices,
-                 exactly-once requeue of a dead replica's work
+                 exactly-once requeue of a dead replica's work,
+                 transient retry/backoff (RetryPolicy) and live
+                 checkpoint-recovery through checkpoint.reshard
   replica.py     one ServingEngine behind a narrow step-callable
-                 surface, with heartbeat + fault injection
+                 surface, with heartbeat + deterministic fault injection
+                 (kill / hang / slow / transient / torn-shard)
+  chaos.py       the deterministic chaos harness: composite fault
+                 schedules + structural verdicts, shared by tests,
+                 benchmarks and examples
 
 The fleet oracle invariant: under greedy decoding the fleet's tokens
-are byte-identical to per-request ``greedy_generate`` for ANY kill/join
-schedule, because each engine is oracle-identical and the controller
-requeues (never double-harvests) a dead replica's outstanding work.
+are byte-identical to per-request ``greedy_generate`` for ANY
+recoverable fault schedule, because each engine is oracle-identical and
+the controller requeues (never double-harvests) a dead replica's
+outstanding work; unrecoverable schedules fail loudly with typed errors
+(``FleetDegraded``, ``CorruptShard``), never by hanging or dropping.
 """
 
-from .controller import (FleetController, FleetReport,  # noqa: F401
-                         FleetRequest)
+from .chaos import (ChaosReplicaSpec, ChaosSchedule,  # noqa: F401
+                    chaos_verdicts, run_chaos)
+from .controller import (FleetController, FleetDegraded,  # noqa: F401
+                         FleetReport, FleetRequest, RetryPolicy)
 from .frontend import (FleetClosed, FleetFrontend,  # noqa: F401
                        UnknownRequest)
 from .replica import (FaultPlan, Replica, ReplicaDead,  # noqa: F401
-                      build_engine)
+                      TransientError, build_engine)

@@ -1,0 +1,178 @@
+"""Deterministic chaos harness: composite fault schedules + verdicts.
+
+One harness, three consumers (tests, ``benchmarks/serve.py``'s chaos
+smoke scenario, ``examples/chaos_fleet.py``): build a fleet whose
+replicas carry arbitrary ``FaultPlan`` compositions (kill x hang x slow
+x transient x torn-shard x join timing), drive it to drain, and reduce
+the run to STRUCTURAL verdicts — quantities that are deterministic
+functions of the schedule, never of the wall clock:
+
+  * ``token_identical`` / ``silent_drops``: the fleet oracle — every
+    submitted request completes with tokens byte-identical to the
+    single-engine greedy reference, under any recoverable schedule;
+  * ``recoveries`` vs ``transients_injected``: every transient incident
+    that was scheduled to clear actually cleared through retry/backoff
+    (none leaked into the kill path);
+  * ``restores`` vs rescales: every membership change re-sliced the
+    checkpointed state onto the new plan (when checkpointing is on);
+  * ``corrupt_shards``: torn snapshots were detected and skipped, never
+    loaded.
+
+Because every fault is tick-addressed and every timestamp comes from
+the controller's tick counter, re-running the same schedule replays
+exactly — the byte-identical-trace property the tier-1 tests pin.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .controller import FleetController, FleetReport, RetryPolicy
+from .replica import FaultPlan, Replica
+
+__all__ = ["ChaosReplicaSpec", "ChaosSchedule", "chaos_verdicts",
+           "run_chaos"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosReplicaSpec:
+    """One fleet member of a chaos schedule: identity + capacity +
+    (optionally) the deterministic faults it will suffer."""
+
+    name: str
+    rate: float = 1.0
+    fault: Optional[FaultPlan] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosSchedule:
+    """A composite, fully tick-addressed fault schedule.
+
+    ``checkpoint_every`` > 0 additionally asks ``run_chaos`` to enable
+    the controller's live checkpoint-recovery plane (the caller supplies
+    the directory and state)."""
+
+    replicas: Tuple[ChaosReplicaSpec, ...]
+    join_at: Optional[int] = None
+    join_name: str = "joiner"
+    join_rate: float = 1.0
+    checkpoint_every: int = 0
+
+    def _count(self, pred) -> int:
+        return sum(1 for s in self.replicas
+                   if s.fault is not None and pred(s.fault))
+
+    @property
+    def injected_kills(self) -> int:
+        return self._count(lambda f: f.kill_at is not None)
+
+    @property
+    def injected_hangs(self) -> int:
+        return self._count(lambda f: f.hang_at is not None
+                           and f.kill_at is None)
+
+    @property
+    def injected_slows(self) -> int:
+        return self._count(lambda f: f.slow_at is not None)
+
+    @property
+    def injected_transients(self) -> int:
+        """Transient incidents scheduled to CLEAR: a transient on a
+        replica that also dies (kill/hang) may never recover — only
+        transient-bearing replicas with no fatal fault are counted as
+        must-recover."""
+        return self._count(lambda f: f.transient_at is not None
+                           and f.kill_at is None and f.hang_at is None)
+
+    @property
+    def injected_torn(self) -> int:
+        return self._count(lambda f: f.torn_shard_at is not None)
+
+
+def run_chaos(schedule: ChaosSchedule,
+              make_replica: Callable[[str, float, Optional[FaultPlan]],
+                                     Replica],
+              workload: Sequence[Tuple[np.ndarray, int, float]], *,
+              miss_threshold: int = 3,
+              retry: Optional[RetryPolicy] = None,
+              min_alive: int = 1,
+              checkpoint_dir=None, checkpoint_state: Any = None,
+              virtual_k: int = 1024,
+              tracer=None, metrics=None,
+              max_ticks: int = 200_000
+              ) -> Tuple[FleetController, FleetReport]:
+    """Build the schedule's fleet, submit the workload, drive to drain.
+
+    ``make_replica(name, rate, fault)`` supplies the engine flavor (the
+    tests' FakeModel, the benchmarks' real transformer) so the harness
+    stays model-agnostic.  Returns (controller, report); a schedule that
+    cannot drain raises the controller's typed error (``FleetDegraded``,
+    ``CorruptShard``) — loud, never a hang, bounded by ``max_ticks``."""
+    reps = [make_replica(s.name, s.rate, s.fault)
+            for s in schedule.replicas]
+    ctrl = FleetController(
+        reps, miss_threshold=miss_threshold, retry=retry,
+        min_alive=min_alive,
+        checkpoint_dir=checkpoint_dir if schedule.checkpoint_every else None,
+        checkpoint_state=checkpoint_state if schedule.checkpoint_every
+        else None,
+        checkpoint_every=schedule.checkpoint_every,
+        virtual_k=virtual_k, tracer=tracer, metrics=metrics)
+    if schedule.join_at is not None:
+        ctrl.schedule_join(
+            make_replica(schedule.join_name, schedule.join_rate, None),
+            at_tick=schedule.join_at)
+    for prompt, max_new, arrival in workload:
+        ctrl.submit(prompt, max_new, arrival=arrival)
+    return ctrl, ctrl.run(max_ticks=max_ticks)
+
+
+def chaos_verdicts(schedule: ChaosSchedule, report: FleetReport,
+                   workload: Sequence[Tuple[np.ndarray, int, float]],
+                   reference: Optional[Dict[int, np.ndarray]] = None
+                   ) -> Dict[str, Any]:
+    """Reduce a chaos run to its structural verdicts.
+
+    ``reference`` maps fleet rid (submission order) -> expected greedy
+    tokens; without it the token-identity verdict is skipped (None)."""
+    n = len(workload)
+    silent_drops = n - report.n_completed
+    token_identical: Optional[bool] = None
+    if reference is not None:
+        token_identical = (
+            set(report.completed) == set(reference)
+            and all(np.array_equal(report.completed[r], reference[r])
+                    for r in reference))
+    rescales = len(report.kills) + len(report.joins)
+    ckpt_on = schedule.checkpoint_every > 0
+    return {
+        "requests": n,
+        "completed": report.n_completed,
+        "silent_drops": silent_drops,
+        "token_identical": token_identical,
+        "ticks": report.ticks,
+        "requeues": report.requeues,
+        "kills": len(report.kills),
+        "joins": len(report.joins),
+        "retries": report.retries,
+        "recoveries": report.recoveries,
+        "restores": report.restores,
+        "corrupt_shards": report.corrupt_shards,
+        "transients_injected": schedule.injected_transients,
+        "torn_injected": schedule.injected_torn,
+        "gates": {
+            # every scheduled-to-clear transient actually recovered
+            # through retry/backoff (none escalated to a kill)
+            "recovered_all_transients":
+                report.recoveries == schedule.injected_transients,
+            # every membership change restored the checkpointed state
+            # onto its new plan (vacuously true with checkpointing off)
+            "restores_match_rescales":
+                (report.restores == rescales) if ckpt_on else True,
+            "token_identical": bool(token_identical),
+            "zero_silent_drops": silent_drops == 0,
+        },
+    }

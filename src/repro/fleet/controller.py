@@ -30,15 +30,31 @@ Exactly-once tokens under rescale (the fleet oracle invariant):
 Time is the controller's tick counter (injectable by construction: the
 async front-end advances it explicitly, tests drive it directly), never
 the wall clock.
+
+Fault domains: step failures are CLASSIFIED, not uniformly fatal —
+``TransientError`` retries on the same replica with capped exponential
+backoff on the tick clock, and only exhausting the ``RetryPolicy``
+budget escalates to the kill + exactly-once-requeue path that
+``ReplicaDead`` and heartbeat-miss take immediately.  When checkpointing
+is configured, every membership change additionally restores the
+co-hosted LBP state from the newest INTACT resharding snapshot,
+re-sliced onto the new plan (``CorruptShard`` snapshots are skipped; the
+typed error escapes only when no epoch survives).  A fleet below its
+``min_alive`` floor reports ``degraded`` — the frontend's signal to
+reject new work with a typed ``FleetDegraded`` + retry-after instead of
+queueing unboundedly.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+import pathlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..checkpoint.reshard import (CorruptShard, restore_resharded,
+                                  save_sharded)
 from ..obs.drift import DriftMonitor
 from ..obs.metrics import MetricsRegistry
 from ..obs.trace import NullTracer
@@ -46,7 +62,40 @@ from ..runtime.correct import CorrectionPolicy, WorkStealingCorrector
 from ..runtime.rebalance import (RebalancePlan, drop_devices, join_devices,
                                  plan_rebalance)
 from ..serve.engine.planner import CapacityPlanner
-from .replica import Replica, ReplicaDead
+from .replica import Replica, ReplicaDead, TransientError
+
+
+class FleetDegraded(RuntimeError):
+    """The fleet is below its alive-capacity floor (or has lost every
+    replica with work outstanding).  ``retry_after`` is the tick delta
+    until the next scheduled join — the caller's hint for when capacity
+    returns — or None when no recovery is scheduled.  A typed rejection
+    instead of unbounded queueing / an unbounded hang: the graceful-
+    degradation contract."""
+
+    def __init__(self, message: str, *, retry_after: Optional[int] = None):
+        super().__init__(message)
+        self.retry_after = retry_after
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Capped exponential backoff for TRANSIENT step failures, entirely
+    on the tick clock (zero wall-clock reads, so retry schedules replay
+    deterministically).  The n-th consecutive failure of a replica backs
+    it off ``min(backoff_cap, backoff_base * 2**(n-1))`` ticks; a
+    successful step resets the incident.  Once a single incident exceeds
+    ``max_retries`` failures, the controller escalates to the fatal
+    path: kill + exactly-once requeue, same as a crash."""
+
+    max_retries: int = 3
+    backoff_base: int = 1
+    backoff_cap: int = 8
+
+    def backoff(self, attempt: int) -> int:
+        """Ticks to wait after the ``attempt``-th failure (1-based)."""
+        return min(int(self.backoff_cap),
+                   int(self.backoff_base) << max(0, attempt - 1))
 
 
 @dataclasses.dataclass
@@ -73,6 +122,10 @@ class FleetReport:
     decode_tokens: Dict[str, int]
     events: List[str]
     steals: int = 0                      # drift-triggered work steals
+    retries: int = 0                     # transient failures retried
+    recoveries: int = 0                  # transient incidents that cleared
+    restores: int = 0                    # checkpoint restores on rescale
+    corrupt_shards: int = 0              # torn snapshots skipped on restore
 
     @property
     def n_completed(self) -> int:
@@ -85,6 +138,10 @@ class FleetController:
                  virtual_k: int = 1024, mode: str = "PCCS",
                  steal: bool = False,
                  steal_policy: Optional[CorrectionPolicy] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 min_alive: int = 1,
+                 checkpoint_dir=None, checkpoint_state: Any = None,
+                 checkpoint_every: int = 0,
                  tracer=None, metrics=None):
         names = [r.name for r in replicas]
         if len(set(names)) != len(names):
@@ -110,6 +167,17 @@ class FleetController:
         self._owner: Dict[Tuple[str, int], int] = {}  # (name, local) -> rid
         # rescale bookkeeping
         self.requeues = 0
+        # retry/backoff plane: transient step failures back their
+        # replica off on the TICK clock; exhausting the budget escalates
+        # to the fatal kill + exactly-once-requeue path
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.retries = 0
+        self.recoveries = 0
+        self._retry_attempts: Dict[str, int] = {}   # current incident
+        self._retry_not_before: Dict[str, int] = {}  # name -> earliest tick
+        # graceful degradation: below this many alive replicas the
+        # frontend rejects new work with a typed FleetDegraded
+        self.min_alive = max(1, int(min_alive))
         # dynamic correction (runtime.correct): drift-tripped replicas
         # shed queued work through the exactly-once requeue path
         self.steal = bool(steal)
@@ -129,11 +197,110 @@ class FleetController:
             mode="PCSS")
         self._route_seq: List[str] = []
         self._route_pos = 0
+        # live checkpoint-recovery: periodic resharding snapshots of the
+        # co-hosted state (the LBP params the rebalance plan splits),
+        # restored re-sliced onto every new membership's plan
+        self.checkpoint_dir = (pathlib.Path(checkpoint_dir)
+                               if checkpoint_dir is not None else None)
+        self._ckpt_state = checkpoint_state
+        self.checkpoint_every = int(checkpoint_every)
+        self._ckpt_steps: List[int] = []
+        self.restores = 0
+        self.corrupt_shards = 0
+        self.shards: Optional[List[Any]] = None  # per-member restored views
         self._replan()
+        if self._ckpt_enabled:
+            self._save_checkpoint()   # the epoch-0 snapshot: a kill at
+            # ANY tick has something intact to restore from
 
     # -- membership ------------------------------------------------------
     def alive_names(self) -> List[str]:
         return [n for n in self._rb_names if self.replicas[n].alive]
+
+    @property
+    def degraded(self) -> bool:
+        """Alive capacity below the configured floor — the frontend's
+        typed-rejection signal (and the state a scheduled join exits)."""
+        return len(self.alive_names()) < self.min_alive
+
+    def retry_after_hint(self) -> Optional[int]:
+        """Ticks until the next scheduled join restores capacity, or
+        None when no recovery is scheduled — the degraded rejection's
+        retry-after."""
+        if not self._join_schedule:
+            return None
+        nxt = min(at for at, _ in self._join_schedule)
+        return max(1, nxt - self.tick_count)
+
+    # -- checkpoint-recovery plane ----------------------------------------
+    @property
+    def _ckpt_enabled(self) -> bool:
+        return (self.checkpoint_dir is not None
+                and self._ckpt_state is not None
+                and self._rb_names != [])
+
+    def _save_checkpoint(self) -> None:
+        """One resharding snapshot of the co-hosted state under the
+        CURRENT rebalance plan (one shard per member replica), then the
+        torn-shard fault injection: a member whose ``FaultPlan`` marks
+        torn shards gets its payload of THIS snapshot truncated — the
+        deterministic stand-in for a mid-write crash."""
+        step = self.tick_count
+        plan = self.rebalance.plan
+        d = save_sharded(self.checkpoint_dir, step, self._ckpt_state, plan)
+        if step not in self._ckpt_steps:
+            self._ckpt_steps.append(step)
+        for i, name in enumerate(self._rb_names):
+            f = self.replicas[name].fault
+            if (f.torn_shard_at is not None
+                    and self.replicas[name].ticks >= f.torn_shard_at):
+                for fn in sorted(d.glob(f"*__shard{i:03d}.npy")):
+                    data = fn.read_bytes()
+                    fn.write_bytes(data[:max(1, len(data) // 2)])
+        self.tracer.event("checkpoint", track="controller", lane="recovery",
+                          step=step, members=list(self._rb_names))
+        self.metrics.counter("checkpoints").inc()
+
+    def _restore_on_rescale(self, cause: str) -> None:
+        """The live-recovery path: after a membership change re-solved
+        the rebalance plan, re-slice the checkpointed state onto the new
+        members.  Scans snapshots newest-first; a torn/corrupt one is
+        counted, traced, and skipped (fall back to the previous intact
+        epoch).  Only when EVERY snapshot is corrupt does the typed
+        ``CorruptShard`` escape — loud failure, never garbage params."""
+        if not self._ckpt_enabled:
+            return
+        plan = self.rebalance.plan
+        last_err: Optional[CorruptShard] = None
+        for step in sorted(self._ckpt_steps, reverse=True):
+            try:
+                _, full, shards = restore_resharded(
+                    self.checkpoint_dir, step, self._ckpt_state, plan)
+            except CorruptShard as e:
+                last_err = e
+                self.corrupt_shards += 1
+                self.metrics.counter("corrupt_shards").inc()
+                self.tracer.event("corrupt_shard", track="controller",
+                                  lane="recovery", step=step, error=str(e))
+                self.events.append(
+                    f"tick {self.tick_count}: snapshot step {step} corrupt "
+                    f"({e}), falling back")
+                continue
+            self.shards = shards
+            self.restores += 1
+            self.metrics.counter("restores").inc()
+            self.tracer.event("restore", track="controller", lane="recovery",
+                              step=step, cause=cause,
+                              shares=[int(k) for k in plan.k])
+            self.events.append(
+                f"tick {self.tick_count}: restored snapshot step {step} "
+                f"re-sliced onto {len(self._rb_names)} members ({cause})")
+            # re-seed a snapshot under the NEW plan so the next rescale
+            # restores from this epoch, not an older membership's
+            self._save_checkpoint()
+            return
+        raise last_err if last_err is not None else CorruptShard(
+            f"no snapshot to restore for {cause}")
 
     def schedule_kill(self, name: str, at_tick: int) -> None:
         """Declare ``name`` dead at ``at_tick`` (operator-initiated drain
@@ -238,6 +405,9 @@ class FleetController:
         self.events.append(
             f"tick {self.tick_count}: kill {name} ({reason}), requeued "
             f"{len(lost)}")
+        # the dead replica's retry state dies with it
+        self._retry_attempts.pop(name, None)
+        self._retry_not_before.pop(name, None)
         # shrink the live layer split through runtime.rebalance
         idx = self._rb_names.index(name)
         speeds = [self.replicas[n].rate for n in self._rb_names]
@@ -246,6 +416,9 @@ class FleetController:
                 self.rebalance.assignment, [idx], speeds, quantum=1,
                 mode="PCSS")
         self._rb_names.pop(idx)
+        # live recovery: the dead member's checkpointed shard rows land
+        # re-sliced on the survivors' new plan (ROADMAP item 3's gap)
+        self._restore_on_rescale(f"kill:{name}")
         self._replan()
 
     def _join(self, replica: Replica) -> None:
@@ -267,6 +440,9 @@ class FleetController:
         self.events.append(f"tick {self.tick_count}: join {replica.name}")
         self.tracer.event("join", track="controller", lane="membership",
                           replica=replica.name)
+        # live recovery onto the GROWN fleet: the joiner picks up its
+        # re-sliced share of the checkpointed state
+        self._restore_on_rescale(f"join:{replica.name}")
         self._replan()
 
     # -- dynamic correction ------------------------------------------------
@@ -415,6 +591,32 @@ class FleetController:
                               requeues=fr.n_requeues)
         self._unassigned = rest
 
+    # -- retry/backoff ------------------------------------------------------
+    def _transient(self, name: str, t: int, err: TransientError) -> None:
+        """Classify-and-retry: a transient step failure backs the
+        replica off (capped exponential, tick clock); the failed attempt
+        itself proves the process responsive, so the heartbeat is
+        stamped — only BUDGET exhaustion escalates to the fatal
+        heartbeat-death / kill + exactly-once-requeue path."""
+        rep = self.replicas[name]
+        n = self._retry_attempts.get(name, 0) + 1
+        self._retry_attempts[name] = n
+        self.metrics.counter("transient_errors").inc()
+        if n > self.retry.max_retries:
+            self._kill(name, reason=f"retry-exhausted after "
+                                    f"{self.retry.max_retries} retries: {err}")
+            return
+        backoff = self.retry.backoff(n)
+        self._retry_not_before[name] = t + backoff
+        rep.last_heartbeat = t
+        self.retries += 1
+        self.metrics.counter("retries").inc()
+        self.tracer.event("retry", track="controller", lane="health",
+                          replica=name, attempt=n, backoff=backoff)
+        self.events.append(
+            f"tick {t}: transient on {name} (attempt {n}/"
+            f"{self.retry.max_retries}), backoff {backoff}")
+
     # -- the fleet iteration ------------------------------------------------
     def tick(self) -> bool:
         """One fleet iteration: apply scheduled rescale events, dispatch
@@ -427,16 +629,38 @@ class FleetController:
         for at, rep in [e for e in self._join_schedule if e[0] <= t]:
             self._join_schedule.remove((at, rep))
             self._join(rep)
+        if (self._ckpt_enabled and self.checkpoint_every > 0
+                and t > 0 and t % self.checkpoint_every == 0):
+            self._save_checkpoint()
         self._dispatch()
         for name in list(self.replicas):
             rep = self.replicas[name]
             if not rep.alive:
                 continue
+            nb = self._retry_not_before.get(name)
+            if nb is not None and t < nb:
+                # deliberately idle under backoff: the controller is not
+                # asking it to work, so stamp the heartbeat itself — a
+                # backoff must never be misread as a hang
+                rep.last_heartbeat = t
+                continue
             try:
                 rep.step(t)
+            except TransientError as e:
+                self._transient(name, t, e)
+                continue
             except ReplicaDead as e:
                 self._kill(name, reason=str(e))
                 continue
+            if self._retry_attempts.pop(name, None) is not None:
+                # a successful step closes the incident
+                self._retry_not_before.pop(name, None)
+                self.recoveries += 1
+                self.metrics.counter("recoveries").inc()
+                self.tracer.event("recover", track="controller",
+                                  lane="health", replica=name)
+                self.events.append(
+                    f"tick {t}: {name} recovered from transient incident")
             for local_rid, toks in rep.harvest().items():
                 rid = self._owner.get((name, local_rid))
                 if rid is not None and rid not in self.results:
@@ -476,9 +700,10 @@ class FleetController:
         self.tick_count += 1
         if self.has_work and not self.alive_names() \
                 and not self._join_schedule:
-            raise RuntimeError(
+            raise FleetDegraded(
                 f"fleet has {self.depth} unfinished requests but no live "
-                f"replica and no scheduled join — the work cannot drain")
+                f"replica and no scheduled join — the work cannot drain",
+                retry_after=None)
         return self.has_work or bool(self._join_schedule
                                      or self._kill_schedule)
 
@@ -500,4 +725,6 @@ class FleetController:
             completed=dict(self.results), ticks=self.tick_count,
             requeues=self.requeues, kills=list(self.kills),
             joins=list(self.joins), occupancy=occ, decode_tokens=dec,
-            events=list(self.events), steals=self.steals)
+            events=list(self.events), steals=self.steals,
+            retries=self.retries, recoveries=self.recoveries,
+            restores=self.restores, corrupt_shards=self.corrupt_shards)

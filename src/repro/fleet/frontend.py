@@ -18,16 +18,25 @@ Streaming is exactly-once across rescale: ``stream`` keeps a ``sent``
 cursor into the request's token prefix, and because a requeued request
 regenerates an identical prefix (greedy oracle), the cursor never skips
 or repeats a token even if the replica serving it is killed mid-stream.
+
+Graceful degradation (the typed-failure contract): when the fleet's
+alive capacity is below the controller's ``min_alive`` floor, ``submit``
+rejects with ``FleetDegraded`` carrying a retry-after hint (ticks until
+the next scheduled join) instead of queueing work nobody can serve;
+``drain`` takes an optional tick ``deadline`` so a hung fleet can never
+hang the caller; and a ``stream`` whose fleet closed (drain finished,
+failed, or hit its deadline) with the request still incomplete raises
+``FleetDegraded`` rather than awaiting tokens that can never arrive.
 """
 
 from __future__ import annotations
 
 import asyncio
-from typing import AsyncIterator, Dict, List, Sequence, Tuple
+from typing import AsyncIterator, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .controller import FleetController, FleetReport
+from .controller import FleetController, FleetDegraded, FleetReport
 
 
 class UnknownRequest(KeyError):
@@ -62,23 +71,48 @@ class FleetFrontend:
         self.controller.tick()
         await asyncio.sleep(0)
 
+    def _reject_if_degraded(self) -> None:
+        c = self.controller
+        if not c.degraded:
+            return
+        ra = c.retry_after_hint()
+        c.metrics.counter("degraded_rejections").inc()
+        c.tracer.event("degraded_reject", track="controller", lane="health",
+                       alive=len(c.alive_names()), floor=c.min_alive,
+                       retry_after=ra)
+        raise FleetDegraded(
+            f"fleet degraded: {len(c.alive_names())} alive < floor "
+            f"{c.min_alive}"
+            + (f", capacity returns in ~{ra} ticks (scheduled join)"
+               if ra is not None else ", no recovery scheduled"),
+            retry_after=ra)
+
     async def submit(self, prompt, max_new: int,
                      arrival: float = 0.0) -> int:
         """Enqueue a request, suspending while the fleet is saturated.
-        Raises ``FleetClosed`` once ``drain`` has completed."""
+        Raises ``FleetClosed`` once ``drain`` has completed, and
+        ``FleetDegraded`` (with ``retry_after``) while alive capacity is
+        below the controller's floor — a typed rejection the producer
+        can retry, instead of work queueing onto a fleet that cannot
+        serve it."""
         if self._closed:
             raise FleetClosed(
                 "submit after drain: this front-end's fleet has been "
                 "drained and accepts no further requests")
+        self._reject_if_degraded()
         while self.depth >= self.max_pending:
             await self._advance()
+            self._reject_if_degraded()
         return self.controller.submit(prompt, max_new, arrival=arrival)
 
     async def stream(self, rid: int) -> AsyncIterator[int]:
         """Yield ``rid``'s tokens as they land on the host, exactly once
         each, driving the fleet forward while waiting.  Raises
         ``UnknownRequest`` for a rid the fleet never issued (streaming an
-        unknown rid would otherwise tick forever)."""
+        unknown rid would otherwise tick forever), and ``FleetDegraded``
+        when the fleet closed — drain finished, failed, or timed out —
+        with this request still incomplete: its tokens can never arrive,
+        so the streamer terminates loudly instead of hanging."""
         if rid not in self.controller.requests:
             raise UnknownRequest(
                 f"rid {rid} was never issued by this fleet")
@@ -91,23 +125,48 @@ class FleetFrontend:
             done = self.controller.results.get(rid)
             if done is not None and sent >= done.shape[0]:
                 return
+            if self._closed:
+                raise FleetDegraded(
+                    f"stream({rid}): fleet closed with the request "
+                    f"incomplete ({sent} tokens streamed) — its replica "
+                    f"died or drain gave up, and no survivor will finish "
+                    f"it", retry_after=None)
             await self._advance()
 
-    async def drain(self) -> FleetReport:
+    async def drain(self, *, deadline: Optional[int] = None) -> FleetReport:
         """Tick until every submitted request has completed, then close
-        the front-end (later ``submit`` calls raise ``FleetClosed``)."""
-        while self.controller.tick():
-            await asyncio.sleep(0)
-        self._closed = True
+        the front-end (later ``submit`` calls raise ``FleetClosed``).
+
+        ``deadline`` bounds the drain to that many ticks: a fleet that
+        cannot finish (e.g. a hung replica below the heartbeat radar)
+        raises ``FleetDegraded`` instead of hanging the caller forever.
+        The front-end closes on EVERY exit path — success, deadline, or
+        a controller failure mid-drain — so concurrent streamers observe
+        the closure and terminate instead of awaiting dead tokens."""
+        start = self.controller.tick_count
+        try:
+            while self.controller.tick():
+                if (deadline is not None
+                        and self.controller.tick_count - start >= deadline):
+                    raise FleetDegraded(
+                        f"drain deadline: {self.controller.depth} requests "
+                        f"still unfinished after {deadline} ticks — the "
+                        f"fleet is wedged, not slow", retry_after=None)
+                await asyncio.sleep(0)
+        finally:
+            self._closed = True
         return self.controller.report()
 
     # -- sync convenience ---------------------------------------------------
     def serve(self, workload: Sequence[Tuple[np.ndarray, int, float]],
-              *, stream_rids: Sequence[int] = ()) -> FleetReport:
+              *, stream_rids: Sequence[int] = (),
+              deadline: Optional[int] = None) -> FleetReport:
         """Submit a [(prompt, max_new, arrival), ...] trace with
         backpressure, drain, and return the report.  ``stream_rids``
         additionally consumes those requests through ``stream`` (tokens
-        land in ``self.streamed``) to exercise the concurrent path."""
+        land in ``self.streamed``) to exercise the concurrent path.
+        ``deadline`` forwards to ``drain``; when it fires, the streamer
+        tasks are cancelled before the typed error propagates."""
         self.streamed: Dict[int, List[int]] = {}
 
         async def consume(rid: int) -> None:
@@ -122,7 +181,13 @@ class FleetFrontend:
             tasks = [asyncio.ensure_future(consume(r))
                      for r in stream_rids]
             await produce()
-            report = await self.drain()
+            try:
+                report = await self.drain(deadline=deadline)
+            except BaseException:
+                for t in tasks:
+                    t.cancel()
+                await asyncio.gather(*tasks, return_exceptions=True)
+                raise
             for t in tasks:
                 await t
             return report

@@ -9,10 +9,14 @@ ticks is declared dead exactly like one whose step raised.
 Fault injection lives here because rescale is THE correctness surface of
 a fleet: ``FaultPlan.kill_at`` makes the step raise ``ReplicaDead`` (the
 crash path), ``hang_at`` makes it go silent without raising (the
-heartbeat-miss path) — both must leave the fleet's token stream
-byte-identical to the no-fault run, which the greedy oracle guarantees
-as long as the controller requeues everything the dead replica still
-owed (``Replica.outstanding``) and never harvests it again.
+heartbeat-miss path), ``transient_at`` makes it raise ``TransientError``
+for a bounded window (the retry/backoff path), ``slow_at`` contends it
+(the drift-corrector path), and ``torn_shard_at`` corrupts its fleet
+checkpoint shards (the shard-integrity path).  Every fault must leave
+the fleet's token stream byte-identical to the no-fault run, which the
+greedy oracle guarantees as long as the controller requeues everything
+a dead replica still owed (``Replica.outstanding``) and never harvests
+it again — and retries only steps that did no engine work.
 
 ``build_engine`` is the one sanctioned ``ServingEngine`` constructor
 call site outside ``launch/``: CI grep-gates direct construction so
@@ -43,12 +47,21 @@ def build_engine(model, config: EngineConfig = EngineConfig(),
 
 
 class ReplicaDead(RuntimeError):
-    """A replica's step crashed (fault injection or a real failure)."""
+    """A replica's step crashed fatally (fault injection or a real
+    failure).  The controller's only recovery is kill + requeue."""
+
+
+class TransientError(RuntimeError):
+    """A replica's step failed *recoverably* (injected transient, or a
+    real blip: OOM-retry, preempted host, flaky interconnect).  The
+    engine state is untouched — the step did no work — so the controller
+    may retry the same replica after a backoff instead of killing it."""
 
 
 @dataclasses.dataclass
 class FaultPlan:
-    """Deterministic fault schedule, in *replica-local* step counts.
+    """Deterministic fault schedule, in *replica-local* step counts —
+    tick-addressed so any composite schedule replays exactly.
 
     kill_at: the step raises ``ReplicaDead`` once this many steps ran.
     hang_at: the step silently stops (no heartbeat, no progress) — the
@@ -57,12 +70,25 @@ class FaultPlan:
     engine work (the others beat the heartbeat and return idle) — a
     CONTENDED replica: alive and healthy, at 1/slow_factor throughput.
     The drift corrector, not the health plane, must handle this one.
+    transient_at: steps ``[transient_at, transient_at + transient_for)``
+    raise ``TransientError`` without touching the engine, then the fault
+    clears — the retry/backoff path's case.  Each retry attempt advances
+    the local step clock, so ``transient_for`` is the number of FAILING
+    attempts before the replica recovers.
+    torn_shard_at: once this many local steps ran, every fleet
+    checkpoint written while this replica is a member gets ITS shard
+    payload torn (truncated mid-write) — the shard-integrity path's
+    case: restore must detect the corruption (``CorruptShard``) and fall
+    back to an older intact snapshot rather than load garbage.
     """
 
     kill_at: Optional[int] = None
     hang_at: Optional[int] = None
     slow_at: Optional[int] = None
     slow_factor: int = 2
+    transient_at: Optional[int] = None
+    transient_for: int = 1
+    torn_shard_at: Optional[int] = None
 
 
 class Replica:
@@ -129,6 +155,17 @@ class Replica:
         if (self.fault.hang_at is not None
                 and self.ticks >= self.fault.hang_at):
             return False          # silent: no heartbeat, no progress
+        if (self.fault.transient_at is not None
+                and self.fault.transient_at <= self.ticks
+                < self.fault.transient_at + max(1, self.fault.transient_for)):
+            # recoverable: the engine did no work, so a later retry of
+            # this same step is safe.  No heartbeat here — liveness
+            # during the incident is the CONTROLLER's call (it stamps
+            # the heartbeat when it classifies the failure as transient)
+            raise TransientError(
+                f"replica {self.name!r}: injected transient at local "
+                f"step {self.ticks} (fleet tick {tick}, clears at step "
+                f"{self.fault.transient_at + max(1, self.fault.transient_for)})")
         if (self.fault.slow_at is not None
                 and self.ticks >= self.fault.slow_at
                 and self.ticks % max(2, self.fault.slow_factor) != 0):

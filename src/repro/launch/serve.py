@@ -14,6 +14,16 @@ outputs are token-identical to the slot plane by construction.
 behind the async fleet front-end (repro.fleet); ``--kill-at T`` kills
 one replica at fleet tick T and ``--join-at T`` joins a fresh one — the
 oracle check holds under any such schedule (exactly-once requeue).
+
+Fault-domain flags (all tick-addressed, all deterministic):
+``--transient-at T`` injects a transient step failure on one replica
+(clearing after ``--transient-for`` ticks) to exercise the controller's
+retry/backoff path; ``--checkpoint-every N`` snapshots a demo state
+dict every N ticks into ``--checkpoint-dir`` and restores it re-sliced
+onto the new plan on every kill/join; ``--min-alive K`` sets the
+graceful-degradation floor (the front-end rejects with a typed
+``FleetDegraded`` + retry-after below it); ``--drain-deadline T``
+bounds the drain in ticks so a wedged schedule fails loud, never hangs.
 """
 
 from __future__ import annotations
@@ -88,16 +98,49 @@ def main(argv=None):
                     default=None,
                     help="fleet tick at which a fresh replica joins "
                          "(requires --fleet)")
+    ap.add_argument("--transient-at", type=_positive_int("--transient-at"),
+                    default=None,
+                    help="replica tick at which one replica starts "
+                         "raising transient step errors (requires "
+                         "--fleet; exercises retry/backoff)")
+    ap.add_argument("--transient-for",
+                    type=_positive_int("--transient-for"), default=2,
+                    help="how many replica ticks the transient lasts "
+                         "before clearing (with --transient-at)")
+    ap.add_argument("--max-retries", type=_positive_int("--max-retries"),
+                    default=3,
+                    help="transient retries before the controller "
+                         "escalates to the kill/requeue path")
+    ap.add_argument("--checkpoint-every",
+                    type=_positive_int("--checkpoint-every"), default=None,
+                    help="fleet ticks between sharded snapshots; also "
+                         "enables restore-on-rescale (requires --fleet)")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="snapshot directory (default: a temp dir, "
+                         "with --checkpoint-every)")
+    ap.add_argument("--min-alive", type=_positive_int("--min-alive"),
+                    default=1,
+                    help="graceful-degradation floor: below this many "
+                         "live replicas the front-end rejects with "
+                         "FleetDegraded + retry-after")
+    ap.add_argument("--drain-deadline",
+                    type=_positive_int("--drain-deadline"), default=None,
+                    help="max fleet ticks to drain before raising "
+                         "FleetDegraded instead of hanging")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a Chrome-trace/Perfetto JSON of the run "
                          "(open at ui.perfetto.dev)")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write the metrics-registry snapshot as JSON")
     args = ap.parse_args(argv)
-    if (args.kill_at or args.join_at) and not args.fleet:
-        ap.error("--kill-at/--join-at need --fleet")
+    if ((args.kill_at or args.join_at or args.transient_at
+         or args.checkpoint_every or args.drain_deadline) and not args.fleet):
+        ap.error("--kill-at/--join-at/--transient-at/--checkpoint-every/"
+                 "--drain-deadline need --fleet")
     if args.kill_at and args.fleet < 2:
         ap.error("--kill-at needs --fleet >= 2 (a survivor must exist)")
+    if args.checkpoint_dir and not args.checkpoint_every:
+        ap.error("--checkpoint-dir needs --checkpoint-every")
 
     cfg = get_reduced(args.arch)
     rules = Rules.null()
@@ -167,8 +210,13 @@ def _write_obs(args, tracer, metrics):
 
 def _serve_fleet(args, params, cfg, rules, workload):
     """Serve the workload through N replicas behind the async front-end,
-    with optional mid-run kill/join (elastic rescale demo)."""
-    from ..fleet import FaultPlan, FleetController, FleetFrontend, Replica
+    with optional mid-run kill/join/transient faults, live
+    checkpoint-recovery rescale, and graceful-degradation floors."""
+    import contextlib
+    import tempfile
+
+    from ..fleet import (FaultPlan, FleetController, FleetFrontend, Replica,
+                         RetryPolicy)
 
     tracer = Tracer() if args.trace_out else None
     metrics = MetricsRegistry() if args.metrics_out else None
@@ -189,24 +237,55 @@ def _serve_fleet(args, params, cfg, rules, workload):
     # needs one instance per replica
     shared = None if args.paged else make_model()
     rates = [1.0, 2.0, 0.5, 1.5]   # heterogeneous fleet, cycled
+    # the transient lands on a replica --kill-at does NOT target, so the
+    # two faults compose instead of shadowing each other
+    transient_on = (f"r{min(1, args.fleet - 1)}"
+                    if args.transient_at else None)
+
+    def fault_for(name):
+        if name != transient_on:
+            return None
+        return FaultPlan(transient_at=args.transient_at,
+                         transient_for=args.transient_for)
+
     replicas = [Replica(f"r{i}", shared if shared is not None
                         else make_model(), ec,
                         rate=rates[i % len(rates)],
+                        fault=fault_for(f"r{i}"),
                         tracer=tracer, metrics=metrics)
                 for i in range(args.fleet)]
-    controller = FleetController(replicas, tracer=tracer, metrics=metrics)
-    if args.kill_at:
-        controller.schedule_kill("r0", at_tick=args.kill_at)
-    if args.join_at:
-        controller.schedule_join(
-            Replica(f"r{args.fleet}", shared if shared is not None
-                    else make_model(), ec, rate=rates[0],
-                    fault=FaultPlan(), tracer=tracer, metrics=metrics),
-            at_tick=args.join_at)
-    frontend = FleetFrontend(controller, max_pending=4 * args.fleet)
-    for prompt, max_new, arrival in workload:
-        controller.submit(prompt, max_new, arrival=arrival)
-    report = asyncio_run_drain(frontend)
+
+    with contextlib.ExitStack() as stack:
+        ckpt_dir = ckpt_state = None
+        if args.checkpoint_every:
+            ckpt_dir = (args.checkpoint_dir or
+                        stack.enter_context(
+                            tempfile.TemporaryDirectory(prefix="fleet_ckpt_")))
+            # a demo state dict sized to the controller's virtual load:
+            # partitioned leaves carry one row per virtual-k unit, so
+            # restore re-slices them by the new plan's integer shares
+            ckpt_state = {
+                "w": np.arange(1024 * 4, dtype=np.float32).reshape(1024, 4),
+                "bias": np.arange(8, dtype=np.float32),
+            }
+        controller = FleetController(
+            replicas, retry=RetryPolicy(max_retries=args.max_retries),
+            min_alive=args.min_alive, checkpoint_dir=ckpt_dir,
+            checkpoint_state=ckpt_state,
+            checkpoint_every=args.checkpoint_every or 0,
+            tracer=tracer, metrics=metrics)
+        if args.kill_at:
+            controller.schedule_kill("r0", at_tick=args.kill_at)
+        if args.join_at:
+            controller.schedule_join(
+                Replica(f"r{args.fleet}", shared if shared is not None
+                        else make_model(), ec, rate=rates[0],
+                        fault=FaultPlan(), tracer=tracer, metrics=metrics),
+                at_tick=args.join_at)
+        frontend = FleetFrontend(controller, max_pending=4 * args.fleet)
+        for prompt, max_new, arrival in workload:
+            controller.submit(prompt, max_new, arrival=arrival)
+        report = asyncio_run_drain(frontend, deadline=args.drain_deadline)
     _write_obs(args, tracer, metrics)
 
     print(f"arch={cfg.name}  requests={args.batch}  fleet={args.fleet} "
@@ -215,6 +294,11 @@ def _serve_fleet(args, params, cfg, rules, workload):
     print(f"ticks={report.ticks}  completed={report.n_completed}  "
           f"requeues={report.requeues}  kills={report.kills}  "
           f"joins={report.joins}")
+    if report.retries or report.restores or report.corrupt_shards:
+        print(f"faults:  retries={report.retries}  "
+              f"recoveries={report.recoveries}  "
+              f"restores={report.restores}  "
+              f"corrupt_shards_skipped={report.corrupt_shards}")
     for name in sorted(report.occupancy):
         print(f"  {name}: occupancy {report.occupancy[name]:.2f}  "
               f"decode_tokens {report.decode_tokens[name]}")
@@ -227,12 +311,12 @@ def _serve_fleet(args, params, cfg, rules, workload):
             assert np.array_equal(ref, got), (
                 f"request {rid}: fleet {got} != oracle {ref}")
         print(f"oracle check: {len(workload)} requests token-identical "
-              f"under the kill/join schedule")
+              f"under the fault schedule")
 
 
-def asyncio_run_drain(frontend):
+def asyncio_run_drain(frontend, deadline=None):
     import asyncio
-    return asyncio.run(frontend.drain())
+    return asyncio.run(frontend.drain(deadline=deadline))
 
 
 if __name__ == "__main__":

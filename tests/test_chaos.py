@@ -1,0 +1,430 @@
+"""Fault-domain hardening: chaos-injected fleets under composite
+schedules (kill x hang x slow x transient x torn-shard x timing).
+
+The contract under test (ISSUE 9 / ROADMAP "Fleet runtime" fault
+matrix): every RECOVERABLE schedule preserves the fleet oracle — tokens
+identical to per-request greedy decoding, zero silent drops — and
+byte-identical trace determinism; every unrecoverable schedule fails
+loudly with a typed error (``FleetDegraded``, ``CorruptShard``), never
+a hang, never garbage.  All on the tick clock: re-running any schedule
+replays exactly.
+"""
+
+import asyncio
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CorruptShard, reshard_state
+from repro.fleet import (ChaosReplicaSpec, ChaosSchedule, FaultPlan,
+                         FleetController, FleetDegraded, FleetFrontend,
+                         RetryPolicy, TransientError, chaos_verdicts,
+                         run_chaos)
+from repro.obs import MetricsRegistry, Tracer, to_chrome_json
+from test_fleet import check_oracle, fake_replica, fake_workload
+
+
+def mk(name, rate, fault):
+    return fake_replica(name, rate=rate, fault=fault)
+
+
+def ckpt_state(k=1024):
+    """A co-hosted LBP state with one load-sized (partitioned) leaf and
+    one replicated leaf — what the controller snapshots and restores."""
+    return {"w": np.arange(k * 2, dtype=np.float32).reshape(k, 2),
+            "bias": np.arange(3, dtype=np.float32)}
+
+
+# ---------------------------------------------------------------------------
+# retry/backoff: transient vs fatal classification
+# ---------------------------------------------------------------------------
+
+def test_transient_retry_recovers_without_kill():
+    """A transient window shorter than the retry budget clears through
+    backoff: no kill, no requeue churn, oracle intact."""
+    reps = [mk("t", 1.0, FaultPlan(transient_at=3, transient_for=2)),
+            mk("ok", 1.0, None)]
+    ctrl = FleetController(reps, retry=RetryPolicy(max_retries=3))
+    wl = fake_workload(12, seed=11)
+    for p, m, a in wl:
+        ctrl.submit(p, m, arrival=a)
+    report = ctrl.run()
+    check_oracle(wl, report.completed)
+    assert report.retries == 2          # two failing attempts
+    assert report.recoveries == 1       # one incident, cleared
+    assert report.kills == []
+    assert ctrl.metrics.counter_value("retries") == 2
+    assert ctrl.metrics.counter_value("recoveries") == 1
+
+
+def test_retry_exhaustion_escalates_to_kill_and_requeue():
+    """A transient that never clears within the budget is reclassified
+    fatal: the existing kill + exactly-once-requeue path drains the
+    replica's work onto the survivor, oracle intact."""
+    reps = [mk("flaky", 1.0, FaultPlan(transient_at=2, transient_for=50)),
+            mk("ok", 1.0, None)]
+    ctrl = FleetController(reps, retry=RetryPolicy(max_retries=2))
+    wl = fake_workload(10, seed=4, stagger=0.0)
+    for p, m, a in wl:
+        ctrl.submit(p, m, arrival=a)
+    report = ctrl.run()
+    check_oracle(wl, report.completed)
+    assert [n for _, n in report.kills] == ["flaky"]
+    assert any("retry-exhausted" in e for e in report.events)
+    assert report.recoveries == 0
+    assert report.retries == 2          # budget spent before escalation
+    assert report.requeues >= 1
+
+
+def test_backoff_is_exponential_and_capped_on_tick_clock():
+    tracer = Tracer()
+    reps = [mk("t", 1.0, FaultPlan(transient_at=1, transient_for=5)),
+            mk("ok", 1.0, None)]
+    ctrl = FleetController(
+        reps, retry=RetryPolicy(max_retries=8, backoff_base=1,
+                                backoff_cap=4),
+        tracer=tracer)
+    wl = fake_workload(8, seed=2)
+    for p, m, a in wl:
+        ctrl.submit(p, m, arrival=a)
+    report = ctrl.run()
+    check_oracle(wl, report.completed)
+    retries = [e for e in tracer.events if e["name"] == "retry"]
+    assert [e["args"]["backoff"] for e in retries] == [1, 2, 4, 4, 4]
+    assert [e["args"]["attempt"] for e in retries] == [1, 2, 3, 4, 5]
+    # backed-off ticks stamp the heartbeat: a backoff is never misread
+    # as a hang, so the only terminal events are the recovery itself
+    assert report.kills == [] and report.recoveries == 1
+
+
+def test_transient_during_backoff_not_heartbeat_killed():
+    """Backoff longer than miss_threshold: the controller stamps the
+    heartbeat of a deliberately idled replica, so the health plane does
+    not shoot the patient it is treating."""
+    reps = [mk("t", 1.0, FaultPlan(transient_at=1, transient_for=2)),
+            mk("ok", 1.0, None)]
+    ctrl = FleetController(
+        reps, miss_threshold=2,
+        retry=RetryPolicy(max_retries=5, backoff_base=8, backoff_cap=8))
+    wl = fake_workload(8, seed=9)
+    for p, m, a in wl:
+        ctrl.submit(p, m, arrival=a)
+    report = ctrl.run()
+    check_oracle(wl, report.completed)
+    assert report.kills == []
+    assert ctrl.metrics.counter_value("heartbeat_misses") == 0
+
+
+# ---------------------------------------------------------------------------
+# live checkpoint-recovery: restore re-sliced on every rescale
+# ---------------------------------------------------------------------------
+
+def test_restore_on_kill_reslices_onto_survivor_plan(tmp_path):
+    state = ckpt_state()
+    reps = [mk("a", 1.0, FaultPlan(kill_at=5)), mk("b", 2.0, None),
+            mk("c", 1.0, None)]
+    ctrl = FleetController(reps, checkpoint_dir=tmp_path,
+                           checkpoint_state=state, checkpoint_every=3)
+    wl = fake_workload(16, seed=6)
+    for p, m, a in wl:
+        ctrl.submit(p, m, arrival=a)
+    report = ctrl.run()
+    check_oracle(wl, report.completed)
+    assert report.restores == 1 and report.corrupt_shards == 0
+    assert any("restored snapshot" in e for e in report.events)
+    # the restored views ARE the survivors' new plan's re-slices
+    assert len(ctrl.shards) == 2
+    want = reshard_state(state, ctrl.rebalance.plan)
+    for got, exp in zip(ctrl.shards, want):
+        assert np.array_equal(got["w"], exp["w"])
+        assert np.array_equal(got["bias"], exp["bias"])
+    # shard sizes follow the plan's integer shares exactly
+    assert [s["w"].shape[0] for s in ctrl.shards] \
+        == [int(k) for k in ctrl.rebalance.plan.k]
+
+
+def test_restore_on_join_reslices_onto_grown_fleet(tmp_path):
+    state = ckpt_state()
+    reps = [mk("a", 1.0, None), mk("b", 1.0, None)]
+    ctrl = FleetController(reps, checkpoint_dir=tmp_path,
+                           checkpoint_state=state, checkpoint_every=4)
+    ctrl.schedule_join(mk("c", 2.0, None), at_tick=6)
+    wl = fake_workload(16, seed=8)
+    for p, m, a in wl:
+        ctrl.submit(p, m, arrival=a)
+    report = ctrl.run()
+    check_oracle(wl, report.completed)
+    assert report.restores == 1
+    assert len(ctrl.shards) == 3        # the joiner holds a share
+    want = reshard_state(state, ctrl.rebalance.plan)
+    for got, exp in zip(ctrl.shards, want):
+        assert np.array_equal(got["w"], exp["w"])
+
+
+def test_torn_shard_falls_back_to_older_intact_epoch(tmp_path):
+    """A replica tearing its shard of every new snapshot: the kill-time
+    restore detects the corruption (CorruptShard), counts it, and falls
+    back to the older intact epoch — garbage is never loaded and the
+    run still drains oracle-identical."""
+    state = ckpt_state()
+    reps = [mk("a", 1.0, FaultPlan(kill_at=8)),
+            # b's shards torn from its step 3 on: the epoch-0 snapshot
+            # (written before any step ran) stays intact
+            mk("b", 1.0, FaultPlan(torn_shard_at=3)),
+            mk("c", 1.0, None)]
+    ctrl = FleetController(reps, checkpoint_dir=tmp_path,
+                           checkpoint_state=state, checkpoint_every=4)
+    wl = fake_workload(16, seed=12)
+    for p, m, a in wl:
+        ctrl.submit(p, m, arrival=a)
+    report = ctrl.run()
+    check_oracle(wl, report.completed)
+    assert report.corrupt_shards >= 1   # the torn epoch was detected
+    assert report.restores == 1         # ...and an intact one restored
+    assert any("corrupt" in e for e in report.events)
+    want = reshard_state(state, ctrl.rebalance.plan)
+    for got, exp in zip(ctrl.shards, want):
+        assert np.array_equal(got["w"], exp["w"])
+
+
+def test_every_snapshot_torn_raises_corrupt_shard(tmp_path):
+    """Unrecoverable corruption fails LOUDLY with the typed error — the
+    controller refuses to hand garbage params to the survivors."""
+    state = ckpt_state()
+    reps = [mk("a", 1.0, FaultPlan(kill_at=4)),
+            mk("b", 1.0, FaultPlan(torn_shard_at=0))]   # torn from birth
+    ctrl = FleetController(reps, checkpoint_dir=tmp_path,
+                           checkpoint_state=state, checkpoint_every=2)
+    wl = fake_workload(8, seed=3)
+    for p, m, a in wl:
+        ctrl.submit(p, m, arrival=a)
+    with pytest.raises(CorruptShard):
+        ctrl.run()
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: typed rejection + bounded drain
+# ---------------------------------------------------------------------------
+
+def test_degraded_submit_rejected_with_retry_after():
+    """All capacity lost, join scheduled: the frontend rejects with the
+    typed FleetDegraded whose retry_after points at the join tick —
+    instead of queueing onto a fleet that cannot serve."""
+    reps = [mk("a", 1.0, FaultPlan(kill_at=2)),
+            mk("b", 1.0, FaultPlan(kill_at=2))]
+    ctrl = FleetController(reps, miss_threshold=3)
+    ctrl.schedule_join(mk("c", 1.0, None), at_tick=12)
+    wl = fake_workload(6, seed=5, stagger=0.0)
+    for p, m, a in wl:
+        ctrl.submit(p, m, arrival=a)
+    while not ctrl.degraded:
+        ctrl.tick()
+    fe = FleetFrontend(ctrl)
+    with pytest.raises(FleetDegraded) as ei:
+        asyncio.run(fe.submit(np.arange(1, 6), 4))
+    assert ei.value.retry_after == 12 - ctrl.tick_count
+    assert ctrl.metrics.counter_value("degraded_rejections") == 1
+
+
+def test_min_alive_floor_rejects_above_zero():
+    """A capacity floor above 1: losing one of two replicas degrades
+    the fleet even though it can still limp along."""
+    reps = [mk("a", 1.0, FaultPlan(kill_at=3)), mk("b", 1.0, None)]
+    ctrl = FleetController(reps, min_alive=2)
+    assert not ctrl.degraded
+    wl = fake_workload(6, seed=1, stagger=0.0)
+    for p, m, a in wl:
+        ctrl.submit(p, m, arrival=a)
+    while not ctrl.degraded:
+        ctrl.tick()
+    fe = FleetFrontend(ctrl)
+    with pytest.raises(FleetDegraded) as ei:
+        asyncio.run(fe.submit(np.arange(1, 6), 4))
+    assert ei.value.retry_after is None     # no recovery scheduled
+    # the survivor still drains what was already admitted
+    report = ctrl.run()
+    check_oracle(wl, report.completed)
+
+
+def test_join_exits_degradation_and_replans():
+    """join_devices arriving while degraded: the fleet re-plans onto the
+    joiner, exits degradation, and drains oracle-identical."""
+    reps = [mk("a", 1.0, FaultPlan(kill_at=2)),
+            mk("b", 1.0, FaultPlan(kill_at=2))]
+    ctrl = FleetController(reps, miss_threshold=3)
+    ctrl.schedule_join(mk("c", 1.5, None), at_tick=10)
+    wl = fake_workload(10, seed=7, stagger=0.0)
+    for p, m, a in wl:
+        ctrl.submit(p, m, arrival=a)
+    saw_degraded = False
+    report = None
+    while True:
+        more = ctrl.tick()
+        saw_degraded = saw_degraded or ctrl.degraded
+        if not more:
+            break
+    assert saw_degraded
+    assert not ctrl.degraded            # the join restored capacity
+    assert ctrl.alive_names() == ["c"]
+    report = ctrl.report()
+    check_oracle(wl, report.completed)  # zero silent drops across the gap
+    # degradation exit went through a replan onto the joiner
+    assert ctrl.rebalance.assignment.k.shape == (1,)
+
+
+def test_drain_deadline_raises_instead_of_hanging():
+    """A replica hung below the heartbeat radar (miss_threshold too
+    large to trip): drain(deadline=...) raises the typed error instead
+    of ticking forever."""
+    reps = [mk("h", 1.0, FaultPlan(hang_at=2))]
+    ctrl = FleetController(reps, miss_threshold=10**9)
+    fe = FleetFrontend(ctrl)
+
+    async def go():
+        await fe.submit(np.arange(1, 9), 8)
+        await fe.drain(deadline=50)
+
+    with pytest.raises(FleetDegraded, match="drain deadline"):
+        asyncio.run(go())
+    assert ctrl.tick_count <= 60        # bounded, not a hang
+
+
+def test_stream_terminates_on_kill_during_drain():
+    """S2 regression (kill-during-drain schedule): a streamed request
+    whose only replica dies after drain() began must terminate with a
+    typed error — both the drainer and the streamer — never hang."""
+    reps = [mk("only", 1.0, FaultPlan(kill_at=4))]
+    ctrl = FleetController(reps, miss_threshold=3)
+    fe = FleetFrontend(ctrl)
+
+    async def go():
+        rid = await fe.submit(np.arange(1, 9), 8)
+
+        async def consume():
+            got = []
+            async for tok in fe.stream(rid):
+                got.append(tok)
+            return got
+
+        task = asyncio.ensure_future(consume())
+        drain_err = stream_err = None
+        try:
+            await fe.drain()
+        except (FleetDegraded, RuntimeError) as e:
+            drain_err = e
+        try:
+            await task
+        except (FleetDegraded, RuntimeError) as e:
+            stream_err = e
+        return drain_err, stream_err
+
+    drain_err, stream_err = asyncio.run(go())
+    assert isinstance(drain_err, FleetDegraded)
+    assert stream_err is not None       # typed, not a hang
+    assert fe._closed                   # drain closed on the failure path
+
+
+# ---------------------------------------------------------------------------
+# the chaos property: composite schedules, one harness
+# ---------------------------------------------------------------------------
+
+def composite_schedule(kill_at, hang_at, transient_at, slow, join_at,
+                       checkpoint_every=0, torn=False):
+    """Four replicas, one fault domain each, plus a healthy anchor so
+    every schedule is recoverable; ``join_at`` optionally grows it."""
+    return ChaosSchedule(
+        replicas=(
+            ChaosReplicaSpec("k", 1.0,
+                             FaultPlan(kill_at=kill_at)
+                             if kill_at else None),
+            ChaosReplicaSpec("h", 1.0,
+                             FaultPlan(hang_at=hang_at)
+                             if hang_at else None),
+            ChaosReplicaSpec("t", 2.0,
+                             FaultPlan(transient_at=transient_at,
+                                       transient_for=2,
+                                       torn_shard_at=3 if torn else None)
+                             if transient_at else None),
+            ChaosReplicaSpec("anchor", 1.5,
+                             FaultPlan(slow_at=2, slow_factor=2)
+                             if slow else None),
+        ),
+        join_at=join_at, checkpoint_every=checkpoint_every)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       n=st.integers(4, 20),
+       kill_at=st.sampled_from([None, 2, 6, 14]),
+       hang_at=st.sampled_from([None, 3, 9]),
+       transient_at=st.sampled_from([None, 2, 7]),
+       slow=st.booleans(),
+       join_at=st.sampled_from([None, 5, 12]),
+       stagger=st.sampled_from([0.0, 0.5]))
+def test_chaos_property_recoverable_schedules_preserve_oracle(
+        seed, n, kill_at, hang_at, transient_at, slow, join_at, stagger):
+    """ANY recoverable composite schedule (kill x hang x slow x
+    transient x timing): tokens identical to the per-request greedy
+    oracle, zero silent drops — the acceptance property."""
+    sched = composite_schedule(kill_at, hang_at, transient_at, slow,
+                               join_at)
+    wl = fake_workload(n, seed=seed, stagger=stagger)
+    ctrl, report = run_chaos(sched, mk, wl,
+                             retry=RetryPolicy(max_retries=3))
+    check_oracle(wl, report.completed)
+    v = chaos_verdicts(sched, report, wl)
+    assert v["gates"]["zero_silent_drops"]
+    assert v["gates"]["recovered_all_transients"]
+
+
+def test_chaos_composite_trace_byte_identical(tmp_path):
+    """Determinism pin: the SAME composite chaos schedule (kill + hang +
+    transient + slow + torn shard + join + checkpointing) produces a
+    byte-identical Chrome trace across two runs — every retry, backoff,
+    restore and corrupt-shard instant lands on the same tick."""
+    def one_run(subdir):
+        tracer, metrics = Tracer(), MetricsRegistry()
+        sched = composite_schedule(kill_at=6, hang_at=9, transient_at=2,
+                                   slow=True, join_at=10,
+                                   checkpoint_every=4, torn=True)
+        wl = fake_workload(16, seed=13)
+        d = tmp_path / subdir
+        ctrl, report = run_chaos(sched, mk, wl,
+                                 retry=RetryPolicy(max_retries=3),
+                                 checkpoint_dir=d,
+                                 checkpoint_state=ckpt_state(),
+                                 tracer=tracer, metrics=metrics)
+        check_oracle(wl, report.completed)
+        assert report.recoveries >= 1 and report.restores >= 1
+        return to_chrome_json(tracer), metrics.snapshot()
+
+    j1, m1 = one_run("run1")
+    j2, m2 = one_run("run2")
+    assert j1 == j2
+    assert m1 == m2
+
+
+def test_unrecoverable_schedule_raises_typed_never_hangs():
+    """Loss of every replica with no join scheduled: the typed
+    FleetDegraded (a RuntimeError) escapes promptly — the unrecoverable
+    half of the acceptance property."""
+    sched = ChaosSchedule(
+        replicas=(ChaosReplicaSpec("a", 1.0, FaultPlan(kill_at=3)),
+                  ChaosReplicaSpec("b", 1.0, FaultPlan(hang_at=2))))
+    wl = fake_workload(6, seed=2, stagger=0.0)
+    with pytest.raises(FleetDegraded, match="no live replica"):
+        run_chaos(sched, mk, wl, miss_threshold=2)
+
+
+def test_transient_error_is_not_replica_dead():
+    """The classification boundary: TransientError must not share a
+    type with ReplicaDead, or a retry would mask real crashes."""
+    from repro.fleet import ReplicaDead
+    assert not issubclass(TransientError, ReplicaDead)
+    assert not issubclass(ReplicaDead, TransientError)
+    rep = mk("x", 1.0, FaultPlan(transient_at=1, transient_for=1))
+    rep.submit(np.arange(1, 6), 4)
+    with pytest.raises(TransientError):
+        rep.step(0)
+    assert rep.step(1)                  # cleared: the engine works again

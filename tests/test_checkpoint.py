@@ -245,3 +245,81 @@ def test_reshard_atomicity_ignores_partial(tmp_path):
     save_sharded(tmp_path, 5, {"w": np.zeros((64,), np.float32)}, p)
     (tmp_path / "step_00000009.tmp").mkdir()   # crashed writer
     assert latest_step(tmp_path) == 5
+
+
+# ---------------------------------------------------------------------------
+# shard integrity: checksum sidecars + typed CorruptShard
+# ---------------------------------------------------------------------------
+
+def test_save_sharded_writes_checksum_sidecars(tmp_path):
+    import hashlib
+    from repro.checkpoint import save_sharded, verify_sharded
+    _, plan_star = _plans(128)
+    state = {"w": np.arange(128 * 2, dtype=np.float32).reshape(128, 2),
+             "b": np.ones(5, np.float32)}
+    d = save_sharded(tmp_path, 2, state, plan_star)
+    payloads = sorted(f for f in d.iterdir() if f.suffix == ".npy")
+    assert len(payloads) == plan_star.p + 1   # shards + replicated leaf
+    for f in payloads:
+        side = f.with_name(f.name + ".sha256")
+        assert side.exists(), f"missing sidecar for {f.name}"
+        assert side.read_text().strip() \
+            == hashlib.sha256(f.read_bytes()).hexdigest()
+    assert verify_sharded(tmp_path, 2) == len(payloads)
+
+
+def test_truncated_shard_raises_corrupt_shard(tmp_path):
+    """A torn write (payload truncated after the manifest landed) must
+    raise the typed error, never np.load garbage or a crash deep in
+    deserialization."""
+    from repro.checkpoint import (CorruptShard, restore_resharded,
+                                  save_sharded, verify_sharded)
+    _, plan_star = _plans(128)
+    state = {"w": np.arange(128 * 4, dtype=np.float32).reshape(128, 4)}
+    d = save_sharded(tmp_path, 1, state, plan_star)
+    victim = sorted(d.glob("w__shard*.npy"))[2]
+    victim.write_bytes(victim.read_bytes()[:40])   # torn mid-write
+    with pytest.raises(CorruptShard, match="sha256 mismatch"):
+        restore_resharded(tmp_path, 1, state, plan_star)
+    with pytest.raises(CorruptShard):
+        verify_sharded(tmp_path, 1)
+
+
+def test_bitflip_and_missing_shard_raise_corrupt_shard(tmp_path):
+    from repro.checkpoint import (CorruptShard, load_sharded, save_sharded)
+    _, plan_star = _plans(128)
+    state = {"w": np.arange(128, dtype=np.float32)}
+    d = save_sharded(tmp_path, 1, state, plan_star)
+    victim = sorted(d.glob("w__shard*.npy"))[0]
+    raw = bytearray(victim.read_bytes())
+    raw[-1] ^= 0xFF                                 # silent bit rot
+    victim.write_bytes(bytes(raw))
+    with pytest.raises(CorruptShard, match="mismatch"):
+        load_sharded(tmp_path, 1, state)
+    victim.unlink()                                 # lost file
+    with pytest.raises(CorruptShard, match="missing"):
+        load_sharded(tmp_path, 1, state)
+
+
+def test_missing_sidecar_raises_corrupt_shard(tmp_path):
+    """No sidecar, no trust: a payload that cannot be verified is
+    treated as corrupt (pre-integrity checkpoints must be re-saved)."""
+    from repro.checkpoint import CorruptShard, load_sharded, save_sharded
+    _, plan_star = _plans(128)
+    state = {"w": np.arange(128, dtype=np.float32)}
+    d = save_sharded(tmp_path, 1, state, plan_star)
+    next(iter(sorted(d.glob("*.sha256")))).unlink()
+    with pytest.raises(CorruptShard, match="sidecar missing"):
+        load_sharded(tmp_path, 1, state)
+
+
+def test_intact_checkpoint_unaffected_by_integrity_layer(tmp_path):
+    """The happy path round-trips bit-identical through verification."""
+    from repro.checkpoint import restore_resharded, save_sharded
+    plan_prod, plan_star = _plans(256)
+    rng = np.random.default_rng(3)
+    state = {"w": rng.normal(size=(256, 3)).astype(np.float32)}
+    save_sharded(tmp_path, 9, state, plan_prod)
+    _, full, shards = restore_resharded(tmp_path, 9, state, plan_star)
+    np.testing.assert_array_equal(full["w"], state["w"])
+    assert len(shards) == plan_star.p

@@ -107,6 +107,35 @@ def test_replica_hang_stops_heartbeat():
     assert rep.last_heartbeat == 0      # silent since the hang
 
 
+def test_heartbeat_death_exactly_at_miss_threshold_boundary():
+    """Off-by-one pin: a hung replica is declared dead at the FIRST tick
+    where (tick - last_heartbeat) EXCEEDS miss_threshold — alive through
+    tick last_heartbeat + miss_threshold, killed on the next one."""
+    miss = 3
+    hung = fake_replica("hung", fault=FaultPlan(hang_at=2))
+    good = fake_replica("good")
+    ctrl = FleetController([hung, good], miss_threshold=miss)
+    wl = fake_workload(8, seed=1, stagger=0.0)
+    for p, m, a in wl:
+        ctrl.submit(p, m, arrival=a)
+    # hang_at=2: the hung replica's last beat lands at tick 1 (its step
+    # 2, the first silent one, runs at tick 1... step counts are 1-based
+    # per tick), so observe the actual last_heartbeat then pin the kill
+    while hung.alive and not ctrl.kills:
+        ctrl.tick()
+        if hung.last_heartbeat + miss >= ctrl.tick_count:
+            assert hung.alive, (
+                f"killed early: hb={hung.last_heartbeat} miss={miss} "
+                f"tick={ctrl.tick_count}")
+    kill_tick, name = ctrl.kills[0]
+    assert name == "hung"
+    # the kill happened exactly when the gap first EXCEEDED the
+    # threshold: t - hb == miss + 1, never sooner, never later
+    assert kill_tick - hung.last_heartbeat == miss + 1
+    report = ctrl.run()
+    check_oracle(wl, report.completed)
+
+
 def test_heartbeat_miss_declares_dead_and_requeues():
     hung = fake_replica("hung", fault=FaultPlan(hang_at=2))
     good = fake_replica("good")
