@@ -20,8 +20,12 @@ the shared runner's wall clock:
            reduction, pod shares (all solver outputs, deterministic).
   serve    workload-shape invariants (useful tokens, paged token
            identity, fragmentation evidence) and occupancy, which is a
-           deterministic function of the schedule.  tok/s and TTFT are
-           NOT gated: shared CI runners swing several-fold.
+           deterministic function of the schedule; the prefix-sharing
+           smoke (token identity vs the private plane and the greedy
+           oracle, peak pages-in-use strictly below the private
+           baseline, refcounted attaches, conservation at drain).
+           tok/s and TTFT are NOT gated: shared CI runners swing
+           several-fold.
 
 Wall-clock metrics are reported but never fail the gate.  Exit code 1 on
 any regression, with a per-check report.  When a tracked artifact is
@@ -224,6 +228,32 @@ def check_serve(g: Gate, fresh: dict, base: dict) -> None:
             (ch["metrics"]["retries"], ch["metrics"]["recoveries"],
              ch["metrics"]["restores"]),
             (ch["retries"], ch["recoveries"], ch["restores"]))
+    # prefix sharing: the shared-template capacity smoke is fully
+    # deterministic (seeded workload, tick clock), so identity, the
+    # attach evidence and the pages-in-use win are all structural
+    ps = dig(fresh, "prefix_sharing")
+    g.equal("serve: sharing token-identical to private plane",
+            ps["token_identical_vs_private"], True)
+    g.equal("serve: sharing token-identical to greedy oracle",
+            ps["token_identical_vs_oracle"], True)
+    g.check("serve: sharing peak pages strictly below private baseline",
+            ps["peak_used_pages_shared"] < ps["peak_used_pages_private"],
+            f"shared={ps['peak_used_pages_shared']} "
+            f"private={ps['peak_used_pages_private']}")
+    g.check("serve: sharing capacity ratio > 1",
+            ps["capacity_ratio"] > 1.0,
+            f"ratio={ps['capacity_ratio']:.3f}")
+    g.at_least("serve: sharing attaches observed", ps["shared_attaches"], 1)
+    g.at_least("serve: sharing refcount actually exceeded 1",
+               ps["max_refcount"], 2)
+    g.equal("serve: sharing refcount conservation at drain",
+            ps["refcount_conserved"], True)
+    g.equal("serve: sharing evidence vs baseline",
+            (ps["peak_used_pages_private"], ps["peak_used_pages_shared"],
+             ps["shared_attaches"], ps["max_refcount"]),
+            tuple(dig(base, "prefix_sharing")[k] for k in
+                  ("peak_used_pages_private", "peak_used_pages_shared",
+                   "shared_attaches", "max_refcount")))
 
 
 CHECKS: Tuple[Tuple[str, Callable[[Gate, dict, dict], None]], ...] = (

@@ -87,7 +87,29 @@ def run_trajectory(out_dir: pathlib.Path, rows, out,
                      "3-replica fleet == single engine under kill/join"))
         rows.append(("serve.fleet_requeued", float(sr["fleet"]["requeued"]),
                      "requests requeued by the mid-decode kill"))
+        rows.append(("serve.sharing_capacity_ratio_x",
+                     sr["prefix_sharing"]["capacity_ratio"],
+                     "peak pages private reservation vs prefix sharing"))
+        rows.append(("serve.sharing_token_identical",
+                     float(sr["prefix_sharing"]["token_identical_vs_private"]
+                           and sr["prefix_sharing"]
+                           ["token_identical_vs_oracle"]),
+                     "sharing == private plane == greedy oracle"))
         out(f"[serve benchmarks {time.time()-t0:.1f}s]")
+
+        # the shared-prefix example doubles as an end-to-end smoke: it
+        # asserts oracle identity + the capacity win on its own workload
+        t0 = time.time()
+        env = host_device_env(1)
+        env.setdefault("PYTHONPATH", str(REPO_ROOT / "src"))
+        r = subprocess.run(
+            [sys.executable, str(REPO_ROOT / "examples"
+                                 / "prefix_sharing.py")],
+            env=env, cwd=str(REPO_ROOT), capture_output=True, text=True)
+        if r.returncode != 0:
+            ok = False
+            out(f"[prefix-sharing example FAILED]\n{r.stdout}\n{r.stderr}")
+        out(f"[prefix-sharing example {time.time()-t0:.1f}s]")
     return ok
 
 

@@ -29,7 +29,12 @@ fixed-seed COMPOSITE fault schedule (kill x transient x contention x
 torn-shard x join) with retry/backoff and live checkpoint-recovery on,
 reduced to structural verdicts (recoveries == injected transients,
 restores == rescales, token identity, zero silent drops) that
-``check_regression.py`` gates.
+``check_regression.py`` gates.  ``prefix_sharing`` is the shared-prefix
+capacity smoke: the shared-template workload on the paged plane with
+and without ``prefix_sharing``, gated on token identity (vs the private
+plane and the greedy oracle), peak pages-in-use strictly below the
+private baseline, observed refcounted attaches, and conservation at
+drain (see ``docs/serving.md``).
 """
 
 from __future__ import annotations
@@ -271,6 +276,60 @@ def run_chaos_scenario(model, workload, slots: int,
     return v
 
 
+def run_prefix_sharing(paged_model, params, cfg, rules,
+                       smoke: bool) -> Dict[str, object]:
+    """Prefix-sharing capacity smoke: the shared-template workload
+    served twice on the paged plane — worst-case private reservation vs
+    ``prefix_sharing`` — reduced to structural verdicts for
+    ``check_regression.py``: token identity vs the non-sharing plane AND
+    (spot-checked, one request per template) vs ``greedy_generate``,
+    peak pages-in-use strictly below the private baseline, refcounted
+    attaches actually observed, and conservation at drain."""
+    from repro.serve import EngineConfig, ServingEngine, greedy_generate
+    from repro.serve.engine import shared_prefix_workload
+    n, n_templates = (16, 2) if smoke else (32, 4)
+    wl = shared_prefix_workload(n, cfg.vocab_size, n_templates=n_templates,
+                                template_len=16, suffix_lens=(4, 8, 12),
+                                news=(4, 8, 12, 16), stagger=0.5)
+
+    def run(sharing):
+        eng = ServingEngine(paged_model, EngineConfig(
+            n_slots=8, max_prompt_len=28, max_new_cap=16, cache_len=44,
+            page_size=4, prefix_sharing=sharing))
+        for prompt, m, arrival in wl:
+            eng.submit(prompt, m, arrival=arrival)
+        return eng, eng.run()
+
+    eng_off, rep_off = run(False)
+    eng_on, rep_on = run(True)
+    identical = all(np.array_equal(rep_off.completed[rid],
+                                   rep_on.completed[rid])
+                    for rid in rep_off.completed)
+    oracle_ok = True
+    for rid in range(n_templates):            # one request per template
+        prompt, m, _ = wl[rid]
+        ref = np.asarray(greedy_generate(params, cfg, rules,
+                                         np.asarray(prompt)[None],
+                                         max_new=m))[0]
+        oracle_ok = oracle_ok and np.array_equal(ref, rep_on.completed[rid])
+    pool_on, pool_off = eng_on.pool, eng_off.pool
+    return {
+        "requests": n, "templates": n_templates,
+        "token_identical_vs_private": bool(identical),
+        "token_identical_vs_oracle": bool(oracle_ok),
+        "peak_used_pages_private": int(pool_off.peak_used_pages),
+        "peak_used_pages_shared": int(pool_on.peak_used_pages),
+        "capacity_ratio": (pool_off.peak_used_pages
+                           / max(pool_on.peak_used_pages, 1)),
+        "shared_attaches": int(pool_on.n_shared_attached),
+        "max_refcount": int(pool_on.max_refcount),
+        "refcount_conserved": bool(
+            pool_on.n_allocated == pool_on.n_freed
+            and len(pool_on.prefix_index) == 0
+            and pool_on.free_page_count == pool_on.n_pages),
+    }
+
+
 def run_fixed_batch(params, cfg, rules, workload, slots: int
                     ) -> Dict[str, float]:
     """The seed serving path: fixed batches, padded to the workload max."""
@@ -382,6 +441,8 @@ def main(argv=None) -> Dict:
     fleet["chaos"] = run_chaos_scenario(
         model, workload, slots, reference,
         artifacts_dir=pathlib.Path(args.out).parent)
+    sharing = run_prefix_sharing(paged_model, params, cfg, rules,
+                                 smoke=args.smoke)
     result = {
         "workload": {"requests": n, "slots": slots, "seed": args.seed,
                      "prompt_lens": list(lens), "max_news": list(news),
@@ -399,6 +460,7 @@ def main(argv=None) -> Dict:
             **identity,
         },
         "fleet": fleet,
+        "prefix_sharing": sharing,
     }
     print(f"\nworkload: {n} staggered requests, {slots} slots, {cfg.name}")
     print(f"engine:      {eng['tokens_per_sec']:8.1f} tok/s  "
@@ -428,6 +490,16 @@ def main(argv=None) -> Dict:
           f"{ch['restores']} restores ({ch['corrupt_shards']} torn "
           f"snapshots skipped), identical={ch['token_identical']}, "
           f"gates={'all pass' if all(ch['gates'].values()) else ch['gates']}")
+    print(f"sharing:     {sharing['requests']} reqs / "
+          f"{sharing['templates']} templates: peak pages "
+          f"{sharing['peak_used_pages_private']} -> "
+          f"{sharing['peak_used_pages_shared']} "
+          f"({sharing['capacity_ratio']:.2f}x), "
+          f"{sharing['shared_attaches']} attaches, max refcount "
+          f"{sharing['max_refcount']}, "
+          f"identical={sharing['token_identical_vs_private']}"
+          f"/oracle={sharing['token_identical_vs_oracle']}, "
+          f"conserved={sharing['refcount_conserved']}")
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     print(f"wrote {args.out}")

@@ -57,8 +57,28 @@ def _positive_int(flag: str):
 
 
 def build_workload(args, vocab_size: int):
-    """Synthetic staggered trace: prompt lengths vary below --prompt-len."""
-    from ..serve.engine import synthetic_workload
+    """Synthetic staggered trace: prompt lengths vary below --prompt-len.
+    With --prefix-sharing the trace is template-heavy instead (shared
+    system-prompt prefixes + random suffixes) so sharing has something
+    to share."""
+    from ..serve.engine import shared_prefix_workload, synthetic_workload
+    if getattr(args, "prefix_sharing", False):
+        template_len = max(args.page_size, (args.prompt_len // 2
+                                            // args.page_size)
+                           * args.page_size)
+        suffix_max = max(2, args.prompt_len - template_len)
+        # varied decode lengths stagger retirements so same-template
+        # requests overlap in flight — a single max_new retires whole
+        # admission groups in lockstep and the creator's pages hit
+        # refcount zero (index eviction) before the next match arrives
+        news = tuple(sorted({max(1, args.max_new // 4),
+                             max(1, args.max_new // 2), args.max_new}))
+        return shared_prefix_workload(
+            args.batch, vocab_size,
+            n_templates=max(1, min(4, args.batch // 3)),
+            template_len=template_len,
+            suffix_lens=tuple(sorted({max(2, suffix_max // 2), suffix_max})),
+            news=news, stagger=1.0 / max(1, args.slots))
     lens = sorted({max(2, args.prompt_len // 4), max(2, args.prompt_len // 2),
                    max(2, (3 * args.prompt_len) // 4), args.prompt_len})
     return synthetic_workload(args.batch, vocab_size, lens=lens,
@@ -85,6 +105,10 @@ def main(argv=None):
                     default=8, help="tokens per KV page (with --paged)")
     ap.add_argument("--pages", type=_positive_int("--pages"), default=None,
                     help="physical page budget (default: slot-equivalent)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="share matching prompt-prefix pages across "
+                         "requests (refcounted, copy-on-write; requires "
+                         "--paged) and serve a template-heavy workload")
     ap.add_argument("--oracle", action="store_true",
                     help="verify every output against greedy_generate")
     ap.add_argument("--fleet", type=_positive_int("--fleet"), default=None,
@@ -141,6 +165,9 @@ def main(argv=None):
         ap.error("--kill-at needs --fleet >= 2 (a survivor must exist)")
     if args.checkpoint_dir and not args.checkpoint_every:
         ap.error("--checkpoint-dir needs --checkpoint-every")
+    if args.prefix_sharing and not args.paged:
+        ap.error("--prefix-sharing needs --paged (slot rows have no page "
+                 "granularity to share)")
 
     cfg = get_reduced(args.arch)
     rules = Rules.null()
@@ -160,7 +187,8 @@ def main(argv=None):
         max_new_cap=args.max_new,
         cache_len=args.prompt_len + args.max_new,
         page_size=args.page_size if args.paged else None,
-        n_pages=args.pages if args.paged else None),
+        n_pages=args.pages if args.paged else None,
+        prefix_sharing=args.prefix_sharing),
         tracer=tracer, metrics=metrics)
     for prompt, max_new, arrival in workload:
         engine.submit(prompt, max_new, arrival=arrival)
@@ -184,6 +212,10 @@ def main(argv=None):
     if args.paged:
         print(f"pages:   occupancy {report.page_occupancy:.2f} "
               f"(mean used/total over decode steps)")
+    if args.prefix_sharing:
+        print(f"sharing: {engine.pool.n_shared_attached} page attaches, "
+              f"max refcount {engine.pool.max_refcount}, "
+              f"peak pages {engine.pool.peak_used_pages}")
     first = report.completed[0]
     print("generated token ids (first request):",
           list(map(int, first[:16])))
@@ -225,7 +257,8 @@ def _serve_fleet(args, params, cfg, rules, workload):
         max_new_cap=args.max_new,
         cache_len=args.prompt_len + args.max_new,
         page_size=args.page_size if args.paged else None,
-        n_pages=args.pages if args.paged else None)
+        n_pages=args.pages if args.paged else None,
+        prefix_sharing=args.prefix_sharing)
 
     def make_model():
         cls = PagedTransformerModel if args.paged else TransformerModel

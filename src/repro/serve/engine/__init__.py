@@ -4,6 +4,7 @@ The layer between the §4 solvers and the user-facing launcher:
 
   queue.py       FIFO admission-controlled request queue
   cache_pool.py  slot-row AND paged KV-cache pools (one admission surface)
+  prefix.py      prefix index: shared prompt pages + refcount lifecycle
   scheduler.py   per-iteration batch former (retire / admit / decode)
   engine.py      the engine loop + slot/paged transformer model adapters
   planner.py     star-network traffic split across heterogeneous replicas
@@ -12,6 +13,7 @@ The layer between the §4 solvers and the user-facing launcher:
 
 from .cache_pool import (PagedCachePool, SlotCachePool,  # noqa: F401
                          gather_page_view, scatter_page_view, write_slot)
+from .prefix import PrefixIndex, page_key  # noqa: F401
 from .engine import (EngineConfig, EngineReport, ManualClock,  # noqa: F401
                      PagedTransformerModel, ServingEngine,
                      TransformerModel, serve_requests)
@@ -20,4 +22,5 @@ from .planner import (CapacityPlanner, DCN_LINK, ICI_LINK,  # noqa: F401
 from .queue import AdmissionError, AdmissionLimits, RequestQueue  # noqa: F401
 from .request import Request  # noqa: F401
 from .scheduler import Scheduler, StepPlan  # noqa: F401
-from .workload import synthetic_workload  # noqa: F401
+from .workload import (shared_prefix_workload,  # noqa: F401
+                       synthetic_workload)

@@ -238,8 +238,9 @@ class PagedTransformerModel(TransformerModel):
 
         step1 = make_paged_decode_step(self.cfg, rules)
 
-        def paged_decode1(params, tok, pos, pool, table):
-            nxt, _, pool = step1(params, tok[:, None], pos, pool, table)
+        def paged_decode1(params, tok, pos, pool, table, write_table):
+            nxt, _, pool = step1(params, tok[:, None], pos, pool, table,
+                                 write_table)
             return pool, nxt, nxt, pos + 1
 
         self._paged_prefill = jax.jit(paged_group_prefill, static_argnums=0)
@@ -254,12 +255,13 @@ class PagedTransformerModel(TransformerModel):
         self._paged = pool
         return T.init_cache(self.cfg, pool.n_pages + 1, pool.page_size)
 
-    def _table(self):
-        # snapshot, never alias: on CPU jnp.asarray can be ZERO-COPY over
-        # the host numpy buffer, and the allocator mutates ``pool.table``
-        # in place while the previous async dispatch may still be reading
-        # it — without the copy the page map races the device
-        return jnp.asarray(self._paged.table.copy())
+    def _tables(self):
+        # snapshots, never aliases: on CPU jnp.asarray can be ZERO-COPY
+        # over the host numpy buffer, and the allocator mutates the page
+        # maps in place while the previous async dispatch may still be
+        # reading them — without the copies the maps race the device
+        return (jnp.asarray(self._paged.table.copy()),
+                jnp.asarray(self._paged.write_table.copy()))
 
     def prefill(self, pool, prompts, slots, tok, pos):
         assert self._paged is not None, "init_paged_pool must run first"
@@ -269,15 +271,20 @@ class PagedTransformerModel(TransformerModel):
         for b, p in enumerate(prompts):
             batch[b, :p.shape[0]] = p
         slots_np = np.asarray(slots, np.int32)
-        tables = self._paged.table[slots_np]        # (B, pages_per_slot)
+        # prefill scatters through the WRITE map: attached shared-prefix
+        # pages are trash there, so a follower's recomputed prefix KV is
+        # discarded and the creator's pages are never overwritten (the
+        # fancy index copies — no alias of the live host map)
+        tables = self._paged.write_table[slots_np]  # (B, pages_per_slot)
         return self._paged_prefill(self._paged.view_len, self.params,
                                    jnp.asarray(batch), jnp.asarray(lengths),
                                    jnp.asarray(slots_np),
                                    jnp.asarray(tables), pool, tok, pos)
 
     def decode(self, pool, tok, pos):
+        table, write_table = self._tables()
         return self._paged_decode1(self.params, tok, pos, pool,
-                                   self._table())
+                                   table, write_table)
 
     def decode_multi(self, pool, tok, pos, k: int):
         if k == 1:
@@ -285,8 +292,9 @@ class PagedTransformerModel(TransformerModel):
             return pool, nxt[None], tok, pos
         if k not in self._paged_decode_k:
             self._paged_decode_k[k] = jax.jit(self._paged_scan_builder(k))
+        table, write_table = self._tables()
         return self._paged_decode_k[k](self.params, tok, pos, pool,
-                                       self._table())
+                                       table, write_table)
 
 
 class ManualClock:
@@ -316,6 +324,10 @@ class EngineConfig:
     # instead of free slots (n_slots then only caps decode-batch width)
     page_size: Optional[int] = None
     n_pages: Optional[int] = None     # default: n_slots * pages_per_slot
+    # prefix sharing (paged plane only): requests whose prompts agree on
+    # leading FULL pages share those physical pages (refcounted, CoW);
+    # admission reserves shared + private instead of the worst case
+    prefix_sharing: bool = False
     # arrival units: "steps" (engine iterations, the default) or
     # "seconds" (wall-clock replay against a monotonic clock)
     arrival_mode: str = "steps"
@@ -420,8 +432,13 @@ class ServingEngine:
             self.pool = PagedCachePool(
                 n_pages=config.pool_pages, page_size=config.page_size,
                 n_slots=config.n_slots,
-                pages_per_slot=config.pages_per_slot)
+                pages_per_slot=config.pages_per_slot,
+                share_prefixes=config.prefix_sharing)
             self.cache = model.init_paged_pool(self.pool)
+        elif config.prefix_sharing:
+            raise ValueError(
+                "prefix_sharing requires the paged KV plane — set "
+                "page_size (slot rows have no page granularity to share)")
         else:
             self.pool = SlotCachePool(config.n_slots)
             self.cache = model.init_pool(config.n_slots, config.pool_len)
@@ -556,6 +573,12 @@ class ServingEngine:
             self.tracer.end(pf_key)
             self.metrics.counter("prefill_tokens").inc(
                 sum(r.prompt_len for r in plan.admit))
+            # the prefill dispatch above wrote these requests' prompt
+            # pages: publish the shareable ones (materialize their index
+            # entries and write-protect them) BEFORE any decode runs —
+            # from the next scheduler step on, followers attach instead
+            # of claiming.  No-op without prefix sharing / on slot pools.
+            self.pool.seal_prefilled(plan.admit)
 
         # the decode batch was planned BEFORE prefill handed max_new == 1
         # admits their first (and only) token — drop the already-done ones
@@ -754,11 +777,14 @@ class ServingEngine:
 def serve_requests(params, cfg: ModelConfig, rules: Rules, requests,
                    n_slots: int = 8, max_prefill_per_step: int = 2,
                    page_size: Optional[int] = None,
-                   n_pages: Optional[int] = None) -> EngineReport:
+                   n_pages: Optional[int] = None,
+                   prefix_sharing: bool = False) -> EngineReport:
     """Convenience one-shot: serve [(prompt, max_new, arrival), ...].
 
     ``page_size`` switches to the paged KV plane (``n_pages`` defaults to
-    slot-pool-equivalent memory) — outputs must be token-identical.
+    slot-pool-equivalent memory); ``prefix_sharing`` additionally maps
+    matching prompt prefixes onto shared pages — outputs must be
+    token-identical in every mode.
     """
     reqs = [(np.asarray(p, np.int32).reshape(-1), int(m), float(a))
             for p, m, a in requests]
@@ -768,7 +794,8 @@ def serve_requests(params, cfg: ModelConfig, rules: Rules, requests,
                       max_new_cap=max(m for _, m, _ in reqs),
                       cache_len=max_len,
                       max_prefill_per_step=max_prefill_per_step,
-                      page_size=page_size, n_pages=n_pages)
+                      page_size=page_size, n_pages=n_pages,
+                      prefix_sharing=prefix_sharing)
     model_cls = PagedTransformerModel if ec.paged else TransformerModel
     # engines are built through the fleet plane's factory (CI grep-gates
     # direct ServingEngine construction outside repro.fleet and launch/);

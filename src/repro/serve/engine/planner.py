@@ -65,6 +65,7 @@ class PagedReplicaPlan(ReplicaPlan):
     """A ReplicaPlan whose shares respect per-replica page capacity."""
 
     pages_per_request: int = 1
+    shared_prefix_pages: int = 0                # pages paid once per replica
     capacity: Optional[np.ndarray] = None       # (p,) request cap per replica
     page_seconds: Optional[np.ndarray] = None   # (p,) pages x service time
     saturated: Optional[np.ndarray] = None      # (p,) bool: memory-capped
@@ -148,19 +149,30 @@ class CapacityPlanner:
         return ReplicaPlan(schedule=sched, shares=pp.k, mode=self.mode,
                            rates=self.rates.copy(), partition=pp)
 
-    def plan_paged(self, n_requests: int,
-                   pages_per_request: int) -> PagedReplicaPlan:
+    def plan_paged(self, n_requests: int, pages_per_request: int,
+                   shared_prefix_pages: int = 0) -> PagedReplicaPlan:
         """Memory-honest split for paged fleets: equal-finish shares
         capped by each replica's page capacity (waterfilling).
 
         The load is divisible in *page-seconds*: serving one request on
         replica i costs ``pages_per_request * w_i`` page-seconds of its
-        pool.  Replicas whose compute-fair share exceeds
-        ``pages_i // pages_per_request`` are clamped there and the §4
-        solver re-runs on the survivors for the remaining load — the
-        bounded-memory master-worker schedule.
+        pool.  Replicas whose compute-fair share exceeds their page cap
+        are clamped there and the §4 solver re-runs on the survivors for
+        the remaining load — the bounded-memory master-worker schedule.
+
+        ``shared_prefix_pages`` prices prefix sharing into the memory
+        dimension: when every request carries the same shared prompt
+        prefix, a replica pays those pages ONCE (the first request
+        creates them; followers attach at zero page cost), so its
+        marginal per-request cost drops to ``pages_per_request -
+        shared_prefix_pages`` and its cap becomes
+        ``(pages_i - shared_prefix_pages) // marginal``.  The default 0
+        reproduces the private-reservation pricing exactly.
         """
         assert n_requests >= 1 and pages_per_request >= 1
+        assert 0 <= shared_prefix_pages < pages_per_request, (
+            "shared_prefix_pages must leave at least one private page "
+            "per request (the decode tail is never shareable)")
         if self.pages is None:
             raise ValueError(
                 "plan_paged needs per-replica page capacities — build the "
@@ -169,13 +181,16 @@ class CapacityPlanner:
             raise NotImplementedError(
                 "page-capped waterfilling assumes quantum=1 (clamped "
                 "shares need not stay quantum-aligned)")
-        caps = self.pages // int(pages_per_request)
+        marginal = int(pages_per_request) - int(shared_prefix_pages)
+        caps = np.maximum(self.pages - int(shared_prefix_pages), 0) \
+            // marginal
         if int(caps.sum()) < n_requests:
             raise ValueError(
                 f"fleet page capacity holds {int(caps.sum())} concurrent "
-                f"requests at {pages_per_request} pages each, but the "
-                f"batch has {n_requests} — shrink the batch or the "
-                f"per-request reservation")
+                f"requests at {marginal} private pages each "
+                f"(+{shared_prefix_pages} shared), but the batch has "
+                f"{n_requests} — shrink the batch or the per-request "
+                f"reservation")
         shares = np.zeros(self.p, dtype=np.int64)
         active = np.arange(self.p)
         remaining = int(n_requests)
@@ -198,12 +213,17 @@ class CapacityPlanner:
             mode=self.mode, k=shares.astype(np.float64),
             finish_time=float(np.max(shares * w)),
             comm_volume=2.0 * n_requests * float(shares.sum()))
+        # page-seconds per replica: shared prefix pages are paid once
+        # (only where the replica serves at least one request), private
+        # pages once per request
+        held = (shared_prefix_pages * (shares > 0) + shares * marginal)
         return PagedReplicaPlan(
             schedule=sched, shares=shares, mode=self.mode,
             rates=self.rates.copy(),
             partition=pp if unclamped else None,
             pages_per_request=int(pages_per_request),
-            capacity=caps, page_seconds=shares * pages_per_request * w,
+            shared_prefix_pages=int(shared_prefix_pages),
+            capacity=caps, page_seconds=held * w,
             saturated=shares >= caps)
 
     # ------------------------------------------------------------------

@@ -1,0 +1,122 @@
+"""Prefix index: shared prompt pages for the paged KV plane.
+
+Production traffic is dominated by shared prompt prefixes — system
+prompts, few-shot templates, multi-turn history.  On the paged plane
+(``cache_pool.PagedCachePool``) a prefix is a chain of FULL token pages
+whose KV content is a pure function of the token ids that produced it,
+so two requests whose prompts agree on the first ``k * page_size``
+tokens can map those ``k`` logical pages onto the SAME physical pages.
+This index is the map that makes the match: it keys each shareable page
+by the exact byte string of every token from the start of the prompt up
+to and including that page (a chain hash over token ids — two different
+prefixes can never collide because the dict compares the full key), and
+hands back the longest *materialized* chain of physical pages a new
+prompt can attach to.
+
+Lifecycle contract (enforced by the pool, property-tested):
+
+  * ``register`` happens at admit time by the first request to bring a
+    prefix in (the *creator*): the page is claimed privately and keyed,
+    but stays **pending** — it holds no KV bytes yet.
+  * ``materialize`` happens right after the creator's prefill dispatch
+    wrote the page (``PagedCachePool.seal_prefilled``).  Only
+    materialized pages are attachable: a same-step follower that admits
+    before the creator's prefill ran claims private copies instead, so
+    no request ever attaches to (or shares) a page that has not been
+    written — and therefore no request ever *writes* a page whose
+    refcount exceeds one.
+  * ``evict`` happens when the last holder releases (refcount hits
+    zero) and the physical page returns to the free list.  Index
+    entries never outlive the pages they name, so the pool's
+    conservation invariant (allocated == freed at drain) is untouched
+    by sharing.
+
+The index is pure host-side bookkeeping: matching is a dict walk over
+token bytes, and nothing here adds a jitted dispatch.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+
+def page_key(prompt: np.ndarray, page_index: int, page_size: int) -> bytes:
+    """Identity of shareable page ``page_index``: the exact bytes of
+    every prompt token up to and including that page.  Keying on the
+    whole prefix (not just the page's own tokens) is what makes sharing
+    sound — KV at position ``i`` depends on tokens ``0..i``, so a page
+    is reusable only when the entire history that produced it matches.
+    """
+    end = (page_index + 1) * page_size
+    return np.ascontiguousarray(prompt[:end], dtype=np.int32).tobytes()
+
+
+class PrefixIndex:
+    """Hash map from full-page token prefixes to physical page ids."""
+
+    def __init__(self, page_size: int):
+        assert page_size >= 1
+        self.page_size = int(page_size)
+        self._by_key: Dict[bytes, int] = {}       # prefix bytes -> page id
+        self._key_of: Dict[int, bytes] = {}       # page id -> its key
+        self._materialized: set = set()           # page ids holding real KV
+        # counters (benchmark / regression-gate evidence)
+        self.n_registered = 0
+        self.n_hits = 0          # pages attached through a match
+        self.n_evicted = 0
+
+    def __len__(self) -> int:
+        return len(self._by_key)
+
+    def shareable_pages(self, prompt_len: int) -> int:
+        """How many leading pages of a prompt are shareable: only pages
+        the prompt fills COMPLETELY (a partial page mixes prompt and
+        decode tokens, so its content is request-private)."""
+        return prompt_len // self.page_size
+
+    def match(self, prompt: np.ndarray) -> List[int]:
+        """Longest materialized chain of indexed pages this prompt can
+        attach to, as physical page ids (possibly empty).  The walk
+        stops at the first miss — a later page can only be shared if
+        every page before it is, because its key embeds the whole
+        prefix."""
+        out: List[int] = []
+        for i in range(self.shareable_pages(prompt.shape[0])):
+            page = self._by_key.get(page_key(prompt, i, self.page_size))
+            if page is None or page not in self._materialized:
+                break
+            out.append(page)
+        self.n_hits += len(out)
+        return out
+
+    def register(self, key: bytes, page: int) -> bool:
+        """Claim the index slot for ``key`` with pending page ``page``.
+        Returns False (and indexes nothing) if the key is already held —
+        e.g. two creators of the same template admitted in one step; the
+        loser's page simply stays private and unindexed."""
+        if key in self._by_key:
+            return False
+        self._by_key[key] = page
+        self._key_of[page] = key
+        self.n_registered += 1
+        return True
+
+    def materialize(self, page: int) -> None:
+        """Mark ``page`` as holding real KV bytes (its creator's prefill
+        dispatch ran) — only from this moment may ``match`` return it."""
+        if page in self._key_of:
+            self._materialized.add(page)
+
+    def is_indexed(self, page: int) -> bool:
+        return page in self._key_of
+
+    def evict(self, page: int) -> None:
+        """Forget ``page`` (its refcount hit zero and it returned to the
+        free list).  No-op for unindexed pages."""
+        key = self._key_of.pop(page, None)
+        if key is not None:
+            del self._by_key[key]
+            self._materialized.discard(page)
+            self.n_evicted += 1

@@ -16,10 +16,14 @@ on a free row, the paged plane on a free decode row AND enough
 *unreserved pages* for the request's worst-case decode length — the
 reservation is taken whole at admit time, so an in-flight request can
 always grow its cache without preempting anyone (grow-on-decode is
-infallible by construction).  Admission stays strictly FIFO among
-eligible requests: a head-of-queue request that does not fit blocks the
-ones behind it (no size-based overtaking, so large requests cannot
-starve).
+infallible by construction).  With prefix sharing the reservation
+shrinks to ``shared + private``: prompt pages the prefix index already
+holds are attached (refcounted) instead of reserved, so template-heavy
+traffic admits more concurrency from the same pool — the scheduler
+itself is unchanged, because sharing only moves the pool's capacity
+arithmetic.  Admission stays strictly FIFO among eligible requests: a
+head-of-queue request that does not fit blocks the ones behind it (no
+size-based overtaking, so large requests cannot starve).
 
 Starvation-freedom is structural: every admitted request appears in every
 subsequent decode batch until it has its ``max_new`` tokens, so it

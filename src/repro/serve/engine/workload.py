@@ -27,3 +27,33 @@ def synthetic_workload(n: int, vocab: int, *,
         out.append((rng.integers(0, vocab, S, dtype=np.int64)
                     .astype(np.int32), m, float(i) * stagger))
     return out
+
+
+def shared_prefix_workload(n: int, vocab: int, *,
+                           n_templates: int = 4,
+                           template_len: int = 16,
+                           suffix_lens: Sequence[int] = (4, 8, 12),
+                           news: Sequence[int] = (4, 8, 12, 16),
+                           stagger: float = 0.5,
+                           seed: int = 0
+                           ) -> List[Tuple[np.ndarray, int, float]]:
+    """Template-heavy trace: each prompt = one of ``n_templates`` fixed
+    system-prompt templates (``template_len`` tokens, round-robin over
+    requests) + a per-request random suffix.  This is the production
+    shape prefix sharing targets: requests agreeing on their leading
+    tokens can map those pages onto shared physical pages.  Suffixes are
+    drawn from ``[1, vocab)`` with the templates from ``[0, vocab)`` —
+    sharing must come from REAL prefix matches, not suffix collisions
+    (a colliding suffix page key would need the whole prefix to match
+    anyway; this just keeps the trace's sharing structure legible)."""
+    rng = np.random.default_rng(seed)
+    templates = [rng.integers(0, vocab, template_len, dtype=np.int64)
+                 .astype(np.int32) for _ in range(n_templates)]
+    out = []
+    for i in range(n):
+        t = templates[i % n_templates]
+        S = int(rng.choice(list(suffix_lens)))
+        suffix = rng.integers(1, vocab, S, dtype=np.int64).astype(np.int32)
+        m = int(rng.choice(list(news)))
+        out.append((np.concatenate([t, suffix]), m, float(i) * stagger))
+    return out

@@ -49,27 +49,31 @@ def make_paged_decode_step(cfg: ModelConfig, rules: Rules):
     """One decode step against a paged pool: gather the per-slot view via
     the page table, decode, scatter the view back — one fused dispatch.
     ``pool`` leaves are (L, n_pages + 1, page_size, ...); ``table`` is the
-    (n_slots, pages_per_slot) int32 page map."""
+    (n_slots, pages_per_slot) int32 READ page map and ``write_table`` the
+    WRITE map (identical unless prefix sharing masks shared pages to the
+    trash page — the copy-on-write discipline lives entirely in which
+    map each half of the dispatch uses)."""
     from .engine.cache_pool import gather_page_view, scatter_page_view
     base = make_decode_step(cfg, rules)
 
-    def step(params, token, pos, pool, table):
+    def step(params, token, pos, pool, table, write_table):
         view = gather_page_view(pool, table)
         next_token, logits, view = base(params, token, pos, view)
-        pool = scatter_page_view(pool, view, table)
+        pool = scatter_page_view(pool, view, write_table)
         return next_token, logits, pool
     return step
 
 
 def make_paged_decode_scan(cfg: ModelConfig, rules: Rules, k: int):
     """``k`` fused decode steps on the paged plane in one dispatch.  The
-    view is gathered once, the scan carries it (the page map is fixed for
-    the whole stretch — the engine claims every page the k steps will
-    write *before* dispatching), and the pages are written back once."""
+    view is gathered once (via the READ map), the scan carries it (the
+    page maps are fixed for the whole stretch — the engine claims every
+    page the k steps will write *before* dispatching), and the pages are
+    written back once via the WRITE map."""
     from .engine.cache_pool import gather_page_view, scatter_page_view
     base = make_decode_step(cfg, rules)
 
-    def run(params, tok, pos, pool, table):
+    def run(params, tok, pos, pool, table, write_table):
         view = gather_page_view(pool, table)
 
         def body(carry, _):
@@ -79,7 +83,7 @@ def make_paged_decode_scan(cfg: ModelConfig, rules: Rules, k: int):
 
         (tok, pos, view), stack = jax.lax.scan(body, (tok, pos, view),
                                                None, length=k)
-        pool = scatter_page_view(pool, view, table)
+        pool = scatter_page_view(pool, view, write_table)
         return pool, stack, tok, pos
     return run
 

@@ -27,7 +27,8 @@ from repro.models import transformer as T
 from repro.serve import greedy_generate, serve_requests
 from repro.serve.engine import (EngineConfig, PagedCachePool,
                                 PagedTransformerModel, Request, ServingEngine,
-                                SlotCachePool, synthetic_workload)
+                                SlotCachePool, shared_prefix_workload,
+                                synthetic_workload)
 from repro.sharding.rules import Rules
 
 RULES = Rules.null()
@@ -384,3 +385,306 @@ def test_slot_pool_interface_unchanged():
     r.slot = pool.admit(r)
     pool.release(r)
     assert pool.drained and pool.n_allocated == pool.n_freed == 1
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing + copy-on-write
+# ---------------------------------------------------------------------------
+
+TPL = np.arange(100, 108, dtype=np.int32)       # two FULL pages at size 4
+
+
+def _tpl_req(rid, suffix, max_new, template=TPL):
+    return Request(rid=rid,
+                   prompt=np.concatenate(
+                       [template, np.asarray(suffix, np.int32)]),
+                   max_new=max_new)
+
+
+def _shared_pool(**kw):
+    args = dict(n_pages=12, page_size=4, n_slots=4, pages_per_slot=4,
+                share_prefixes=True)
+    args.update(kw)
+    return PagedCachePool(**args)
+
+
+def test_prefix_follower_attaches_after_seal():
+    """Creator claims + registers; after seal_prefilled a same-template
+    follower attaches to the creator's pages (refcount 2) and reserves
+    only its private tail — the shared + private admission math."""
+    pool = _shared_pool()
+    a = _tpl_req(0, [1, 2], max_new=3)          # 10 prompt tokens, 3 pages
+    a.slot = pool.admit(a)
+    assert pool.live_pages(0) == (0, 1, 2)
+    assert pool.reserved_pages == 3
+    pool.seal_prefilled([a])                    # prefill dispatch landed
+    b = _tpl_req(1, [3, 4], max_new=3)
+    assert pool.can_admit(b)
+    b.slot = pool.admit(b)
+    assert pool.shared_pages(1) == (0, 1)       # attached, not copied
+    assert pool.refcount(0) == pool.refcount(1) == 2
+    assert pool.refcount(2) == 1                # a's partial page: private
+    assert pool.live_pages(1) == (0, 1, 3)      # CoW: own partial page
+    assert pool.reserved_pages == 4             # 4 claimed + 0 future
+    assert pool.n_shared_attached == 2 and pool.max_refcount == 2
+    # the creator can retire first: pages survive for the follower
+    pool.release(a)
+    assert pool.refcount(0) == pool.refcount(1) == 1
+    assert pool.refcount(2) == 0                # freed with a
+    pool.release(b)
+    assert pool.drained and pool.n_allocated == pool.n_freed == 4
+    assert len(pool.prefix_index) == 0          # evicted at refcount zero
+
+
+def test_prefix_cow_write_table_masks_shared_pages():
+    """No request ever writes a page with refcount > 1: attached pages
+    AND sealed creator pages are the trash page in write_table, while
+    the read table still maps them — the page-granular copy-on-write."""
+    pool = _shared_pool()
+    a = _tpl_req(0, [1, 2], max_new=3)
+    a.slot = pool.admit(a)
+    # before seal the creator's own prefill must be able to write them
+    np.testing.assert_array_equal(pool.write_table[a.slot, :3], [0, 1, 2])
+    pool.seal_prefilled([a])
+    np.testing.assert_array_equal(
+        pool.write_table[a.slot], [pool.trash_page, pool.trash_page, 2,
+                                   pool.trash_page])
+    b = _tpl_req(1, [3, 4], max_new=3)
+    b.slot = pool.admit(b)
+    np.testing.assert_array_equal(
+        pool.write_table[b.slot], [pool.trash_page, pool.trash_page, 3,
+                                   pool.trash_page])
+    np.testing.assert_array_equal(pool.table[b.slot, :3], [0, 1, 3])
+    # global exclusivity: every non-trash write entry appears exactly once
+    writable = pool.write_table[pool.write_table != pool.trash_page]
+    assert len(writable) == len(set(writable.tolist()))
+    for page in set(writable.tolist()):
+        assert pool.refcount(page) == 1
+
+
+def test_prefix_same_step_co_admits_stay_private():
+    """Two creators of one template admitted BEFORE any seal: the second
+    register loses and claims private copies — nobody attaches to an
+    unwritten page (materialize-after-prefill ordering)."""
+    pool = _shared_pool(n_pages=16)
+    a = _tpl_req(0, [1, 2], max_new=3)
+    b = _tpl_req(1, [3, 4], max_new=3)
+    a.slot = pool.admit(a)
+    b.slot = pool.admit(b)                      # same step: no seal yet
+    assert pool.shared_pages(0) == pool.shared_pages(1) == ()
+    assert all(pool.refcount(p) == 1
+               for p in pool.live_pages(0) + pool.live_pages(1))
+    pool.seal_prefilled([a, b])                 # only a's keys indexed
+    c = _tpl_req(2, [5, 6], max_new=3)
+    c.slot = pool.admit(c)
+    assert pool.shared_pages(2) == pool.live_pages(0)[:2]
+    pool.release(a)                             # c still holds a's pages
+    pool.release(b)
+    pool.release(c)
+    assert pool.drained and pool.n_allocated == pool.n_freed
+
+
+def test_prefix_sharing_off_is_bitwise_private():
+    """share_prefixes=False: write_table always equals table and every
+    page has refcount 1 — the old plane, bit for bit."""
+    pool = PagedCachePool(n_pages=12, page_size=4, n_slots=4,
+                          pages_per_slot=4)
+    a = _tpl_req(0, [1, 2], max_new=3)
+    a.slot = pool.admit(a)
+    pool.seal_prefilled([a])                    # engine calls it anyway
+    b = _tpl_req(1, [3, 4], max_new=3)
+    b.slot = pool.admit(b)
+    np.testing.assert_array_equal(pool.table, pool.write_table)
+    assert pool.n_shared_attached == 0
+    assert pool.reserved_pages == 6             # full private worst case
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), n_pages=st.integers(8, 24),
+       page_size=st.integers(1, 4))
+def test_prefix_refcount_conservation_and_cow_exclusivity(seed, n_pages,
+                                                          page_size):
+    """Mixed shared/private churn with delayed seals: refcounts always
+    equal the live holder count, no page with refcount > 1 is ever
+    writable anywhere, non-trash write entries stay globally exclusive,
+    and the drained pool conserves pages with an empty index (every
+    shared page's refcount hit zero)."""
+    rng = np.random.default_rng(seed)
+    pages_per_slot = max(3, n_pages // 2)
+    pool = PagedCachePool(n_pages=n_pages, page_size=page_size, n_slots=4,
+                          pages_per_slot=pages_per_slot,
+                          share_prefixes=True)
+    templates = [rng.integers(0, 50, 2 * page_size),
+                 rng.integers(0, 50, page_size)]
+    live, pending, next_rid = {}, [], 0
+    for _ in range(80):
+        op = int(rng.integers(0, 4))
+        if op == 0:   # admit: template-headed (shared) or random private
+            if rng.random() < 0.6:
+                t = templates[int(rng.integers(0, len(templates)))]
+                sfx = rng.integers(0, 50, int(rng.integers(1,
+                                                           page_size + 1)))
+                prompt = np.concatenate([t, sfx]).astype(np.int32)
+            else:
+                prompt = rng.integers(
+                    0, 50, int(rng.integers(1, 2 * page_size + 1))
+                ).astype(np.int32)
+            cap = pages_per_slot * page_size - prompt.shape[0]
+            if cap < 1:
+                continue
+            r = Request(rid=next_rid, prompt=prompt,
+                        max_new=int(rng.integers(1, cap + 1)))
+            if pool.can_admit(r):
+                r.slot = pool.admit(r)
+                live[next_rid] = r
+                pending.append(r)
+                next_rid += 1
+        elif op == 1 and pending:   # the prefill dispatch lands
+            pool.seal_prefilled(pending)
+            pending = []
+        elif op == 2 and live:      # grow a live request one token
+            rid = int(rng.choice(list(live)))
+            r = live[rid]
+            if r.n_generated < r.max_new:
+                r.n_generated += 1
+                pool.grow_to(rid, r.prompt_len + r.n_generated - 1)
+        elif op == 3 and live:      # release (kill/retire, maybe unsealed)
+            rid = int(rng.choice(list(live)))
+            r = live.pop(rid)
+            pool.release(r)
+            pending = [p for p in pending if p.rid != rid]
+        # --- invariants at every step --------------------------------
+        holders = {}
+        for rid, r in live.items():
+            for p in pool.live_pages(rid):
+                holders[p] = holders.get(p, 0) + 1
+        for p, n in holders.items():
+            assert pool.refcount(p) == n, (p, n)
+        writable = pool.write_table[pool.write_table != pool.trash_page]
+        assert len(writable) == len(set(writable.tolist()))
+        for p in set(writable.tolist()):
+            assert pool.refcount(p) == 1, "writable page is shared"
+        for rid, r in live.items():
+            row = pool.table[r.slot]
+            claimed = pool.live_pages(rid)
+            np.testing.assert_array_equal(row[:len(claimed)], claimed)
+            assert np.all(row[len(claimed):] == pool.trash_page)
+    for r in list(live.values()):
+        pool.release(r)
+    assert pool.drained
+    assert pool.n_allocated == pool.n_freed
+    assert pool.free_page_count == n_pages
+    assert len(pool.prefix_index) == 0
+    assert all(pool.refcount(p) == 0 for p in range(n_pages))
+
+
+def test_prefix_sharing_fake_engine_scheduling():
+    """Engine loop with sharing on, tensor-free fake: oracle tokens,
+    conservation at drain, and real attach evidence (the fake's decode
+    never touches pages, so this isolates scheduling + allocation)."""
+    ec = EngineConfig(n_slots=3, max_prompt_len=12, max_new_cap=6,
+                      cache_len=18, max_prefill_per_step=2, page_size=4,
+                      n_pages=8, prefix_sharing=True)
+    eng = ServingEngine(FakePagedModel(), ec)
+    tpl = np.arange(60, 68)                      # two full pages
+    want = {}
+    rng = np.random.default_rng(3)
+    for i in range(12):
+        prompt = np.concatenate([tpl, rng.integers(0, 50, 1 + i % 3)])
+        rid = eng.submit(prompt, 2 + i % 4, arrival=float(i % 5))
+        want[rid] = (prompt.astype(np.int32), 2 + i % 4)
+    rep = eng.run()
+    assert set(rep.completed) == set(want)
+    fake = FakePagedModel()
+    for rid, (prompt, max_new) in want.items():
+        np.testing.assert_array_equal(rep.completed[rid],
+                                      fake.oracle(prompt, max_new))
+    assert eng.pool.drained
+    assert eng.pool.n_allocated == eng.pool.n_freed
+    assert eng.pool.n_shared_attached > 0 and eng.pool.max_refcount > 1
+
+
+def test_prefix_sharing_requires_paged_plane():
+    with pytest.raises(ValueError, match="prefix_sharing"):
+        ServingEngine(FakePagedModel(),
+                      EngineConfig(n_slots=2, prefix_sharing=True))
+
+
+def test_prefix_sharing_acceptance_oracle_identity(small_lm):
+    """THE sharing acceptance check: 32 requests over 4 shared templates;
+    the sharing engine is token-identical to greedy_generate AND to the
+    non-sharing paged engine, while peak pages-in-use stays strictly
+    below the private-reservation baseline."""
+    cfg, params = small_lm
+    wl = shared_prefix_workload(32, cfg.vocab_size, n_templates=4,
+                                template_len=16, suffix_lens=(4, 8, 12),
+                                news=(6, 12, 16), stagger=0.5, seed=0)
+    max_len = max(p.shape[0] + m for p, m, _ in wl)
+
+    def run(sharing):
+        ec = EngineConfig(n_slots=8, max_prompt_len=28, max_new_cap=16,
+                          cache_len=max_len, max_prefill_per_step=4,
+                          page_size=4, prefix_sharing=sharing)
+        eng = ServingEngine(PagedTransformerModel(params, cfg, RULES), ec)
+        for p, m, a in wl:
+            eng.submit(p, m, arrival=a)
+        return eng, eng.run()
+
+    eng_off, rep_off = run(False)
+    eng_on, rep_on = run(True)
+    assert len(rep_on.completed) == 32
+    for rid, (prompt, max_new, _) in enumerate(wl):
+        ref = np.asarray(greedy_generate(
+            params, cfg, RULES, np.asarray(prompt)[None],
+            max_new=max_new))[0]
+        np.testing.assert_array_equal(rep_on.completed[rid], ref,
+                                      err_msg=f"vs greedy, rid {rid}")
+        np.testing.assert_array_equal(rep_on.completed[rid],
+                                      rep_off.completed[rid],
+                                      err_msg=f"vs non-sharing, rid {rid}")
+    # capacity evidence: sharing held strictly fewer pages at peak, with
+    # real attaches, and still conserved everything at drain
+    assert eng_on.pool.peak_used_pages < eng_off.pool.peak_used_pages
+    assert eng_on.pool.n_shared_attached > 0
+    assert eng_on.pool.max_refcount > 1
+    assert eng_on.pool.drained
+    assert eng_on.pool.n_allocated == eng_on.pool.n_freed
+    assert len(eng_on.pool.prefix_index) == 0
+
+
+def test_prefix_sharing_fleet_kill_requeue_oracle(small_lm):
+    """Sharing survives the fault domain: a 2-replica sharing fleet with
+    one replica killed mid-flight requeues its work onto the survivor,
+    which re-matches or re-creates the shared pages — outputs stay
+    token-identical to greedy_generate."""
+    from repro.fleet import FaultPlan, FleetController, FleetFrontend, \
+        Replica
+    cfg, params = small_lm
+    rules = RULES
+    wl = shared_prefix_workload(16, cfg.vocab_size, n_templates=2,
+                                template_len=12, suffix_lens=(4, 8),
+                                news=(3, 6, 9), stagger=0.5, seed=1)
+    max_len = max(p.shape[0] + m for p, m, _ in wl)
+    ec = EngineConfig(n_slots=4, max_prompt_len=20, max_new_cap=9,
+                      cache_len=max_len, max_prefill_per_step=2,
+                      page_size=4, prefix_sharing=True)
+    # the paged adapter binds its page pool: one instance per replica
+    reps = [Replica("r0", PagedTransformerModel(params, cfg, rules), ec,
+                    rate=1.0, fault=FaultPlan(kill_at=4)),
+            Replica("r1", PagedTransformerModel(params, cfg, rules), ec,
+                    rate=2.0)]
+    ctrl = FleetController(reps, miss_threshold=3)
+    fe = FleetFrontend(ctrl, max_pending=8)
+    report = fe.serve(wl)
+    assert report.n_completed == 16
+    assert [n for _, n in report.kills] == ["r0"]
+    assert report.requeues >= 1, "the kill must have caught work in flight"
+    for rid, (prompt, max_new, _) in enumerate(wl):
+        ref = np.asarray(greedy_generate(
+            params, cfg, rules, np.asarray(prompt)[None],
+            max_new=max_new))[0]
+        np.testing.assert_array_equal(report.completed[rid], ref,
+                                      err_msg=f"rid {rid}")
+    # the survivor actually shared (requeued + native traffic both hit
+    # its index); the dead pool is abandoned whole, never drained
+    assert ctrl.replicas["r1"].engine.pool.n_shared_attached > 0

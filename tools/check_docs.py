@@ -1,0 +1,111 @@
+"""Docs gate: every relative link and anchor in the markdown docs resolves.
+
+    python tools/check_docs.py [--root .]
+
+Checks ``README.md``, ``ROADMAP.md`` and ``docs/*.md`` for
+``[text](target)`` links:
+
+- relative file targets must exist on disk (external http(s)/mailto
+  links are skipped — CI must not depend on the network);
+- ``#anchor`` fragments (same-file or on a relative target) must match a
+  heading in the target file under GitHub's slugification rules.
+
+Exit status is non-zero with one line per broken link, so the CI step
+fails loudly and the docs can never drift from the tree they describe.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def slugify(heading: str) -> str:
+    """GitHub's markdown heading -> anchor id rule.
+
+    Lowercase; inline-code backticks and markdown emphasis markers drop;
+    anything that is not alphanumeric, space, hyphen or underscore drops;
+    spaces become hyphens.
+    """
+    text = heading.strip().lower()
+    text = text.replace("`", "").replace("*", "")
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: pathlib.Path) -> set[str]:
+    anchors: set[str] = set()
+    in_fence = False
+    for line in path.read_text().splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if m:
+            anchors.add(slugify(m.group(1)))
+    return anchors
+
+
+def doc_files(root: pathlib.Path) -> list[pathlib.Path]:
+    files = [root / "README.md", root / "ROADMAP.md"]
+    files += sorted((root / "docs").glob("*.md"))
+    return [f for f in files if f.is_file()]
+
+
+def check(root: pathlib.Path) -> list[str]:
+    errors: list[str] = []
+    anchor_cache: dict[pathlib.Path, set[str]] = {}
+    for doc in doc_files(root):
+        for lineno, line in enumerate(doc.read_text().splitlines(), 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(EXTERNAL):
+                    continue
+                path_part, _, anchor = target.partition("#")
+                where = f"{doc.relative_to(root)}:{lineno}"
+                if path_part:
+                    dest = (doc.parent / path_part).resolve()
+                    if not dest.exists():
+                        errors.append(f"{where}: missing target {target}")
+                        continue
+                else:
+                    dest = doc
+                if anchor:
+                    if dest.suffix != ".md" or not dest.is_file():
+                        continue
+                    if dest not in anchor_cache:
+                        anchor_cache[dest] = anchors_of(dest)
+                    if anchor not in anchor_cache[dest]:
+                        errors.append(
+                            f"{where}: anchor #{anchor} not found in "
+                            f"{dest.relative_to(root)}")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=".",
+                    help="repo root holding README.md and docs/")
+    args = ap.parse_args()
+    root = pathlib.Path(args.root).resolve()
+    errors = check(root)
+    for err in errors:
+        print(err, file=sys.stderr)
+    n_docs = len(doc_files(root))
+    if errors:
+        print(f"docs gate: {len(errors)} broken link(s) across "
+              f"{n_docs} file(s)", file=sys.stderr)
+        return 1
+    print(f"docs gate: {n_docs} file(s) clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
